@@ -1,0 +1,45 @@
+"""Paper Fig. 2, GraphBLAS+IO mode: one thread receives packets (host
+generation + device transfer = the NIC stand-in), the other builds the
+hypersparse matrices (double-buffered, queue-backed), matching the paper's
+2-thread pipeline. Peak there: 8M pkt/s on 8 ARM cores.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import stream
+from repro.core.window import WindowConfig, process_batch
+from repro.data.packets import traffic_batches
+
+
+def run(window_log2: int = 17, windows_per_batch: int = 64,
+        n_batches: int = 4, thread_pairs=(1, 2, 4),
+        anonymization: str = "feistel"):
+    cfg = WindowConfig(window_log2=window_log2,
+                       windows_per_batch=windows_per_batch,
+                       anonymization=anonymization)
+
+    @jax.jit
+    def process(batch):
+        merged, _, ovf = process_batch(batch, cfg)
+        return merged.nnz
+
+    per_item = windows_per_batch * cfg.window_size
+    rows = []
+    for pairs in thread_pairs:
+        # `pairs` producer/consumer pairs: workload scales with pairs; on
+        # this 1-core host they serialize (see EXPERIMENTS.md)
+        src = traffic_batches(
+            seed=0, n_batches=pairs * n_batches + 1,
+            windows_per_batch=windows_per_batch,
+            window_size=cfg.window_size,
+        )
+        rep = stream.run_stream(src, process, packets_per_item=per_item,
+                                warmup_items=1, queue_depth=2)
+        rows.append((
+            f"fig2_graphblas_io_x{pairs}",
+            rep.elapsed_s / max(rep.batches, 1) * 1e6,
+            f"{rep.packets_per_second:,.0f}_pkt_per_s",
+        ))
+    return rows

@@ -1,0 +1,64 @@
+"""Pallas-kernel microbenches (interpret mode on CPU — relative numbers;
+the BlockSpec tiling is the TPU story, validated structurally)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    out = jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def run():
+    from repro.kernels.segsum import ops as segsum_ops
+    from repro.kernels.segsum import ref as segsum_ref
+    from repro.kernels.spmm_coo import ops as spmm_ops
+    from repro.kernels.spmm_coo.ref import spmm_coo_ref
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    n = 1 << 17
+    seg = jnp.asarray(np.sort(rng.integers(0, n // 4, n)).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    us_k, _ = _time(
+        lambda v, s: segsum_ops.segment_sum_sorted(v, s, num_segments=n),
+        vals, seg,
+    )
+    us_r, _ = _time(
+        lambda v, s: jax.jit(
+            lambda v, s: jax.ops.segment_sum(v, s, num_segments=n)
+        )(v, s),
+        vals, seg,
+    )
+    rows.append(("segsum_pallas_2^17", us_k, f"xla_ref_{us_r:.0f}us"))
+
+    nr = nc = 4096
+    ne = 1 << 16
+    er = jnp.asarray(rng.integers(0, nr, ne).astype(np.int32))
+    ec = jnp.asarray(rng.integers(0, nc, ne).astype(np.int32))
+    ev = jnp.asarray(rng.standard_normal(ne).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((nc, 128)).astype(np.float32))
+    us_k, _ = _time(
+        lambda r, c, v, xx: spmm_ops.spmm_coo(
+            r, c, v, xx, ne, num_rows=nr, strict=False
+        ),
+        er, ec, ev, x,
+    )
+    us_r, _ = _time(
+        lambda r, c, v, xx: jax.jit(
+            lambda r, c, v, xx: spmm_coo_ref(r, c, v, xx, ne, num_rows=nr)
+        )(r, c, v, xx),
+        er, ec, ev, x,
+    )
+    rows.append(("spmm_coo_pallas_64k_edges", us_k, f"xla_ref_{us_r:.0f}us"))
+    return rows

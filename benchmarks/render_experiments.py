@@ -1,0 +1,206 @@
+"""Fill EXPERIMENTS.md placeholders from measured artifacts:
+<!-- FIG2_RESULTS -->, <!-- ROOFLINE_TABLE -->, <!-- PERF_LOG -->.
+
+Run after the dry-run sweep, perf iterations, and benchmarks.run.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).parent.parent
+RESULTS_PERF = Path(__file__).parent / "results_perf"
+
+
+def fig2_section() -> str:
+    """Parse fig2 rows out of bench_output.txt."""
+    path = ROOT / "bench_output.txt"
+    if not path.exists():
+        return "*(run `python -m benchmarks.run` to populate)*"
+    rows = []
+    for line in path.read_text().splitlines():
+        if line.startswith(("fig2_", "window_size_")):
+            name, us, derived = line.split(",", 2)
+            rate = derived.replace("_pkt_per_s", "").strip()
+            rows.append((name, float(us), rate))
+    if not rows:
+        return "*(no fig2 rows in bench_output.txt)*"
+    out = ["| mode | us/window | packets/s |", "|---|---|---|"]
+    for name, us, rate in rows:
+        out.append(f"| {name} | {us:,.0f} | {rate} |")
+    return "\n".join(out)
+
+
+def roofline_section() -> str:
+    from benchmarks import roofline
+
+    recs = roofline.load_records()
+    return roofline.fmt_table(recs, only_ok=False)
+
+
+def _fmt_rec(r) -> str:
+    if r.get("status") != "ok":
+        return f"ERROR {r.get('error', '')[:80]}"
+    rf = r["roofline"]
+    mem = r.get("memory_per_device", {}).get("total_bytes", 0) / 1e9
+    return (f"compute {rf['compute_s']:.3f}s, memory {rf['memory_s']:.3f}s, "
+            f"collective {rf['collective_s']:.3f}s, mem/dev {mem:.1f}GB, "
+            f"dominant {rf['dominant']}")
+
+
+PERF_NARRATIVE = {
+    "qwen2-moe-a2.7b__prefill_32k": [
+        ("hypothesis v1",
+         "the 77.6GB/device comes from XLA replicating the global-sort "
+         "dispatch gather [T*k, d] per device (napkin: 1M tokens x top4 x "
+         "2048 x bf16 = 17GB, several live copies through fwd) AND "
+         "re-running the expert GEMMs redundantly per shard; dispatching "
+         "per-shard in shard_map (x is model-replicated under Megatron TP, "
+         "so routing is shard-local and communication-FREE; combine = one "
+         "psum[t_loc, d]) should cut memory ~8x and compute ~TPx"),
+        ("hypothesis v2",
+         "bf16 attention scores should further cut bytes — REFUTED: the "
+         "extra convert ops around the f32 softmax ADD unfused "
+         "bytes-accessed in the cost model (memory 3.22s -> 3.46s)"),
+        ("lesson",
+         "auto-sharding cannot infer that data-dependent sort/gather "
+         "pipelines are shard-local; the sort-based dispatch (the paper's "
+         "build primitive) must be explicitly placed with shard_map"),
+    ],
+    "phi3.5-moe-42b-a6.6b__train_4k": [
+        ("hypothesis v1",
+         "the 124s collective term is the same dispatch pathology at "
+         "training scale; EP shard_map should collapse it to one psum of "
+         "[t_loc, d] per layer (napkin: 8192 x 4096 x 4B x 2 x 32L x "
+         "8micro x fwd+bwd / 50GB/s ~ a few s) — CONFIRMED beyond the "
+         "napkin: 124.1s -> 0.89s collective, 92.2s -> 11.3s memory, "
+         "17.2s -> 0.84s compute (the baseline redundantly computed "
+         "expert GEMMs per shard)"),
+        ("hypothesis v2",
+         "replicate_kv + bf16 scores on top of EP — REFUTED for training: "
+         "replicated K/V weights need gradient all-reduces over `model` "
+         "larger than the activation resharding they remove (collective "
+         "0.89s -> 1.94s)"),
+    ],
+    "granite-3-8b__train_4k": [
+        ("hypothesis v1",
+         "GQA K/V projections (kv8 < TP16) force a (8,2) head/dim split "
+         "whose resharding SPMD solves by involuntary full "
+         "rematerialization; replicating the small K/V weights should "
+         "remove those collectives — REFUTED for training: K/V weight "
+         "GRADIENTS then all-reduce over `model` (40L x 2 x 4096x1024 f32 "
+         "per micro), collective 3.52s -> 4.59s"),
+        ("hypothesis v2/v3",
+         "dots-saveable remat cuts recompute (compute 1.63s -> 1.42s, "
+         "CONFIRMED) but saves [*, s, s]-scale dots: mem/dev 24 -> 55GB, "
+         "REFUTED as a net win at this batch"),
+        ("hypothesis v4/v5",
+         "sequence-parallel residual constraints shard norm/residual "
+         "bytes by 16 — memory/device 24.0 -> 15.7GB (fits v5e, "
+         "CONFIRMED) but constraint-based SP lets XLA thrash reshards "
+         "(collective 3.5s -> 20.1s, REFUTED as placed); proper Megatron "
+         "SP needs manual RS/AG in shard_map — recorded as the next "
+         "iteration. bf16 grad-reduce cast was absorbed by XLA before "
+         "the reduce (no delta, REFUTED as implemented)"),
+        ("net",
+         "baseline remains the best total for train_4k; the GQA fix that "
+         "sticks is for inference (see prefill note) and the memory fix "
+         "is SP-with-manual-collectives"),
+    ],
+    "granite-3-8b__prefill_32k": [
+        ("hypothesis v6",
+         "replicate_kv helps PREFILL (no weight gradients): memory "
+         "9.28s -> 9.20s, mem/dev 6.2 -> 7.7GB, but collective "
+         "2.56s -> 4.83s — REFUTED: the k/v activations themselves "
+         "(32k seq, replicated) now reshard into the seq-sharded cache "
+         "layout; GQA at TP>kv_heads wants TP<=kv_heads for the KV path, "
+         "i.e. a (kv=8)-way subgroup — mesh-reshape iteration left in "
+         "the backlog"),
+    ],
+    "traffic-matrix__ingest_512w": [
+        ("hypothesis v1 (exact merge)",
+         "baseline distributed analytics psums device-local stats "
+         "(distinct counts = upper bound); routing entries to row-block "
+         "owners via all_to_all (2D decomposition of the 2^32 space) "
+         "makes distinct-source/link counts EXACT for ~3MB/device of "
+         "all_to_all traffic. CONFIRMED exact (test vs direct build) at "
+         "47x the (microscopic) baseline memory term: 49us -> 2.3ms per "
+         "67M-packet step — 512-chip step lower bound still ~29 Gpkt/s"),
+        ("hypothesis v2 (count-build)",
+         "counting builds don't need a value payload: run lengths fall "
+         "out of run-head positions, dropping one [2^17] gather + the "
+         "segment reduction from the build hot loop; expect ~10-20% off "
+         "the memory term of the build stage"),
+    ],
+    "pna__ogb_products": [
+        ("hypothesis v1",
+         "the 86GB/device comes from REPLICATED 2.45M-node activations "
+         "(4 aggregators x 3 scalers x d75 f32 intermediates); sharding "
+         "node arrays over `data` divides those bytes by 16 at the cost "
+         "of all-gathers for the edge-wise gathers h[src]"),
+    ],
+}
+
+
+def perf_section() -> str:
+    if not RESULTS_PERF.exists():
+        return "*(run `python -m benchmarks.perf_iterations`)*"
+    base = {}
+    for p in (Path(__file__).parent / "results").glob("*.json"):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            base[(r["arch"], r["shape"], r["mesh"])] = r
+    groups: dict = {}
+    for p in sorted(RESULTS_PERF.glob("*.json")):
+        r = json.loads(p.read_text())
+        groups.setdefault((r["arch"], r["shape"], r["mesh"]), []).append(r)
+
+    out = []
+    for (arch, shape, mesh), variants in groups.items():
+        out.append(f"### {arch} × {shape} [{mesh}]\n")
+        for label, text in PERF_NARRATIVE.get(f"{arch}__{shape}", []):
+            out.append(f"*{label}*: {text}\n")
+        b = base.get((arch, shape, mesh))
+        if b:
+            out.append(f"- **baseline (paper-faithful)**: {_fmt_rec(b)}")
+        for v in variants:
+            out.append(f"- **{v.get('variant')}**: {_fmt_rec(v)}")
+        # verdicts
+        if b and variants:
+            ok_vs = [v for v in variants if v.get("status") == "ok"]
+            if ok_vs:
+                best = min(
+                    ok_vs,
+                    key=lambda v: v["roofline"]["step_s_lower_bound"],
+                )
+                b0 = b["roofline"]["step_s_lower_bound"]
+                b1 = best["roofline"]["step_s_lower_bound"]
+                if b1 < b0:
+                    out.append(
+                        f"- **verdict**: {best['variant']} CONFIRMED — "
+                        f"step lower bound {b0:.3f}s -> {b1:.3f}s "
+                        f"({b0/b1:.1f}x)"
+                    )
+                else:
+                    out.append(
+                        "- **verdict**: no variant beat the baseline "
+                        "lower bound — hypotheses REFUTED (see notes)"
+                    )
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    path = ROOT / "EXPERIMENTS.md"
+    text = path.read_text()
+    text = text.replace("<!-- FIG2_RESULTS -->", fig2_section())
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_section())
+    text = text.replace("<!-- PERF_LOG -->", perf_section())
+    path.write_text(text)
+    print("EXPERIMENTS.md rendered")
+
+
+if __name__ == "__main__":
+    main()

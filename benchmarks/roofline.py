@@ -1,0 +1,79 @@
+"""Roofline table: reads the dry-run JSON cache and renders EXPERIMENTS.md
+§Roofline rows (all three terms, dominant bottleneck, MODEL_FLOPS ratio).
+
+Run after  PYTHONPATH=src python -m repro.launch.dryrun .
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results"
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_table(recs, *, only_ok=True) -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | model/HLO flops | mem/dev GB | compile_s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            if not only_ok:
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                    f"ERROR: {r.get('error', '?')[:60]} | | | | | | |"
+                )
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory_per_device", {}).get("total_bytes", 0) / 1e9
+        ratio = r.get("model_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rf['compute_s']:.4g} | {rf['memory_s']:.4g} | "
+            f"{rf['collective_s']:.4g} | **{rf['dominant']}** | "
+            f"{ratio:.3f} | {mem:.2f} | {r.get('compile_s', 0):.0f} |"
+            if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rf['compute_s']:.4g} | {rf['memory_s']:.4g} | "
+            f"{rf['collective_s']:.4g} | **{rf['dominant']}** | n/a | "
+            f"{mem:.2f} | {r.get('compile_s', 0):.0f} |"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    """benchmarks.run hook: one row per completed dry-run cell."""
+    rows = []
+    for r in load_records():
+        if r.get("status") != "ok":
+            rows.append((
+                f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}",
+                -1.0, "ERROR",
+            ))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}",
+            rf["step_s_lower_bound"] * 1e6,
+            rf["dominant"],
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(fmt_table(recs, only_ok=False))
+    errs = [r for r in recs if r.get("status") != "ok"]
+    print(f"\n{len(recs) - len(errs)} ok / {len(errs)} errors")

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure + kernel and
+roofline benches. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small windows: fast CI-sized run")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        fig2_graphblas_io,
+        fig2_graphblas_only,
+        kernels_bench,
+        roofline,
+        window_size_sweep,
+    )
+
+    quick = dict(window_log2=12, windows_per_batch=8, n_batches=2)
+    suites = {
+        "fig2_graphblas_only": lambda: fig2_graphblas_only.run(
+            **(dict(quick, instances=(1, 2)) if args.quick else {})
+        ),
+        "fig2_graphblas_io": lambda: fig2_graphblas_io.run(
+            **(dict(quick, thread_pairs=(1, 2)) if args.quick else {})
+        ),
+        "window_size_sweep": lambda: window_size_sweep.run(
+            **(dict(window_log2s=(10, 12), n_batches=2) if args.quick else {})
+        ),
+        "kernels": kernels_bench.run,
+        "roofline": roofline.run,
+    }
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row, us, derived in fn():
+                print(f"{row},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # keep the harness going
+            failed += 1
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

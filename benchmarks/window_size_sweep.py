@@ -1,0 +1,50 @@
+"""The paper's OpenMP null-result, reproduced structurally: the per-window
+work at 2^17 entries is too small to parallelize inside one build; rate
+scales with window size until per-window overhead amortizes.
+
+Sweeps window_log2 and reports pkt/s — the knee of this curve is the
+"enough work per matrix" point; below it, launch overhead dominates (the
+JAX analogue of OpenMP overhead swamping a 2^17-entry build).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.window import WindowConfig, process_batch
+from repro.data.packets import traffic_batches
+
+
+def run(window_log2s=(13, 15, 17), windows_per_batch: int = 8,
+        n_batches: int = 3):
+    rows = []
+    for wl in window_log2s:
+        cfg = WindowConfig(window_log2=wl, windows_per_batch=windows_per_batch)
+
+        @jax.jit
+        def process(batch, cfg=cfg):
+            merged, _, ovf = process_batch(batch, cfg)
+            return merged.nnz
+
+        warm = next(iter(traffic_batches(
+            seed=9, n_batches=1, windows_per_batch=windows_per_batch,
+            window_size=cfg.window_size)))
+        jax.block_until_ready(process(warm))
+        t0 = time.perf_counter()
+        pkts = 0
+        for batch in traffic_batches(
+            seed=1, n_batches=n_batches,
+            windows_per_batch=windows_per_batch,
+            window_size=cfg.window_size,
+        ):
+            jax.block_until_ready(process(batch))
+            pkts += batch.size // 2
+        dt = time.perf_counter() - t0
+        rows.append((
+            f"window_size_2^{wl}",
+            dt / (n_batches * windows_per_batch) * 1e6,
+            f"{pkts/dt:,.0f}_pkt_per_s",
+        ))
+    return rows

@@ -1,0 +1,35 @@
+"""GNN example: train GCN and GAT on a synthetic Cora-sized graph using the
+GraphBLAS segment substrate (message passing == SpMM over the adjacency).
+
+    PYTHONPATH=src python examples/gnn_cora.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import gat_cora, gcn_cora
+from repro.configs.base import make_gnn_train_step
+from repro.data.graphs import random_graph
+from repro.models.gnn import init_gnn
+
+graph = random_graph(
+    0, n_nodes=512, n_edges=2000, d_feat=64, n_classes=7,
+    pad_edges=8192, with_coords=False,
+)
+batch = {k: jnp.asarray(v) for k, v in graph.batch_dict().items()}
+shape = dict(d_feat=64, n_classes=7)
+
+for mod in (gcn_cora, gat_cora):
+    cfg = mod.make_cfg(shape)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    step, opt = make_gnn_train_step(cfg, "node", learning_rate=5e-3)
+    state = {"params": params, "opt": opt.init(params)}
+    step = jax.jit(step)
+    accs = []
+    for i in range(60):
+        state, metrics = step(state, batch)
+        accs.append(float(metrics["accuracy"]))
+    print(f"{mod.ARCH_ID:10s} acc {accs[0]:.2f} -> {accs[-1]:.2f} "
+          f"(loss {float(metrics['loss']):.3f})")
+    assert accs[-1] > accs[0], "training did not improve accuracy"

@@ -1,0 +1,34 @@
+"""The paper's experiment, end to end: GraphBLAS-only vs GraphBLAS+IO
+throughput (Fig. 2), on this host.
+
+    PYTHONPATH=src python examples/traffic_ingest.py [--full]
+
+--full uses the paper's exact geometry (2^17-packet windows, 64 windows x 8
+batches); default is a fast reduced run.
+"""
+
+import argparse
+
+from repro.launch.ingest import run_paper_mode
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true")
+args = ap.parse_args()
+
+geom = (dict(window_log2=17, windows_per_batch=64, n_batches=8)
+        if args.full else dict(window_log2=13, windows_per_batch=8,
+                               n_batches=3))
+
+print(f"geometry: 2^{geom['window_log2']} pkts/window x "
+      f"{geom['windows_per_batch']} windows x {geom['n_batches']} batches")
+
+rep_b = run_paper_mode("blocking", **geom)
+print(f"GraphBLAS only : {rep_b.packets_per_second:>12,.0f} pkt/s "
+      f"({rep_b.packets:,} pkts in {rep_b.elapsed_s:.2f}s)")
+
+rep_s = run_paper_mode("stream", **geom)
+print(f"GraphBLAS+IO   : {rep_s.packets_per_second:>12,.0f} pkt/s "
+      f"({rep_s.packets:,} pkts in {rep_s.elapsed_s:.2f}s)")
+
+print("\npaper (8 ARM cores): 18M pkt/s GraphBLAS-only, 8M pkt/s +IO;")
+print("see EXPERIMENTS.md for the per-core comparison against this host.")

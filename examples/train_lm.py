@@ -1,0 +1,26 @@
+"""End-to-end driver: train a reduced LM for a few hundred steps on CPU,
+with checkpointing — kill it mid-run and rerun to see the restart path.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--arch", default="llama3.2-1b")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_example")
+args = ap.parse_args()
+
+train_main([
+    "--arch", args.arch,
+    "--preset", "smoke",          # reduced width/depth, same code paths
+    "--steps", str(args.steps),
+    "--global-batch", "8",
+    "--seq-len", "128",
+    "--ckpt-dir", args.ckpt_dir,
+    "--ckpt-every", "50",
+    "--log-every", "10",
+])

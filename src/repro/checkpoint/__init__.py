@@ -1,0 +1,7 @@
+"""Fault-tolerant checkpointing: serialization + atomic keep-N manager."""
+
+from repro.checkpoint.serialization import (  # noqa: F401
+    load_pytree,
+    save_pytree,
+)
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,51 @@
+"""Architecture registry: the 10 assigned archs + the paper's own workload."""
+
+from repro.configs import (
+    egnn,
+    gat_cora,
+    gcn_cora,
+    granite_3_8b,
+    llama3_2_1b,
+    phi3_5_moe,
+    pna,
+    qwen1_5_0_5b,
+    qwen2_moe_a2_7b,
+    traffic_matrix,
+    two_tower,
+)
+
+ARCHS = {
+    m.ARCH_ID: m
+    for m in (
+        llama3_2_1b,
+        granite_3_8b,
+        qwen1_5_0_5b,
+        qwen2_moe_a2_7b,
+        phi3_5_moe,
+        gat_cora,
+        gcn_cora,
+        egnn,
+        pna,
+        two_tower,
+        traffic_matrix,
+    )
+}
+
+ASSIGNED = [a for a in ARCHS if a != "traffic-matrix"]
+
+
+def get(arch_id: str):
+    if arch_id not in ARCHS:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}"
+        )
+    return ARCHS[arch_id]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch, shape) pair in the assignment + paper cells."""
+    out = []
+    for arch_id, mod in ARCHS.items():
+        for shape in mod.SHAPES:
+            out.append((arch_id, shape))
+    return out

@@ -1,0 +1,547 @@
+"""Config system: arch registry, dry-run cell builders, smoke configs.
+
+Every assigned architecture is a module exposing:
+  ARCH_ID, FAMILY, SHAPES (the assignment's input-shape set),
+  build_cell(shape_name, mesh) -> Cell   (abstract args for lower/compile)
+  smoke() -> SmokeCase                   (tiny concrete fwd/train step)
+
+A ``Cell`` is everything ``launch.dryrun`` needs: the step callable, abstract
+arguments (ShapeDtypeStruct — nothing is allocated), and the in/out
+PartitionSpecs for the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as shrules
+from repro.models import transformer as tfm
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.optim import adamw
+from repro.optim.grad import clip_by_global_norm
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable                      # step function to lower
+    args: tuple                       # pytree of ShapeDtypeStruct
+    in_specs: tuple                   # matching PartitionSpecs
+    out_specs: Any = None             # None = auto
+    kind: str = "train"               # train | prefill | decode | serve
+    note: str = ""
+    model_flops_per_step: float = 0.0  # 6*N*D (dense) / 6*N_active*D (MoE)
+    # costing cells lower a reduced-batch unrolled variant; multiply its
+    # HLO flops/bytes/collectives by cost_scale to get full-step numbers
+    cost_scale: float = 1.0
+
+
+@dataclasses.dataclass
+class SmokeCase:
+    arch_id: str
+    fn: Callable          # (state_or_params, batch) -> outputs
+    state: Any            # concrete small state
+    batch: Any            # concrete small batch
+    check: Callable       # outputs -> None (asserts)
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def abstract_tree(f, *args, **kwargs):
+    """jax.eval_shape -> pytree of ShapeDtypeStruct (no allocation)."""
+    return jax.eval_shape(functools.partial(f, **kwargs), *args)
+
+
+# ---------------------------------------------------------------------------
+# generic transformer cells
+# ---------------------------------------------------------------------------
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+# microbatch counts for train_4k, tuned to keep remat boundaries in HBM
+LM_MICROBATCH = {"default": 4}
+
+
+def make_lm_train_step(cfg: tfm.TransformerConfig, n_micro: int,
+                       learning_rate: float = 3e-4,
+                       grad_reduce_dtype: str | None = None):
+    """Microbatched, gradient-accumulated, clipped AdamW train step.
+
+    grad_reduce_dtype='bfloat16' casts the locally-accumulated (f32)
+    gradients before the cross-data all-reduce, halving the DP collective
+    bytes (standard practice; accumulation itself stays f32).
+    """
+    opt = adamw()
+
+    def loss_fn(params, tokens, labels):
+        return tfm.lm_loss(params, tokens, labels, cfg)
+
+    def step(state, batch):
+        params, opt_state = state["params"], state["opt"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        b = tokens.shape[0]
+        mb = b // n_micro
+        tkm = tokens.reshape(n_micro, mb, -1)
+        lbm = labels.reshape(n_micro, mb, -1)
+
+        def micro(acc, xs):
+            tk, lb = xs
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, tk, lb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
+            return acc, loss
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        grads, losses = jax.lax.scan(
+            micro, zeros, (tkm, lbm),
+            unroll=n_micro if cfg.unroll_scans else 1,
+        )
+        if grad_reduce_dtype is not None:
+            rd = jnp.dtype(grad_reduce_dtype)
+            grads = jax.tree.map(
+                lambda g: g.astype(rd).astype(jnp.float32), grads
+            )
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = opt.update(grads, params, opt_state,
+                                         jnp.float32(learning_rate))
+        return (
+            {"params": new_params, "opt": new_opt},
+            {"loss": losses.mean(), "grad_norm": gnorm},
+        )
+
+    return step, opt
+
+
+def _lm_state_abstract(cfg: tfm.TransformerConfig):
+    opt = adamw()
+    key = jax.random.PRNGKey(0)
+    params = abstract_tree(tfm.init_transformer, key, cfg=cfg)
+    opt_state = jax.eval_shape(opt.init, params)
+    return {"params": params, "opt": opt_state}
+
+
+def _lm_state_specs(cfg, state, mesh, zero1=True, replicate_kv=False):
+    pspecs = shrules.param_specs(state["params"], "transformer",
+                                 replicate_kv=replicate_kv)
+    ospecs = shrules.opt_state_specs(
+        pspecs, state["opt"], zero1=zero1, mesh=mesh, params=state["params"]
+    )
+    return {"params": pspecs, "opt": ospecs}
+
+
+def lm_build_cell(cfg: tfm.TransformerConfig, shape_name: str, mesh: Mesh,
+                  *, mb_per_device: int = 2, costing: bool = False,
+                  costing_layers: int | None = None,
+                  replicate_kv: bool = False,
+                  grad_reduce_dtype: str | None = None) -> Cell:
+    sh = LM_SHAPES[shape_name]
+    seq, gb = sh["seq_len"], sh["global_batch"]
+    kind = sh["kind"]
+    tokens_per_step = gb * seq
+    # microbatch count chosen so the per-device microbatch (and with it the
+    # remat-boundary memory) is constant across mesh sizes
+    dp_size = 1
+    for a in shrules.dp_axes(mesh):
+        dp_size *= mesh.shape[a]
+    n_micro = max(1, gb // (dp_size * mb_per_device))
+    cost_scale = 1.0
+    if costing:
+        # reduced-batch (one microbatch), fully unrolled variant: XLA costs
+        # while bodies once, so the costing program must have no loops.
+        # costing_layers (1 or 2) lets the runner lower two shallow
+        # variants and extrapolate affinely in depth — per-step cost is
+        # exactly a + b*L for a homogeneous layer stack, and compile time
+        # stays O(1) in depth (an unrolled 32-layer MoE does not compile
+        # in reasonable time at 512 devices).
+        cfg = dataclasses.replace(cfg, unroll_scans=True)
+        if costing_layers is not None:
+            cfg = dataclasses.replace(cfg, n_layers=costing_layers)
+        if kind == "train":
+            gb = gb // n_micro
+            cost_scale = float(n_micro)
+            n_micro = 1
+    dp = shrules.batch_axes_for(gb, mesh)
+
+    if kind == "train":
+        step, _ = make_lm_train_step(cfg, n_micro,
+                                     grad_reduce_dtype=grad_reduce_dtype)
+        state = _lm_state_abstract(cfg)
+        state_specs = _lm_state_specs(cfg, state, mesh,
+                                      replicate_kv=replicate_kv)
+        batch = {
+            "tokens": sds((gb, seq), jnp.int32),
+            "labels": sds((gb, seq), jnp.int32),
+        }
+        batch_specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+        flops = 6.0 * cfg.active_param_count() * tokens_per_step
+        return Cell(
+            arch_id=cfg.name, shape_name=shape_name, fn=step,
+            args=(state, batch), in_specs=(state_specs, batch_specs),
+            out_specs=(state_specs, {"loss": P(), "grad_norm": P()}),
+            kind=kind, model_flops_per_step=flops, cost_scale=cost_scale,
+        )
+
+    params = abstract_tree(
+        tfm.init_transformer, jax.random.PRNGKey(0), cfg=cfg
+    )
+    pspecs = shrules.param_specs(params, "transformer",
+                                 replicate_kv=replicate_kv)
+
+    if kind == "prefill":
+        def prefill_fn(params, tokens):
+            return tfm.prefill(params, tokens, cfg)
+
+        batch = sds((gb, seq), jnp.int32)
+        cache_spec = P(None, dp, "model", None, None)
+        out_specs = (
+            P(dp, "model"),                    # logits (vocab-sharded)
+            {"k": cache_spec, "v": cache_spec},
+            P(),                                # cache_len
+        )
+        # prefill = forward only: 2*N*D
+        flops = 2.0 * cfg.active_param_count() * tokens_per_step
+        return Cell(
+            arch_id=cfg.name, shape_name=shape_name, fn=prefill_fn,
+            args=(params, batch), in_specs=(pspecs, P(dp, None)),
+            out_specs=out_specs, kind=kind, model_flops_per_step=flops,
+        )
+
+    # decode kinds: one new token against a seq_len cache
+    def decode_fn(params, token, cache, cache_len):
+        return tfm.decode_step(params, token, cache, cache_len, cfg)
+
+    cache_shape = (cfg.n_layers, gb, seq, cfg.n_kv_heads, cfg.d_head)
+    cache = {
+        "k": sds(cache_shape, cfg.compute_dtype),
+        "v": sds(cache_shape, cfg.compute_dtype),
+    }
+    cache_spec = P(None, dp, "model", None, None)
+    cache_specs = {"k": cache_spec, "v": cache_spec}
+    token = sds((gb, 1), jnp.int32)
+    # decode flops: 2*N_active per token (+ attention reads over cache)
+    flops = 2.0 * cfg.active_param_count() * gb
+    return Cell(
+        arch_id=cfg.name, shape_name=shape_name, fn=decode_fn,
+        args=(params, token, cache, sds((), jnp.int32)),
+        in_specs=(pspecs, P(dp, None), cache_specs, P()),
+        out_specs=(P(dp, None), cache_specs),
+        kind="decode", model_flops_per_step=flops,
+        note="full-attention arch: 500k runs decode (linear/step), "
+             "not quadratic prefill" if shape_name == "long_500k" else "",
+    )
+
+
+def lm_smoke(cfg_small: tfm.TransformerConfig, arch_id: str) -> SmokeCase:
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_transformer(key, cfg_small)
+    step, opt = make_lm_train_step(cfg_small, n_micro=2)
+    state = {"params": params, "opt": opt.init(params)}
+    tokens = jax.random.randint(key, (4, 32), 0, cfg_small.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    def check(out):
+        import numpy as np
+
+        new_state, metrics = out
+        assert np.isfinite(float(metrics["loss"])), metrics
+        assert np.isfinite(float(metrics["grad_norm"]))
+        leaf = jax.tree.leaves(new_state["params"])[0]
+        assert np.isfinite(np.asarray(leaf)).all()
+
+    return SmokeCase(arch_id, step, state, batch, check)
+
+
+# ---------------------------------------------------------------------------
+# generic GNN cells
+# ---------------------------------------------------------------------------
+def _pad512(n: int) -> int:
+    return -(-n // 512) * 512
+
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(
+        n_nodes=2708, n_edges=10556, d_feat=1433, n_classes=7,
+        task="node", pad_edges=_pad512(10556),
+    ),
+    "minibatch_lg": dict(
+        # sampled subgraph for batch_nodes=1024, fanout 15-10 over the
+        # 233k-node / 115M-edge graph (Reddit-scale): layered node counts
+        n_nodes=1024 + 1024 * 15 + 1024 * 150, d_feat=602, n_classes=41,
+        n_edges=1024 * 15 + 15360 * 10, task="node_targets",
+        n_targets=1024, pad_edges=_pad512(1024 * 15 + 15360 * 10),
+    ),
+    "ogb_products": dict(
+        n_nodes=2_449_029, n_edges=61_859_140, d_feat=100, n_classes=47,
+        task="node", pad_edges=_pad512(61_859_140),
+    ),
+    "molecule": dict(
+        n_nodes=128 * 30, n_edges=128 * 64, d_feat=32, n_classes=8,
+        task="graph", n_graphs=128, pad_edges=_pad512(128 * 64),
+    ),
+}
+
+
+def make_gnn_train_step(cfg: gnn_mod.GNNConfig, task: str,
+                        learning_rate: float = 1e-3):
+    opt = adamw(weight_decay=0.0)
+
+    def loss_fn(params, batch):
+        if task == "graph":
+            return gnn_mod.graph_classification_loss(params, batch, cfg)
+        return gnn_mod.node_classification_loss(params, batch, cfg)
+
+    def step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch
+        )
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = opt.update(
+            grads, state["params"], state["opt"], jnp.float32(learning_rate)
+        )
+        return {"params": new_params, "opt": new_opt}, {
+            **metrics, "grad_norm": gnorm
+        }
+
+    return step, opt
+
+
+def gnn_batch_abstract(shape: dict, with_coords: bool):
+    n, e = shape["n_nodes"], shape["pad_edges"]
+    batch = {
+        "x": sds((n, shape["d_feat"]), jnp.float32),
+        "edge_src": sds((e,), jnp.int32),
+        "edge_dst": sds((e,), jnp.int32),
+        "n_nodes": sds((), jnp.int32),
+        "n_edges": sds((), jnp.int32),
+        "labels": sds((n,), jnp.int32),
+        "label_mask": sds((n,), jnp.int32),
+    }
+    if with_coords:
+        batch["coords"] = sds((n, 3), jnp.float32)
+    if shape["task"] == "graph":
+        batch["graph_id"] = sds((n,), jnp.int32)
+        batch["graph_labels"] = sds((shape["n_graphs"],), jnp.int32)
+    return batch
+
+
+def gnn_batch_specs(batch: dict, mesh: Mesh):
+    """Edges sharded across the whole machine; node arrays replicated."""
+    edge_axes = shrules.all_axes(mesh)
+    specs = {k: P() for k in batch}
+    specs["edge_src"] = P(edge_axes)
+    specs["edge_dst"] = P(edge_axes)
+    return specs
+
+
+def gnn_build_cell(make_cfg, arch_id: str, shape_name: str,
+                   mesh: Mesh) -> Cell:
+    shape = GNN_SHAPES[shape_name]
+    cfg = make_cfg(shape)
+    task = shape["task"]
+    if task == "node_targets":
+        task = "node"  # loss masks to targets via label_mask
+    step, opt = make_gnn_train_step(cfg, task)
+    key = jax.random.PRNGKey(0)
+    params = abstract_tree(gnn_mod.init_gnn, key, cfg=cfg)
+    opt_state = jax.eval_shape(opt.init, params)
+    state = {"params": params, "opt": opt_state}
+    pspecs = shrules.param_specs(params, "gnn")
+    ospecs = shrules.opt_state_specs(pspecs, state["opt"])
+    batch = gnn_batch_abstract(shape, with_coords=cfg.arch == "egnn")
+    bspecs = gnn_batch_specs(batch, mesh)
+    # per-edge gather-multiply-scatter ~ 2 flops per feature per layer
+    flops = 2.0 * shape["n_edges"] * cfg.d_hidden * cfg.n_layers * 3
+    return Cell(
+        arch_id=arch_id, shape_name=shape_name, fn=step,
+        args=(state, batch),
+        in_specs=({"params": pspecs, "opt": ospecs}, bspecs),
+        kind="train", model_flops_per_step=flops,
+    )
+
+
+def gnn_smoke(make_cfg, arch_id: str) -> SmokeCase:
+    from repro.data.graphs import molecule_batch, random_graph
+
+    shape = dict(n_nodes=64, n_edges=256, d_feat=16, n_classes=4,
+                 task="node", pad_edges=512)
+    cfg = make_cfg(shape)
+    g = random_graph(0, n_nodes=64, n_edges=200, d_feat=16, n_classes=4,
+                     pad_edges=512, with_coords=True)
+    batch = {k: jnp.asarray(v) for k, v in g.batch_dict().items()}
+    step, opt = make_gnn_train_step(cfg, "node")
+    params = gnn_mod.init_gnn(jax.random.PRNGKey(0), cfg)
+    state = {"params": params, "opt": opt.init(params)}
+
+    def check(out):
+        import numpy as np
+
+        _, metrics = out
+        assert np.isfinite(float(metrics["loss"]))
+
+    return SmokeCase(arch_id, step, state, batch, check)
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_candidates=1_000_000,
+                           pad_candidates=_pad512(1_000_000)),
+}
+
+
+def make_recsys_train_step(cfg: rec_mod.TwoTowerConfig,
+                           learning_rate: float = 1e-3):
+    opt = adamw(weight_decay=0.0)
+
+    def step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: rec_mod.in_batch_softmax_loss(p, batch, cfg),
+            has_aux=True,
+        )(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = opt.update(
+            grads, state["params"], state["opt"], jnp.float32(learning_rate)
+        )
+        return {"params": new_params, "opt": new_opt}, {
+            **metrics, "grad_norm": gnorm
+        }
+
+    return step, opt
+
+
+def _recsys_batch_abstract(cfg: rec_mod.TwoTowerConfig, b: int,
+                           with_items=True, with_logq=False):
+    batch = {
+        "user_fields": sds((b, cfg.n_user_fields), jnp.int32),
+        "history": sds((b, cfg.history_len), jnp.int32),
+        "history_len": sds((b,), jnp.int32),
+    }
+    if with_items:
+        batch["item_fields"] = sds((b, cfg.n_item_fields), jnp.int32)
+    if with_logq:
+        batch["log_q"] = sds((b,), jnp.float32)
+    return batch
+
+
+def recsys_build_cell(cfg: rec_mod.TwoTowerConfig, arch_id: str,
+                      shape_name: str, mesh: Mesh) -> Cell:
+    shape = RECSYS_SHAPES[shape_name]
+    kind = shape["kind"]
+    b = shape["batch"]
+    dp = shrules.batch_axes_for(b, mesh)
+    key = jax.random.PRNGKey(0)
+    params = abstract_tree(rec_mod.init_two_tower, key, cfg=cfg)
+    pspecs = shrules.param_specs(params, "recsys")
+    d = cfg.embed_dim
+    mlp_flops = 2 * sum(
+        a * c for a, c in zip(
+            (cfg.user_tower_in,) + cfg.tower_mlp[:-1], cfg.tower_mlp
+        )
+    ) + 2 * sum(
+        a * c for a, c in zip(
+            (cfg.item_tower_in,) + cfg.tower_mlp[:-1], cfg.tower_mlp
+        )
+    )
+
+    if kind == "train":
+        step, opt = make_recsys_train_step(cfg)
+        opt_state = jax.eval_shape(opt.init, params)
+        state = {"params": params, "opt": opt_state}
+        ospecs = shrules.opt_state_specs(pspecs, opt_state)
+        batch = _recsys_batch_abstract(cfg, b, with_logq=True)
+        bspecs = {k: P(dp, *([None] * (len(v.shape) - 1)))
+                  for k, v in batch.items()}
+        flops = 3 * (b * mlp_flops + 2 * b * b * cfg.tower_mlp[-1])
+        return Cell(
+            arch_id=arch_id, shape_name=shape_name, fn=step,
+            args=(state, batch),
+            in_specs=({"params": pspecs, "opt": ospecs}, bspecs),
+            kind="train", model_flops_per_step=flops,
+        )
+
+    if kind == "serve":
+        def serve_fn(params, batch):
+            return rec_mod.score_pairs(params, batch, cfg)
+
+        batch = _recsys_batch_abstract(cfg, b)
+        bspecs = {k: P(dp, *([None] * (len(v.shape) - 1)))
+                  for k, v in batch.items()}
+        flops = b * mlp_flops
+        return Cell(
+            arch_id=arch_id, shape_name=shape_name, fn=serve_fn,
+            args=(params, batch), in_specs=(pspecs, bspecs),
+            out_specs=P(dp), kind="serve", model_flops_per_step=flops,
+        )
+
+    # retrieval: 1 query vs 1M candidates
+    nc = shape["pad_candidates"]
+    cand_axes = shrules.all_axes(mesh)
+
+    def retrieval_fn(params, batch, cand_fields):
+        return rec_mod.retrieve_topk(params, batch, cand_fields, cfg, k=128)
+
+    batch = _recsys_batch_abstract(cfg, 1, with_items=False)
+    bspecs = {k: P() for k in batch}
+    cands = sds((nc, cfg.n_item_fields), jnp.int32)
+    flops = nc * (mlp_flops / 2 + 2 * cfg.tower_mlp[-1])
+    return Cell(
+        arch_id=arch_id, shape_name=shape_name, fn=retrieval_fn,
+        args=(params, batch, cands),
+        in_specs=(pspecs, bspecs, P(cand_axes, None)),
+        out_specs=None, kind="retrieval",
+        model_flops_per_step=flops,
+    )
+
+
+def recsys_smoke(cfg_small: rec_mod.TwoTowerConfig,
+                 arch_id: str) -> SmokeCase:
+    key = jax.random.PRNGKey(0)
+    params = rec_mod.init_two_tower(key, cfg_small)
+    step, opt = make_recsys_train_step(cfg_small)
+    state = {"params": params, "opt": opt.init(params)}
+    b = 16
+    ks = jax.random.split(key, 4)
+    batch = {
+        "user_fields": jax.random.randint(
+            ks[0], (b, cfg_small.n_user_fields), 0, cfg_small.user_vocab
+        ),
+        "history": jax.random.randint(
+            ks[1], (b, cfg_small.history_len), 0, cfg_small.item_vocab
+        ),
+        "history_len": jnp.full((b,), cfg_small.history_len, jnp.int32),
+        "item_fields": jax.random.randint(
+            ks[2], (b, cfg_small.n_item_fields), 0, cfg_small.item_vocab
+        ),
+        "log_q": jnp.zeros((b,), jnp.float32),
+    }
+
+    def check(out):
+        import numpy as np
+
+        _, metrics = out
+        assert np.isfinite(float(metrics["loss"]))
+
+    return SmokeCase(arch_id, step, state, batch, check)

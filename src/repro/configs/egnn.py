@@ -1,0 +1,24 @@
+"""egnn: 4 layers, d_hidden=64, E(n)-equivariant. [arXiv:2102.09844]"""
+
+from repro.configs import base
+from repro.models.gnn import GNNConfig
+
+ARCH_ID = "egnn"
+FAMILY = "gnn"
+SHAPES = tuple(base.GNN_SHAPES)
+
+
+def make_cfg(shape: dict) -> GNNConfig:
+    return GNNConfig(
+        name=ARCH_ID, arch="egnn", n_layers=4, d_in=shape["d_feat"],
+        d_hidden=64, n_classes=shape["n_classes"],
+    )
+
+
+def build_cell(shape_name, mesh, costing=False):
+    del costing  # no scans: the production program is the costing program
+    return base.gnn_build_cell(make_cfg, ARCH_ID, shape_name, mesh)
+
+
+def smoke():
+    return base.gnn_smoke(make_cfg, ARCH_ID)

@@ -1,0 +1,25 @@
+"""gcn-cora: 2 layers, d_hidden=16, mean aggregator, symmetric norm.
+[arXiv:1609.02907]"""
+
+from repro.configs import base
+from repro.models.gnn import GNNConfig
+
+ARCH_ID = "gcn-cora"
+FAMILY = "gnn"
+SHAPES = tuple(base.GNN_SHAPES)
+
+
+def make_cfg(shape: dict) -> GNNConfig:
+    return GNNConfig(
+        name=ARCH_ID, arch="gcn", n_layers=2, d_in=shape["d_feat"],
+        d_hidden=16, n_classes=shape["n_classes"],
+    )
+
+
+def build_cell(shape_name, mesh, costing=False):
+    del costing  # no scans: the production program is the costing program
+    return base.gnn_build_cell(make_cfg, ARCH_ID, shape_name, mesh)
+
+
+def smoke():
+    return base.gnn_smoke(make_cfg, ARCH_ID)

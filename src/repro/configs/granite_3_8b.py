@@ -1,0 +1,41 @@
+"""granite-3-8b: 40L d_model=4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+[hf:ibm-granite/granite-3.0-*-base family; hf]"""
+
+from repro.configs import base
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "granite-3-8b"
+FAMILY = "transformer"
+SHAPES = tuple(base.LM_SHAPES)
+
+
+def model_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=40,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=12800,
+        vocab_size=49155,
+        rope_theta=10000.0,
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, d_head=8, d_ff=160, vocab_size=512, dtype="float32",
+    )
+
+
+def build_cell(shape_name, mesh, costing=False, costing_layers=None):
+    # largest dense arch: deeper microbatching to bound remat residuals
+    return base.lm_build_cell(model_config(), shape_name, mesh,
+                              mb_per_device=1, costing=costing,
+                              costing_layers=costing_layers)
+
+
+def smoke():
+    return base.lm_smoke(smoke_config(), ARCH_ID)

@@ -1,0 +1,41 @@
+"""llama3.2-1b: 16L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=128256.
+[hf:meta-llama/Llama-3.2-1B; unverified]"""
+
+from repro.configs import base
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "llama3.2-1b"
+FAMILY = "transformer"
+SHAPES = tuple(base.LM_SHAPES)
+
+
+def model_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=16,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=8,
+        d_head=64,
+        d_ff=8192,
+        vocab_size=128256,
+        rope_theta=500000.0,
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, d_head=8, d_ff=256, vocab_size=512,
+        rope_theta=500000.0, dtype="float32",
+    )
+
+
+def build_cell(shape_name, mesh, costing=False, costing_layers=None):
+    return base.lm_build_cell(model_config(), shape_name, mesh,
+                              mb_per_device=2, costing=costing,
+                              costing_layers=costing_layers)
+
+
+def smoke():
+    return base.lm_smoke(smoke_config(), ARCH_ID)

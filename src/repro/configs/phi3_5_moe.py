@@ -1,0 +1,50 @@
+"""phi3.5-moe-42b-a6.6b: 32L d_model=4096 32H (GQA kv=8) MoE 16 experts
+top-2 (d_ff_expert=6400), vocab=32064. [hf:microsoft/Phi-3.5-MoE-instruct]"""
+
+from repro.configs import base
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "phi3.5-moe-42b-a6.6b"
+FAMILY = "transformer"
+SHAPES = tuple(base.LM_SHAPES)
+
+
+def model_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=6400,
+        vocab_size=32064,
+        rope_theta=10000.0,
+        moe=MoEConfig(
+            n_experts=16,
+            top_k=2,
+            d_ff_expert=6400,
+            d_ff_shared=0,
+            norm_topk=False,   # phi/mixtral-style softmax-over-topk
+        ),
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, d_head=8, d_ff=128, vocab_size=512, dtype="float32",
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64, d_ff_shared=0,
+                      norm_topk=False),
+    )
+
+
+def build_cell(shape_name, mesh, costing=False, costing_layers=None):
+    return base.lm_build_cell(model_config(), shape_name, mesh,
+                              mb_per_device=1, costing=costing,
+                              costing_layers=costing_layers)
+
+
+def smoke():
+    return base.lm_smoke(smoke_config(), ARCH_ID)

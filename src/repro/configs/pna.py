@@ -1,0 +1,27 @@
+"""pna: 4 layers, d_hidden=75, aggregators mean/max/min/std, scalers
+identity/amplification/attenuation. [arXiv:2004.05718]"""
+
+from repro.configs import base
+from repro.models.gnn import GNNConfig
+
+ARCH_ID = "pna"
+FAMILY = "gnn"
+SHAPES = tuple(base.GNN_SHAPES)
+
+
+def make_cfg(shape: dict) -> GNNConfig:
+    return GNNConfig(
+        name=ARCH_ID, arch="pna", n_layers=4, d_in=shape["d_feat"],
+        d_hidden=75, n_classes=shape["n_classes"],
+        aggregators=("mean", "max", "min", "std"),
+        scalers=("identity", "amplification", "attenuation"),
+    )
+
+
+def build_cell(shape_name, mesh, costing=False):
+    del costing  # no scans: the production program is the costing program
+    return base.gnn_build_cell(make_cfg, ARCH_ID, shape_name, mesh)
+
+
+def smoke():
+    return base.gnn_smoke(make_cfg, ARCH_ID)

@@ -1,0 +1,42 @@
+"""qwen1.5-0.5b: 24L d_model=1024 16H (kv=16, MHA) d_ff=2816 vocab=151936,
+QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+
+from repro.configs import base
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "qwen1.5-0.5b"
+FAMILY = "transformer"
+SHAPES = tuple(base.LM_SHAPES)
+
+
+def model_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_head=64,
+        d_ff=2816,
+        vocab_size=151936,
+        qkv_bias=True,
+        rope_theta=1000000.0,
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_head=16, d_ff=128, vocab_size=512, qkv_bias=True,
+        dtype="float32",
+    )
+
+
+def build_cell(shape_name, mesh, costing=False, costing_layers=None):
+    return base.lm_build_cell(model_config(), shape_name, mesh,
+                              mb_per_device=8, costing=costing,
+                              costing_layers=costing_layers)
+
+
+def smoke():
+    return base.lm_smoke(smoke_config(), ARCH_ID)

@@ -1,0 +1,57 @@
+"""qwen2-moe-a2.7b: 24L d_model=2048 16H (kv=16) MoE 60 experts top-4
+(d_ff_expert=1408) + shared expert (5632 = 4x1408), vocab=151936, QKV bias.
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+
+Experts padded 60 -> 64 for 16-way expert parallelism.
+"""
+
+from repro.configs import base
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "qwen2-moe-a2.7b"
+FAMILY = "transformer"
+SHAPES = tuple(base.LM_SHAPES)
+
+
+def model_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_head=128,
+        d_ff=5632,
+        vocab_size=151936,
+        qkv_bias=True,
+        rope_theta=1000000.0,
+        moe=MoEConfig(
+            n_experts=60,
+            top_k=4,
+            d_ff_expert=1408,
+            d_ff_shared=5632,
+            norm_topk=True,
+            n_experts_padded=64,
+        ),
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_head=16, d_ff=128, vocab_size=512, qkv_bias=True,
+        dtype="float32",
+        moe=MoEConfig(n_experts=6, top_k=2, d_ff_expert=32, d_ff_shared=128,
+                      n_experts_padded=8),
+    )
+
+
+def build_cell(shape_name, mesh, costing=False, costing_layers=None):
+    return base.lm_build_cell(model_config(), shape_name, mesh,
+                              mb_per_device=2, costing=costing,
+                              costing_layers=costing_layers)
+
+
+def smoke():
+    return base.lm_smoke(smoke_config(), ARCH_ID)

@@ -1,0 +1,137 @@
+"""traffic-matrix: the paper's own workload as a first-class config.
+
+Distributed ingest: a global batch of traffic windows (2^17 packets each,
+the paper's window size) is sharded one-window-per-device across the whole
+mesh; each device anonymizes + builds its hypersparse matrix and computes
+window analytics; global statistics reduce over the mesh with monoid
+collectives (psum/pmax — GraphBLAS reductions distributed).
+
+Baseline global analytics are exact for packet counts / maxima / histograms;
+device-local unique counts are summed (an upper bound — exact distinct
+counts need the cross-device merge, which is the §Perf hillclimb for this
+cell, see launch/ingest.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base
+from repro.core import analytics
+from repro.core.window import WindowConfig, merge_tree, process_windows_batched
+from repro.distributed import sharding as shrules
+
+ARCH_ID = "traffic-matrix"
+FAMILY = "traffic"
+SHAPES = ("ingest_512w", "ingest_analytics", "ingest_exact")
+
+PAPER_WINDOW = 1 << 17
+
+
+def window_config(window_log2: int = 17) -> WindowConfig:
+    return WindowConfig(window_log2=window_log2, windows_per_batch=64,
+                        anonymization="feistel")
+
+
+_SUM_KEYS = ("valid_packets", "unique_links", "unique_sources",
+             "unique_destinations")
+_MAX_KEYS = ("max_packets_per_link", "max_source_packets",
+             "max_source_fanout", "max_dest_packets", "max_dest_fanin")
+_HIST_KEYS = ("src_packet_hist", "dst_packet_hist", "src_fanout_hist",
+              "dst_fanin_hist")
+
+
+def device_ingest(windows_local: jax.Array, cfg: WindowConfig,
+                  with_analytics: bool = True):
+    """Per-device work: [w_local, n, 2] uint32 -> (stats, merged matrix)."""
+    mats = process_windows_batched(windows_local, cfg)
+    if windows_local.shape[0] == 1:
+        merged = jax.tree.map(lambda a: a[0], mats)
+        ovf = jnp.int32(0)
+    else:
+        merged, ovf = merge_tree(mats, cfg)
+    if not with_analytics:
+        return {"nnz": merged.nnz, "overflow": ovf}, merged
+    stats = analytics.window_stats(merged)
+    stats["merge_overflow"] = ovf
+    return stats, merged
+
+
+def make_ingest_step(mesh, cfg: WindowConfig, *, windows_per_device: int = 1,
+                     with_analytics: bool = True):
+    axes = shrules.all_axes(mesh)
+    flat = axes if len(axes) > 1 else axes[0]
+
+    def shard_fn(windows_local):
+        stats, merged = device_ingest(windows_local, cfg, with_analytics)
+        out = {}
+        for k, v in stats.items():
+            if k in _MAX_KEYS:
+                out[k] = jax.lax.pmax(v, axes)
+            else:  # sums, hists, counters
+                out[k] = jax.lax.psum(v, axes)
+        return out
+
+    return jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=P(flat),
+        out_specs=P(),
+        check_vma=False,
+    )
+
+
+def build_cell(shape_name, mesh, costing=False):
+    del costing  # no scans (merge tree is a python loop)
+    cfg = window_config()
+    n_dev = mesh.size
+    wpd = 1
+    if shape_name == "ingest_exact":
+        # beyond-baseline: exact global merge via row-block all_to_all
+        from repro.launch.ingest import make_exact_ingest_step
+
+        step = make_exact_ingest_step(mesh, cfg)
+    else:
+        with_analytics = shape_name == "ingest_analytics"
+        step = make_ingest_step(mesh, cfg, windows_per_device=wpd,
+                                with_analytics=with_analytics)
+    windows = base.sds((n_dev * wpd, cfg.window_size, 2), jnp.uint32)
+    axes = shrules.all_axes(mesh)
+    flat = axes if len(axes) > 1 else axes[0]
+    # flops: sort is compare-bound; count the useful arithmetic: anonymize
+    # (~40 int ops/addr) + segment ops ~ O(n log n) compares
+    n_pkts = n_dev * wpd * cfg.window_size
+    flops = n_pkts * (2 * 40 + 2 * 17)
+    return base.Cell(
+        arch_id=ARCH_ID, shape_name=shape_name, fn=step,
+        args=(windows,), in_specs=(P(flat),), out_specs=None,
+        kind="serve", model_flops_per_step=flops,
+        note="one 2^17-packet window per device (paper's per-core unit)",
+    )
+
+
+def smoke():
+    cfg = WindowConfig(window_log2=8, windows_per_batch=4,
+                       cap_max_log2=11, anonymization="feistel")
+    key = jax.random.PRNGKey(0)
+    windows = jax.random.randint(
+        key, (4, cfg.window_size, 2), 0, 1 << 30, dtype=jnp.int32
+    ).astype(jnp.uint32)
+
+    def fn(state, batch):
+        stats, merged = device_ingest(batch, cfg)
+        return stats
+
+    def check(stats):
+        import numpy as np
+
+        assert int(stats["valid_packets"]) == 4 * cfg.window_size
+        assert int(stats["unique_links"]) > 0
+        for k in _HIST_KEYS:
+            assert stats[k].shape == (analytics.HIST_BINS,)
+
+    return base.SmokeCase(ARCH_ID, fn, None, windows, check)

@@ -1,0 +1,39 @@
+"""two-tower-retrieval: embed_dim=256, tower MLP 1024-512-256, dot
+interaction, sampled softmax with logQ. [Yi et al. RecSys'19 (YouTube)]"""
+
+from repro.configs import base
+from repro.models.recsys import TwoTowerConfig
+
+ARCH_ID = "two-tower-retrieval"
+FAMILY = "recsys"
+SHAPES = tuple(base.RECSYS_SHAPES)
+
+
+def model_config() -> TwoTowerConfig:
+    return TwoTowerConfig(
+        name=ARCH_ID,
+        embed_dim=256,
+        tower_mlp=(1024, 512, 256),
+        n_user_fields=8,
+        n_item_fields=8,
+        history_len=50,
+        user_vocab=10_000_000,
+        item_vocab=10_000_000,
+    )
+
+
+def smoke_config() -> TwoTowerConfig:
+    return TwoTowerConfig(
+        name=ARCH_ID + "-smoke", embed_dim=16, tower_mlp=(64, 32),
+        n_user_fields=3, n_item_fields=2, history_len=5,
+        user_vocab=1000, item_vocab=1000,
+    )
+
+
+def build_cell(shape_name, mesh, costing=False):
+    del costing  # no scans
+    return base.recsys_build_cell(model_config(), ARCH_ID, shape_name, mesh)
+
+
+def smoke():
+    return base.recsys_smoke(smoke_config(), ARCH_ID)

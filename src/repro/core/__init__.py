@@ -1,0 +1,19 @@
+"""GraphBLAS-in-JAX: hypersparse traffic-matrix construction (the paper's
+core contribution) as a composable JAX module."""
+
+from repro.core.hypersparse import (  # noqa: F401
+    IPV4_SPACE,
+    SENTINEL,
+    HypersparseMatrix,
+    HypersparseVector,
+    empty,
+    from_dense,
+)
+from repro.core.build import (  # noqa: F401
+    build_window,
+    build_windows_batched,
+    lex_sort,
+    matrix_build,
+    vector_build,
+)
+from repro.core import analytics, anonymize, ops, stream, types, window  # noqa: F401

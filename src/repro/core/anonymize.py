@@ -1,0 +1,138 @@
+"""IP anonymization, vectorized over uint32 address arrays.
+
+The paper constructs *anonymized* traffic matrices. Two schemes are provided,
+both keyed and both pure JAX (fully vectorized, jit/vmap/shard_map friendly):
+
+* ``feistel_permute`` — a 4-round balanced Feistel network over the 32-bit
+  address space. A Feistel network is a bijection for any round function, so
+  anonymized addresses never collide (distinct IPs stay distinct — required
+  for traffic-matrix fidelity: nnz, fan-in/out etc. are preserved exactly).
+
+* ``cryptopan`` — prefix-preserving anonymization in the style of CryptoPAn
+  (Xu et al.): output bit i is input bit i XOR PRF(key, input[0:i]).  Two
+  addresses sharing a k-bit prefix anonymize to addresses sharing exactly a
+  k-bit prefix, so subnet structure survives anonymization. Also a bijection.
+
+The round function / PRF is a strengthened xorshift-multiply integer hash
+(splitmix-style avalanche), keyed per round. This is a measurement-fidelity
+reproduction of the paper's anonymization stage, not a cryptographic claim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_GOLDEN = jnp.uint32(0x9E3779B9)
+_M1 = jnp.uint32(0x85EBCA6B)
+_M2 = jnp.uint32(0xC2B2AE35)
+
+
+def _avalanche(x: jax.Array) -> jax.Array:
+    """murmur3-style 32-bit finalizer; x: uint32."""
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 13)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def derive_round_keys(key: int | jax.Array, rounds: int = 4) -> jax.Array:
+    """Expand a user key into per-round uint32 subkeys."""
+    k = jnp.uint32(key)
+    ks = []
+    for r in range(rounds):
+        k = _avalanche(k + _GOLDEN * jnp.uint32(r + 1))
+        ks.append(k)
+    return jnp.stack(ks)
+
+
+def feistel_permute(addr: jax.Array, key: int | jax.Array,
+                    rounds: int = 4) -> jax.Array:
+    """Keyed bijection over uint32 addresses (balanced 16/16 Feistel)."""
+    addr = addr.astype(jnp.uint32)
+    subkeys = derive_round_keys(key, rounds)
+    left = addr >> 16
+    right = addr & jnp.uint32(0xFFFF)
+
+    def round_fn(i, lr):
+        l, r = lr
+        f = _avalanche(r ^ subkeys[i]) & jnp.uint32(0xFFFF)
+        return (r, l ^ f)
+
+    left, right = jax.lax.fori_loop(0, rounds, round_fn, (left, right))
+    return (left << 16) | right
+
+
+def feistel_unpermute(anon: jax.Array, key: int | jax.Array,
+                      rounds: int = 4) -> jax.Array:
+    """Inverse of ``feistel_permute`` (used to validate bijectivity)."""
+    anon = anon.astype(jnp.uint32)
+    subkeys = derive_round_keys(key, rounds)
+    left = anon >> 16
+    right = anon & jnp.uint32(0xFFFF)
+
+    def round_fn(i, lr):
+        l, r = lr
+        rk = subkeys[rounds - 1 - i]
+        f = _avalanche(l ^ rk) & jnp.uint32(0xFFFF)
+        return (r ^ f, l)
+
+    left, right = jax.lax.fori_loop(0, rounds, round_fn, (left, right))
+    return (left << 16) | right
+
+
+def cryptopan(addr: jax.Array, key: int | jax.Array) -> jax.Array:
+    """Prefix-preserving anonymization: bit i flips by PRF of the i-prefix.
+
+    out_bit[i] = in_bit[i] XOR f_key(in >> (32 - i)), processed MSB-first.
+    Because the flip of bit i depends only on the more-significant input
+    bits, equal k-prefixes map to equal k-prefixes (and the map is a
+    bijection: invert by reconstructing the prefix MSB-first).
+    """
+    addr = addr.astype(jnp.uint32)
+    k = _avalanche(jnp.uint32(key) ^ _GOLDEN)
+
+    def bit_step(i, out):
+        # prefix of the *input* above bit position (31 - i)
+        shift = jnp.uint32(32 - i)
+        # jnp >> 32 is undefined for uint32; fold i==0 into a where
+        prefix = jnp.where(i == 0, jnp.uint32(0), addr >> jnp.minimum(shift, 31))
+        prefix = jnp.where(shift >= 32, jnp.uint32(0), prefix)
+        flip = _avalanche(prefix ^ k ^ (jnp.uint32(i) * _GOLDEN)) & jnp.uint32(1)
+        bitpos = jnp.uint32(31 - i)
+        return out ^ (flip << bitpos)
+
+    return jax.lax.fori_loop(0, 32, bit_step, addr)
+
+
+def cryptopan_inverse(anon: jax.Array, key: int | jax.Array) -> jax.Array:
+    """Invert ``cryptopan`` by rebuilding the input prefix MSB-first."""
+    anon = anon.astype(jnp.uint32)
+    k = _avalanche(jnp.uint32(key) ^ _GOLDEN)
+
+    def bit_step(i, recovered):
+        shift = jnp.uint32(32 - i)
+        prefix = jnp.where(
+            i == 0, jnp.uint32(0), recovered >> jnp.minimum(shift, 31)
+        )
+        prefix = jnp.where(shift >= 32, jnp.uint32(0), prefix)
+        flip = _avalanche(prefix ^ k ^ (jnp.uint32(i) * _GOLDEN)) & jnp.uint32(1)
+        bitpos = jnp.uint32(31 - i)
+        in_bit = ((anon >> bitpos) & jnp.uint32(1)) ^ flip
+        return recovered | (in_bit << bitpos)
+
+    return jax.lax.fori_loop(0, 32, bit_step, jnp.zeros_like(anon))
+
+
+def anonymize_packets(packets: jax.Array, key: int | jax.Array,
+                      scheme: str = "feistel") -> jax.Array:
+    """Anonymize a packet array [(n, 2) uint32 = (src, dst)] in one pass."""
+    if scheme == "feistel":
+        return feistel_permute(packets, key)
+    if scheme == "cryptopan":
+        return cryptopan(packets, key)
+    if scheme == "none":
+        return packets
+    raise ValueError(f"unknown anonymization scheme: {scheme}")

@@ -1,0 +1,171 @@
+"""Hypersparse matrix container: the TPU-native stand-in for SuiteSparse's
+hyper-CSC.
+
+A traffic matrix over the full IPv4 space is 2^32 x 2^32 with only ~1e5
+occupied entries per window, i.e. *hypersparse*: nnz << nrows.  SuiteSparse
+stores these as hyper-CSC (a compressed list of non-empty columns).  JAX
+requires static shapes, so we use the positional equivalent:
+
+  * ``rows``/``cols``: ``uint32[capacity]`` coordinate lists,
+  * ``vals``: ``dtype[capacity]`` values,
+  * ``nnz``:  ``int32`` scalar — number of *valid* leading entries,
+
+with the invariant that entries ``[0, nnz)`` are sorted lexicographically by
+``(row, col)`` with no duplicate coordinates, and the tail ``[nnz, capacity)``
+is padding.  Padding rows/cols hold ``SENTINEL = 0xFFFFFFFF`` so that padded
+entries sort after real ones, but **masks derived from ``nnz`` are
+authoritative** — ``(255.255.255.255 -> 255.255.255.255)`` is a legal packet
+and must not be confused with padding.
+
+``capacity`` (== rows.shape[0]) is a compile-time bound; all core ops carry
+explicit output capacities and report overflow instead of silently dropping.
+
+The container is registered as a pytree so it can flow through jit / vmap /
+shard_map; ``nrows``/``ncols``/``shape`` are static metadata.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.uint32(0xFFFFFFFF)
+IPV4_SPACE = 1 << 32  # the paper's matrix dimension
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("rows", "cols", "vals", "nnz"),
+    meta_fields=("nrows", "ncols"),
+)
+@dataclasses.dataclass
+class HypersparseMatrix:
+    """Sorted-COO hypersparse matrix with static capacity."""
+
+    rows: jax.Array  # uint32[capacity]
+    cols: jax.Array  # uint32[capacity]
+    vals: jax.Array  # dtype[capacity]
+    nnz: jax.Array  # int32 scalar
+    nrows: int = IPV4_SPACE
+    ncols: int = IPV4_SPACE
+
+    @property
+    def capacity(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.nrows, self.ncols)
+
+    def valid_mask(self) -> jax.Array:
+        """bool[capacity]: True for the leading ``nnz`` real entries."""
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.nnz
+
+    def masked_vals(self, identity=0) -> jax.Array:
+        """vals with padding replaced by ``identity`` (monoid-safe)."""
+        ident = jnp.asarray(identity, dtype=self.vals.dtype)
+        return jnp.where(self.valid_mask(), self.vals, ident)
+
+    # -- conversion helpers (tests / small matrices only) -------------------
+
+    def to_dense(self) -> jax.Array:
+        """Densify. Only sensible for small nrows/ncols in tests."""
+        if self.nrows * self.ncols > (1 << 24):
+            raise ValueError(
+                f"refusing to densify a {self.nrows}x{self.ncols} matrix"
+            )
+        dense = jnp.zeros((self.nrows, self.ncols), dtype=self.vals.dtype)
+        r = jnp.minimum(self.rows, jnp.uint32(self.nrows - 1)).astype(jnp.int32)
+        c = jnp.minimum(self.cols, jnp.uint32(self.ncols - 1)).astype(jnp.int32)
+        v = self.masked_vals()
+        return dense.at[r, c].add(v)
+
+    def entries(self):
+        """Host-side (rows, cols, vals) of valid entries (concrete only)."""
+        n = int(self.nnz)
+        return (
+            jax.device_get(self.rows)[:n],
+            jax.device_get(self.cols)[:n],
+            jax.device_get(self.vals)[:n],
+        )
+
+
+def empty(
+    capacity: int,
+    dtype=jnp.int32,
+    nrows: int = IPV4_SPACE,
+    ncols: int = IPV4_SPACE,
+) -> HypersparseMatrix:
+    """An all-padding matrix of the given capacity."""
+    return HypersparseMatrix(
+        rows=jnp.full((capacity,), SENTINEL, dtype=jnp.uint32),
+        cols=jnp.full((capacity,), SENTINEL, dtype=jnp.uint32),
+        vals=jnp.zeros((capacity,), dtype=dtype),
+        nnz=jnp.int32(0),
+        nrows=nrows,
+        ncols=ncols,
+    )
+
+
+def from_dense(dense, nrows=None, ncols=None) -> HypersparseMatrix:
+    """Test helper: dense -> sorted-COO (capacity = size of dense)."""
+    dense = jnp.asarray(dense)
+    nr, nc = dense.shape
+    rr, cc = jnp.meshgrid(
+        jnp.arange(nr, dtype=jnp.uint32),
+        jnp.arange(nc, dtype=jnp.uint32),
+        indexing="ij",
+    )
+    flat_r, flat_c, flat_v = rr.ravel(), cc.ravel(), dense.ravel()
+    present = flat_v != 0
+    # stable partition: non-zeros first, preserving (row, col) order
+    order = jnp.argsort(~present, stable=True)
+    n = present.sum().astype(jnp.int32)
+    rows = jnp.where(jnp.arange(flat_r.size) < n, flat_r[order], SENTINEL)
+    cols = jnp.where(jnp.arange(flat_c.size) < n, flat_c[order], SENTINEL)
+    vals = jnp.where(jnp.arange(flat_v.size) < n, flat_v[order], 0)
+    return HypersparseMatrix(
+        rows=rows.astype(jnp.uint32),
+        cols=cols.astype(jnp.uint32),
+        vals=vals.astype(dense.dtype),
+        nnz=n,
+        nrows=nrows or nr,
+        ncols=ncols or nc,
+    )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("idx", "vals", "nnz"),
+    meta_fields=("length",),
+)
+@dataclasses.dataclass
+class HypersparseVector:
+    """Sorted sparse vector (result of row/col reductions)."""
+
+    idx: jax.Array  # uint32[capacity]
+    vals: jax.Array
+    nnz: jax.Array  # int32 scalar
+    length: int = IPV4_SPACE
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[0]
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.nnz
+
+    def to_dense(self) -> jax.Array:
+        if self.length > (1 << 24):
+            raise ValueError("refusing to densify huge vector")
+        out = jnp.zeros((self.length,), dtype=self.vals.dtype)
+        i = jnp.minimum(self.idx, jnp.uint32(self.length - 1)).astype(jnp.int32)
+        v = jnp.where(self.valid_mask(), self.vals, 0)
+        return out.at[i].add(v)

@@ -1,0 +1,405 @@
+"""GraphBLAS operations over hypersparse matrices.
+
+Element-wise union/intersection merges, mxm (SpGEMM), reductions, apply /
+select / extract, transpose, and the dense-RHS products (SpMM / SDDMM) that
+the GNN and analytics layers are built on.
+
+Everything keeps the sorted-COO + static-capacity discipline from
+``hypersparse.py``: outputs carry explicit capacities, and operations that
+can overflow a static capacity return an overflow count instead of silently
+dropping entries.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types
+from repro.core.build import dedup_sorted, lex_sort, matrix_build
+from repro.core.hypersparse import (
+    SENTINEL,
+    HypersparseMatrix,
+    HypersparseVector,
+)
+
+
+# ---------------------------------------------------------------------------
+# compaction helper (scatter-with-drop: positions >= out capacity fall away)
+# ---------------------------------------------------------------------------
+def _compact(flags, arrays, out_capacity, fills):
+    """Scatter entries where ``flags`` into the leading slots of new arrays.
+
+    Returns (compacted_arrays, n_selected, overflow). Entries beyond
+    ``out_capacity`` are dropped and counted.
+    """
+    n = flags.shape[0]
+    pos = jnp.cumsum(flags.astype(jnp.int32)) - 1
+    # invalid or overflowing entries scatter to index out_capacity -> dropped
+    tgt = jnp.where(flags & (pos < out_capacity), pos, out_capacity)
+    outs = []
+    for arr, fill in zip(arrays, fills):
+        out = jnp.full((out_capacity,), fill, dtype=arr.dtype)
+        outs.append(out.at[tgt].set(arr, mode="drop"))
+    n_sel = flags.sum().astype(jnp.int32)
+    overflow = jnp.maximum(n_sel - out_capacity, 0)
+    return outs, jnp.minimum(n_sel, out_capacity), overflow
+
+
+def with_capacity(A: HypersparseMatrix, capacity: int):
+    """Shrink/grow the static capacity. Returns (matrix, overflow_count)."""
+    flags = A.valid_mask()
+    (r, c, v), nnz, ovf = _compact(
+        flags,
+        (A.rows, A.cols, A.vals),
+        capacity,
+        (SENTINEL, SENTINEL, jnp.zeros((), A.vals.dtype)),
+    )
+    return (
+        HypersparseMatrix(rows=r, cols=c, vals=v, nnz=nnz,
+                          nrows=A.nrows, ncols=A.ncols),
+        ovf,
+    )
+
+
+# ---------------------------------------------------------------------------
+# element-wise merges
+# ---------------------------------------------------------------------------
+class MergeResult(NamedTuple):
+    matrix: HypersparseMatrix
+    overflow: jax.Array  # int32; entries dropped due to static capacity
+
+
+def ewise_add(
+    A: HypersparseMatrix,
+    B: HypersparseMatrix,
+    op: types.BinaryOp = types.PLUS,
+    *,
+    out_capacity: int | None = None,
+) -> MergeResult:
+    """GrB_eWiseAdd: set-union merge; ``op`` combines where both present.
+
+    This is the traffic-matrix *merge* primitive: window matrices are summed
+    pairwise up the 64-window batch hierarchy.
+    """
+    cap = out_capacity or (A.capacity + B.capacity)
+    rows = jnp.concatenate([A.rows, B.rows])
+    cols = jnp.concatenate([A.cols, B.cols])
+    vals = jnp.concatenate(
+        [A.vals, B.vals.astype(A.vals.dtype)]
+    )
+    valid = jnp.concatenate([A.valid_mask(), B.valid_mask()])
+    rows = jnp.where(valid, rows, SENTINEL)
+    cols = jnp.where(valid, cols, SENTINEL)
+
+    srows, scols, svals, svalid = lex_sort(rows, cols, vals, valid, valid=valid)
+    n = srows.shape[0]
+
+    # each key run has <= 2 valid entries (one per operand, A's first by
+    # stability); merge pairs then compact run heads.
+    nxt_same = (
+        (srows == jnp.roll(srows, -1))
+        & (scols == jnp.roll(scols, -1))
+        & jnp.roll(svalid, -1)
+        & svalid
+    )
+    nxt_same = nxt_same.at[-1].set(False)
+    merged = jnp.where(nxt_same, op(svals, jnp.roll(svals, -1)), svals)
+
+    prev_same = jnp.concatenate(
+        [jnp.zeros((1,), bool), nxt_same[:-1]]
+    )
+    heads = svalid & ~prev_same
+    (r, c, v), nnz, ovf = _compact(
+        heads,
+        (srows, scols, merged),
+        cap,
+        (SENTINEL, SENTINEL, jnp.zeros((), merged.dtype)),
+    )
+    return MergeResult(
+        HypersparseMatrix(rows=r, cols=c, vals=v, nnz=nnz,
+                          nrows=A.nrows, ncols=A.ncols),
+        ovf,
+    )
+
+
+def ewise_mult(
+    A: HypersparseMatrix,
+    B: HypersparseMatrix,
+    op: types.BinaryOp = types.TIMES,
+    *,
+    out_capacity: int | None = None,
+) -> MergeResult:
+    """GrB_eWiseMult: set-intersection merge (keys present in both)."""
+    cap = out_capacity or min(A.capacity, B.capacity)
+    rows = jnp.concatenate([A.rows, B.rows])
+    cols = jnp.concatenate([A.cols, B.cols])
+    vals = jnp.concatenate([A.vals, B.vals.astype(A.vals.dtype)])
+    valid = jnp.concatenate([A.valid_mask(), B.valid_mask()])
+    rows = jnp.where(valid, rows, SENTINEL)
+    cols = jnp.where(valid, cols, SENTINEL)
+
+    srows, scols, svals, svalid = lex_sort(rows, cols, vals, valid, valid=valid)
+
+    nxt_same = (
+        (srows == jnp.roll(srows, -1))
+        & (scols == jnp.roll(scols, -1))
+        & jnp.roll(svalid, -1)
+        & svalid
+    )
+    nxt_same = nxt_same.at[-1].set(False)
+    merged = jnp.where(nxt_same, op(svals, jnp.roll(svals, -1)), svals)
+    # keep only run heads that have a partner (present in both operands)
+    (r, c, v), nnz, ovf = _compact(
+        nxt_same,
+        (srows, scols, merged),
+        cap,
+        (SENTINEL, SENTINEL, jnp.zeros((), merged.dtype)),
+    )
+    return MergeResult(
+        HypersparseMatrix(rows=r, cols=c, vals=v, nnz=nnz,
+                          nrows=A.nrows, ncols=A.ncols),
+        ovf,
+    )
+
+
+# ---------------------------------------------------------------------------
+# apply / select / extract / transpose
+# ---------------------------------------------------------------------------
+def apply(A: HypersparseMatrix, op: types.UnaryOp) -> HypersparseMatrix:
+    vals = jnp.where(A.valid_mask(), op(A.vals), jnp.zeros_like(A.vals))
+    return HypersparseMatrix(rows=A.rows, cols=A.cols, vals=vals, nnz=A.nnz,
+                             nrows=A.nrows, ncols=A.ncols)
+
+
+def select(A: HypersparseMatrix, keep) -> HypersparseMatrix:
+    """GrB_select: keep entries where ``keep(rows, cols, vals)`` is True."""
+    flags = keep(A.rows, A.cols, A.vals) & A.valid_mask()
+    (r, c, v), nnz, _ = _compact(
+        flags,
+        (A.rows, A.cols, A.vals),
+        A.capacity,
+        (SENTINEL, SENTINEL, jnp.zeros((), A.vals.dtype)),
+    )
+    return HypersparseMatrix(rows=r, cols=c, vals=v, nnz=nnz,
+                             nrows=A.nrows, ncols=A.ncols)
+
+
+def extract_block(
+    A: HypersparseMatrix, r0, r1, c0, c1, *, out_capacity: int | None = None
+) -> HypersparseMatrix:
+    """Extract the sub-block [r0, r1) x [c0, c1), coordinates rebased.
+
+    This is the 2D-decomposition primitive: the 2^32 ID space is carved into
+    block tiles for sharded merge/analytics and for feeding the Pallas SpMM
+    kernel tiles.
+    """
+    cap = out_capacity or A.capacity
+    flags = (
+        (A.rows >= r0) & (A.rows < r1) & (A.cols >= c0) & (A.cols < c1)
+        & A.valid_mask()
+    )
+    (r, c, v), nnz, ovf = _compact(
+        flags,
+        (A.rows - jnp.uint32(r0), A.cols - jnp.uint32(c0), A.vals),
+        cap,
+        (SENTINEL, SENTINEL, jnp.zeros((), A.vals.dtype)),
+    )
+    del ovf  # cap >= A.capacity cannot overflow when default
+    return HypersparseMatrix(
+        rows=r, cols=c, vals=v, nnz=nnz,
+        nrows=int(r1 - r0), ncols=int(c1 - c0),
+    )
+
+
+def transpose(A: HypersparseMatrix) -> HypersparseMatrix:
+    rows, cols, vals = lex_sort(A.cols, A.rows, A.vals, valid=A.valid_mask())
+    return HypersparseMatrix(rows=rows, cols=cols, vals=vals, nnz=A.nnz,
+                             nrows=A.ncols, ncols=A.nrows)
+
+
+# ---------------------------------------------------------------------------
+# reductions
+# ---------------------------------------------------------------------------
+def reduce_scalar(A: HypersparseMatrix, monoid: types.Monoid = types.PLUS_MONOID):
+    ident = monoid.identity_for(A.vals.dtype)
+    masked = jnp.where(A.valid_mask(), A.vals, ident)
+    if monoid.name == "plus":
+        return masked.sum()
+    if monoid.name == "min":
+        return masked.min()
+    if monoid.name == "max":
+        return masked.max()
+    if monoid.name in ("times", "land"):
+        return masked.prod()
+    if monoid.name == "lor":
+        return masked.max()
+    raise ValueError(f"unsupported monoid {monoid.name}")
+
+
+def reduce_rows(
+    A: HypersparseMatrix,
+    monoid: types.Monoid = types.PLUS_MONOID,
+    *,
+    out_capacity: int | None = None,
+) -> HypersparseVector:
+    """Row-wise reduction -> sparse vector over occupied rows.
+
+    With PLUS this is "packets per source"; over ``apply(A, ONE)`` it is the
+    source fan-out — the two workhorse analytics of the paper's pipeline.
+    """
+    cap = out_capacity or A.capacity
+    n = A.capacity
+    valid = A.valid_mask()
+    prev = jnp.concatenate([A.rows[:1], A.rows[:-1]])
+    first = jnp.arange(n) == 0
+    heads = ((A.rows != prev) | first) & valid
+
+    seg = jnp.cumsum(heads.astype(jnp.int32)) - 1
+    seg = jnp.where(valid, jnp.maximum(seg, 0), n - 1)
+    ident = monoid.identity_for(A.vals.dtype)
+    masked = jnp.where(valid, A.vals, ident)
+    from repro.core.build import _SEGMENT_REDUCERS
+
+    red = _SEGMENT_REDUCERS[monoid.name](masked, seg, num_segments=n)
+
+    nnz = heads.sum().astype(jnp.int32)
+    slot_valid = jnp.arange(n, dtype=jnp.int32) < nnz
+    # scatter head coordinates into compacted slots; gather reduced values
+    pos = jnp.where(heads, jnp.cumsum(heads.astype(jnp.int32)) - 1, n)
+    idx_out = jnp.full((cap,), SENTINEL, dtype=jnp.uint32)
+    idx_out = idx_out.at[pos].set(A.rows, mode="drop")
+    vals_out = jnp.where(
+        slot_valid[:cap], red[:cap], jnp.zeros((), A.vals.dtype)
+    )
+    return HypersparseVector(
+        idx=idx_out, vals=vals_out, nnz=jnp.minimum(nnz, cap), length=A.nrows
+    )
+
+
+def reduce_cols(
+    A: HypersparseMatrix,
+    monoid: types.Monoid = types.PLUS_MONOID,
+    *,
+    out_capacity: int | None = None,
+) -> HypersparseVector:
+    return reduce_rows(transpose(A), monoid, out_capacity=out_capacity)
+
+
+# ---------------------------------------------------------------------------
+# mxm (SpGEMM) and dense-RHS products
+# ---------------------------------------------------------------------------
+class MxmResult(NamedTuple):
+    matrix: HypersparseMatrix
+    overflow: jax.Array  # expansion entries dropped (int32)
+
+
+def mxm(
+    A: HypersparseMatrix,
+    B: HypersparseMatrix,
+    semiring: types.Semiring = types.PLUS_TIMES,
+    *,
+    expansion_capacity: int,
+    out_capacity: int | None = None,
+) -> MxmResult:
+    """GrB_mxm, expansion-based SpGEMM: C = A (+.x) B.
+
+    Every A entry (i, k, a) joins all B entries (k, j, b) via binary search
+    on B's sorted row stream; the (static) ``expansion_capacity`` bounds the
+    number of multiplies, and overflowing products are counted, not dropped
+    silently.
+    """
+    cap_out = out_capacity or expansion_capacity
+    nA = A.capacity
+    b_nnz = B.nnz
+
+    a_valid = A.valid_mask()
+    a_keys = jnp.where(a_valid, A.cols, SENTINEL)
+    lo = jnp.searchsorted(B.rows, a_keys, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(B.rows, a_keys, side="right").astype(jnp.int32)
+    lo = jnp.minimum(lo, b_nnz)
+    hi = jnp.minimum(hi, b_nnz)
+    counts = jnp.where(a_valid, hi - lo, 0)
+
+    cum = jnp.cumsum(counts)  # inclusive
+    total = cum[-1]
+    offsets = cum - counts  # exclusive
+
+    e = jnp.arange(expansion_capacity, dtype=jnp.int32)
+    t = jnp.searchsorted(cum, e, side="right").astype(jnp.int32)
+    t = jnp.minimum(t, nA - 1)
+    e_valid = e < jnp.minimum(total, expansion_capacity)
+    b_idx = jnp.clip(lo[t] + (e - offsets[t]), 0, B.capacity - 1)
+
+    rows_e = jnp.where(e_valid, A.rows[t], SENTINEL)
+    cols_e = jnp.where(e_valid, B.cols[b_idx], SENTINEL)
+    vals_e = semiring.mul(A.vals[t], B.vals[b_idx].astype(A.vals.dtype))
+    ident = semiring.add.identity_for(vals_e.dtype)
+    vals_e = jnp.where(e_valid, vals_e, ident)
+
+    C = matrix_build(
+        rows_e,
+        cols_e,
+        vals_e,
+        nrows=A.nrows,
+        ncols=B.ncols,
+        dup=semiring.add,
+        n_valid=jnp.minimum(total, expansion_capacity),
+        dtype=vals_e.dtype,
+    )
+    C, ovf2 = with_capacity(C, cap_out)
+    overflow = jnp.maximum(total - expansion_capacity, 0).astype(jnp.int32) + ovf2
+    return MxmResult(C, overflow)
+
+
+def spmm_dense(
+    A: HypersparseMatrix,
+    X: jax.Array,
+    *,
+    num_rows: int,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """C[i, :] = sum_j A(i, j) * X[j, :]  (plus_times over a dense RHS).
+
+    The GNN aggregation primitive; ``num_rows`` is the dense output height
+    (node count), which must be concrete.
+    """
+    if use_kernel:
+        from repro.kernels.spmm_coo import ops as spmm_ops
+
+        return spmm_ops.spmm_coo(
+            A.rows, A.cols, A.vals, X, A.nnz, num_rows=num_rows
+        )
+    cols = jnp.minimum(A.cols, jnp.uint32(X.shape[0] - 1)).astype(jnp.int32)
+    rows = jnp.minimum(A.rows, jnp.uint32(num_rows - 1)).astype(jnp.int32)
+    vals = A.masked_vals().astype(X.dtype)
+    contrib = vals[:, None] * X[cols]
+    contrib = jnp.where(A.valid_mask()[:, None], contrib, 0)
+    return jax.ops.segment_sum(contrib, rows, num_segments=num_rows)
+
+
+def sddmm(
+    rows: jax.Array,
+    cols: jax.Array,
+    U: jax.Array,
+    V: jax.Array,
+    n_valid=None,
+    *,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Sampled dense-dense: e_k = <U[rows_k, :], V[cols_k, :]>.
+
+    GAT edge-score primitive. rows/cols are edge endpoints (uint32/int32).
+    """
+    if use_kernel:
+        from repro.kernels.sddmm import ops as sddmm_ops
+
+        return sddmm_ops.sddmm(rows, cols, U, V, n_valid)
+    r = jnp.minimum(rows.astype(jnp.int32), U.shape[0] - 1)
+    c = jnp.minimum(cols.astype(jnp.int32), V.shape[0] - 1)
+    out = jnp.einsum("ed,ed->e", U[r], V[c])
+    if n_valid is not None:
+        out = jnp.where(jnp.arange(out.shape[0]) < n_valid, out, 0)
+    return out

@@ -1,0 +1,135 @@
+"""GraphBLAS vocabulary: monoids, binary ops, semirings, unary ops.
+
+This is the algebraic core of the GraphBLAS specification (Bulucs et al.,
+"Design of the GraphBLAS API for C") reduced to what a JAX implementation
+needs: a ``Monoid`` is an associative binary op with an identity element (used
+for duplicate accumulation in ``matrix_build``, for ewise merges, and for
+reductions); a ``Semiring`` pairs an additive monoid with a multiplicative
+binary op (used by ``mxm`` / ``mxv``).
+
+Everything here is a pure-python frozen dataclass holding jnp-traceable
+callables, so semirings can be passed straight through ``jax.jit``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+Array = Any  # jax array; kept loose to avoid importing jaxtyping at runtime
+
+
+@dataclasses.dataclass(frozen=True)
+class BinaryOp:
+    """A GrB_BinaryOp: elementwise z = f(x, y)."""
+
+    name: str
+    fn: Callable[[Array, Array], Array]
+
+    def __call__(self, x: Array, y: Array) -> Array:
+        return self.fn(x, y)
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """A GrB_Monoid: associative BinaryOp + identity.
+
+    ``identity`` is a python scalar; it is cast to the operand dtype at use
+    sites so one monoid serves all dtypes (as in SuiteSparse's generic
+    monoids).
+    """
+
+    name: str
+    op: BinaryOp
+    identity: float | int
+
+    def __call__(self, x: Array, y: Array) -> Array:
+        return self.op(x, y)
+
+    def identity_for(self, dtype) -> Array:
+        dt = jnp.dtype(dtype)
+        ident = self.identity
+        if ident == -_INF and not jnp.issubdtype(dt, jnp.floating):
+            return jnp.array(jnp.iinfo(dt).min, dtype=dt)
+        if ident == _INF and not jnp.issubdtype(dt, jnp.floating):
+            return jnp.array(jnp.iinfo(dt).max, dtype=dt)
+        return jnp.array(ident, dtype=dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A GrB_Semiring: (add monoid, multiply op)."""
+
+    name: str
+    add: Monoid
+    mul: BinaryOp
+
+
+@dataclasses.dataclass(frozen=True)
+class UnaryOp:
+    """A GrB_UnaryOp: z = f(x)."""
+
+    name: str
+    fn: Callable[[Array], Array]
+
+    def __call__(self, x: Array) -> Array:
+        return self.fn(x)
+
+
+_INF = float("inf")
+
+# ---------------------------------------------------------------------------
+# Binary ops
+# ---------------------------------------------------------------------------
+PLUS = BinaryOp("plus", lambda x, y: x + y)
+TIMES = BinaryOp("times", lambda x, y: x * y)
+MIN = BinaryOp("min", jnp.minimum)
+MAX = BinaryOp("max", jnp.maximum)
+FIRST = BinaryOp("first", lambda x, y: x)
+SECOND = BinaryOp("second", lambda x, y: y)
+PAIR = BinaryOp("pair", lambda x, y: jnp.ones_like(x))  # aka ONEB
+LOR = BinaryOp("lor", lambda x, y: jnp.maximum(x, y))  # over {0,1}
+LAND = BinaryOp("land", lambda x, y: x * y)  # over {0,1}
+
+# ---------------------------------------------------------------------------
+# Monoids
+# ---------------------------------------------------------------------------
+PLUS_MONOID = Monoid("plus", PLUS, 0)
+TIMES_MONOID = Monoid("times", TIMES, 1)
+MIN_MONOID = Monoid("min", MIN, _INF)
+MAX_MONOID = Monoid("max", MAX, -_INF)
+LOR_MONOID = Monoid("lor", LOR, 0)
+LAND_MONOID = Monoid("land", LAND, 1)
+
+# ---------------------------------------------------------------------------
+# Semirings (the ones the traffic-matrix + GNN paths actually use)
+# ---------------------------------------------------------------------------
+PLUS_TIMES = Semiring("plus_times", PLUS_MONOID, TIMES)   # ordinary linear algebra
+PLUS_PAIR = Semiring("plus_pair", PLUS_MONOID, PAIR)      # structural counting
+PLUS_FIRST = Semiring("plus_first", PLUS_MONOID, FIRST)
+PLUS_SECOND = Semiring("plus_second", PLUS_MONOID, SECOND)
+MIN_PLUS = Semiring("min_plus", MIN_MONOID, PLUS)         # shortest paths
+MAX_TIMES = Semiring("max_times", MAX_MONOID, TIMES)
+LOR_LAND = Semiring("lor_land", LOR_MONOID, LAND)         # reachability
+
+SEMIRINGS = {
+    s.name: s
+    for s in (PLUS_TIMES, PLUS_PAIR, PLUS_FIRST, PLUS_SECOND, MIN_PLUS,
+              MAX_TIMES, LOR_LAND)
+}
+MONOIDS = {
+    m.name: m
+    for m in (PLUS_MONOID, TIMES_MONOID, MIN_MONOID, MAX_MONOID, LOR_MONOID,
+              LAND_MONOID)
+}
+
+# ---------------------------------------------------------------------------
+# Unary ops
+# ---------------------------------------------------------------------------
+IDENTITY = UnaryOp("identity", lambda x: x)
+AINV = UnaryOp("ainv", lambda x: -x)
+ONE = UnaryOp("one", jnp.ones_like)
+ABS = UnaryOp("abs", jnp.abs)
+LOG1P = UnaryOp("log1p", jnp.log1p)

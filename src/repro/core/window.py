@@ -1,0 +1,123 @@
+"""Traffic windows and the batch merge hierarchy.
+
+The paper's pipeline: packets -> windows of 2^17 packets -> 64 windows per
+batch -> 8 batches. Each window becomes one hypersparse matrix; windows merge
+pairwise up a binary tree into batch matrices (GraphBLAS ``ewise_add`` with
+``plus``), which is both how SuiteSparse pipelines do it (Kepner et al.,
+"GraphBLAS on the Edge") and exactly the shape that shards: leaves are
+embarrassingly parallel across devices, upper tree levels become collectives.
+
+Capacities follow a schedule: level l capacity = min(cap0 * 2^l, cap_max);
+overflow (entries dropped when a merged matrix exceeds its static capacity)
+is accumulated and reported — real traffic reuses addresses heavily, so
+cap_max ~ 4x window size loses nothing in practice, but we audit it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import anonymize as anon
+from repro.core import ops, types
+from repro.core.build import build_window
+from repro.core.hypersparse import HypersparseMatrix
+
+PAPER_WINDOW_LOG2 = 17  # 2^17 packets per window
+PAPER_WINDOWS_PER_BATCH = 64
+PAPER_BATCHES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowConfig:
+    window_log2: int = PAPER_WINDOW_LOG2
+    windows_per_batch: int = PAPER_WINDOWS_PER_BATCH
+    anonymization: str = "feistel"  # feistel | cryptopan | none
+    anonymization_key: int = 0xC0FFEE
+    cap_max_log2: int = 19  # merged-matrix capacity ceiling (2^19 = 4x window)
+    val_dtype: str = "int32"
+
+    @property
+    def window_size(self) -> int:
+        return 1 << self.window_log2
+
+    @property
+    def cap_max(self) -> int:
+        return 1 << self.cap_max_log2
+
+    def level_capacity(self, level: int) -> int:
+        return min(self.window_size << level, self.cap_max)
+
+
+def process_window(packets: jax.Array, cfg: WindowConfig) -> HypersparseMatrix:
+    """Anonymize one window [(n, 2) uint32] and build its traffic matrix."""
+    pkts = anon.anonymize_packets(packets, cfg.anonymization_key,
+                                  cfg.anonymization)
+    return build_window(pkts, dtype=jnp.dtype(cfg.val_dtype))
+
+
+def process_windows_batched(packets: jax.Array,
+                            cfg: WindowConfig) -> HypersparseMatrix:
+    """vmap of ``process_window`` over a [W, n, 2] window batch."""
+    return jax.vmap(lambda p: process_window(p, cfg))(packets)
+
+
+def merge_tree(
+    stack: HypersparseMatrix,
+    cfg: WindowConfig,
+    op: types.BinaryOp = types.PLUS,
+):
+    """Merge a [W, ...]-batched matrix stack pairwise to a single matrix.
+
+    Returns (merged_matrix, total_overflow). W must be a power of two.
+    """
+    w = stack.rows.shape[0]
+    assert w & (w - 1) == 0, f"window count {w} must be a power of two"
+    overflow = jnp.int32(0)
+    level = 1
+    while w > 1:
+        cap = cfg.level_capacity(level)
+        left = jax.tree.map(lambda a: a[0::2], stack)
+        right = jax.tree.map(lambda a: a[1::2], stack)
+        if w == 2:
+            l1 = jax.tree.map(lambda a: a[0], left)
+            r1 = jax.tree.map(lambda a: a[0], right)
+            merged, ovf = ops.ewise_add(l1, r1, op, out_capacity=cap)
+            overflow = overflow + ovf
+            return merged, overflow
+        merged, ovf = jax.vmap(
+            lambda a, b: ops.ewise_add(a, b, op, out_capacity=cap)
+        )(left, right)
+        overflow = overflow + ovf.sum()
+        stack = merged
+        w //= 2
+        level += 1
+    # w == 1 on entry
+    return jax.tree.map(lambda a: a[0], stack), overflow
+
+
+def process_batch(packets: jax.Array, cfg: WindowConfig):
+    """Full per-batch pipeline: [W, n, 2] packets -> one batch matrix.
+
+    This is the unit the paper times in GraphBLAS-only mode (per-window
+    builds) plus the hierarchical merge from the follow-on pipeline papers.
+    Returns (batch_matrix, window_matrices, merge_overflow).
+    """
+    windows = process_windows_batched(packets, cfg)
+    merged, overflow = merge_tree(windows, cfg)
+    return merged, windows, overflow
+
+
+def window_slices(packets: jax.Array, cfg: WindowConfig) -> jax.Array:
+    """Reshape a flat [N, 2] packet stream into [W, window, 2] windows."""
+    n = cfg.window_size
+    w = packets.shape[0] // n
+    return packets[: w * n].reshape(w, n, 2)
+
+
+def capacity_schedule(cfg: WindowConfig) -> Sequence[int]:
+    levels = cfg.windows_per_batch.bit_length() - 1
+    return [cfg.level_capacity(l) for l in range(1, levels + 1)]

@@ -1,0 +1,1 @@
+"""Data substrate: packet streams, token pipelines, graph containers."""

@@ -1,0 +1,207 @@
+"""Graph containers, synthetic graph generators, and a real neighbor
+sampler for minibatch GNN training.
+
+JAX needs static shapes, so every graph is padded: edge arrays carry
+``n_edges`` valid entries, node arrays ``n_nodes``. The neighbor sampler
+produces fixed-fanout sampled subgraphs from a padded-CSR adjacency — the
+``minibatch_lg`` shape's sampled-training path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HostGraph:
+    """Host-side padded graph (numpy; device transfer at the jit boundary)."""
+
+    x: np.ndarray          # [N_pad, d] float32
+    edge_src: np.ndarray   # [E_pad] int32
+    edge_dst: np.ndarray   # [E_pad] int32
+    n_nodes: int
+    n_edges: int
+    labels: np.ndarray | None = None       # [N_pad] int32
+    label_mask: np.ndarray | None = None   # [N_pad] int32
+    coords: np.ndarray | None = None       # [N_pad, 3] float32 (egnn)
+
+    def batch_dict(self) -> dict:
+        d = {
+            "x": self.x,
+            "edge_src": self.edge_src,
+            "edge_dst": self.edge_dst,
+            "n_nodes": np.int32(self.n_nodes),
+            "n_edges": np.int32(self.n_edges),
+        }
+        if self.labels is not None:
+            d["labels"] = self.labels
+        if self.label_mask is not None:
+            d["label_mask"] = self.label_mask
+        if self.coords is not None:
+            d["coords"] = self.coords
+        return d
+
+
+def _pad_to(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
+    if arr.shape[0] >= n:
+        return arr[:n]
+    pad_shape = (n - arr.shape[0],) + arr.shape[1:]
+    return np.concatenate([arr, np.full(pad_shape, fill, arr.dtype)])
+
+
+def symmetrize_with_self_loops(
+    src: np.ndarray, dst: np.ndarray, n_nodes: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """A := A + A^T + I (GCN convention), deduplicated."""
+    s = np.concatenate([src, dst, np.arange(n_nodes, dtype=src.dtype)])
+    d = np.concatenate([dst, src, np.arange(n_nodes, dtype=src.dtype)])
+    key = s.astype(np.int64) * n_nodes + d
+    _, idx = np.unique(key, return_index=True)
+    return s[idx], d[idx]
+
+
+def random_graph(
+    seed: int,
+    *,
+    n_nodes: int,
+    n_edges: int,
+    d_feat: int,
+    n_classes: int,
+    pad_nodes: int | None = None,
+    pad_edges: int | None = None,
+    powerlaw: bool = True,
+    with_coords: bool = False,
+    symmetrize: bool = True,
+) -> HostGraph:
+    """Synthetic Cora/products-like graph with power-law degrees."""
+    rng = np.random.default_rng(seed)
+    if powerlaw:
+        w = 1.0 / np.arange(1, n_nodes + 1) ** 0.8
+        p = w / w.sum()
+        src = rng.choice(n_nodes, size=n_edges, p=p).astype(np.int32)
+        dst = rng.choice(n_nodes, size=n_edges, p=p).astype(np.int32)
+    else:
+        src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+        dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    if symmetrize:
+        src, dst = symmetrize_with_self_loops(src, dst, n_nodes)
+    pn = pad_nodes or n_nodes
+    pe = pad_edges or len(src)
+    n_real_edges = min(len(src), pe)
+    return HostGraph(
+        x=_pad_to(rng.standard_normal((n_nodes, d_feat)).astype(np.float32),
+                  pn),
+        edge_src=_pad_to(src.astype(np.int32), pe),
+        edge_dst=_pad_to(dst.astype(np.int32), pe),
+        n_nodes=n_nodes,
+        n_edges=n_real_edges,
+        labels=_pad_to(rng.integers(0, n_classes, n_nodes).astype(np.int32),
+                       pn),
+        label_mask=_pad_to(
+            (rng.random(n_nodes) < 0.1).astype(np.int32), pn
+        ),
+        coords=_pad_to(rng.standard_normal((n_nodes, 3)).astype(np.float32),
+                       pn) if with_coords else None,
+    )
+
+
+def molecule_batch(
+    seed: int,
+    *,
+    n_graphs: int,
+    nodes_per_graph: int,
+    edges_per_graph: int,
+    d_feat: int,
+    n_classes: int,
+) -> dict:
+    """Batch of small graphs flattened into one padded graph + graph_id."""
+    rng = np.random.default_rng(seed)
+    N = n_graphs * nodes_per_graph
+    E = n_graphs * edges_per_graph
+    offs = np.repeat(
+        np.arange(n_graphs, dtype=np.int32) * nodes_per_graph, edges_per_graph
+    )
+    src = rng.integers(0, nodes_per_graph, E).astype(np.int32) + offs
+    dst = rng.integers(0, nodes_per_graph, E).astype(np.int32) + offs
+    return {
+        "x": rng.standard_normal((N, d_feat)).astype(np.float32),
+        "coords": rng.standard_normal((N, 3)).astype(np.float32),
+        "edge_src": src,
+        "edge_dst": dst,
+        "n_nodes": np.int32(N),
+        "n_edges": np.int32(E),
+        "graph_id": np.repeat(
+            np.arange(n_graphs, dtype=np.int32), nodes_per_graph
+        ),
+        "graph_labels": rng.integers(0, n_classes, n_graphs).astype(np.int32),
+        "labels": np.zeros((N,), np.int32),
+        "label_mask": np.zeros((N,), np.int32),
+    }
+
+
+class PaddedCSR:
+    """Fixed-max-degree CSR for O(1) uniform neighbor sampling."""
+
+    def __init__(self, src: np.ndarray, dst: np.ndarray, n_nodes: int,
+                 max_degree: int):
+        order = np.argsort(dst, kind="stable")
+        s, d = src[order], dst[order]
+        self.n_nodes = n_nodes
+        self.max_degree = max_degree
+        self.neighbors = np.zeros((n_nodes, max_degree), np.int32)
+        self.degrees = np.bincount(d, minlength=n_nodes).astype(np.int32)
+        starts = np.concatenate([[0], np.cumsum(self.degrees)[:-1]])
+        for v in range(n_nodes):
+            deg = min(self.degrees[v], max_degree)
+            self.neighbors[v, :deg] = s[starts[v] : starts[v] + deg]
+        self.degrees = np.minimum(self.degrees, max_degree)
+
+
+def sample_subgraph(
+    csr: PaddedCSR,
+    rng: np.random.Generator,
+    batch_nodes: np.ndarray,
+    fanouts: list[int],
+) -> dict:
+    """GraphSAGE-style layered uniform sampling.
+
+    Returns a flattened subgraph: frontier-0 = batch nodes; layer l edges
+    connect sampled neighbors (src) to layer-(l-1) nodes (dst), with LOCAL
+    node ids into the concatenated node list.
+    """
+    nodes = [batch_nodes.astype(np.int32)]
+    edges_src_local: list[np.ndarray] = []
+    edges_dst_local: list[np.ndarray] = []
+    offset = 0
+    frontier = batch_nodes.astype(np.int32)
+    for fanout in fanouts:
+        deg = np.maximum(csr.degrees[frontier], 1)
+        draw = rng.integers(0, 1 << 31, size=(len(frontier), fanout))
+        picks = draw % deg[:, None]
+        neigh = csr.neighbors[frontier[:, None],
+                              picks.astype(np.int32)]  # [f, fanout]
+        has_edge = (csr.degrees[frontier] > 0)[:, None]
+        new_local_base = offset + len(frontier)
+        src_local = (
+            new_local_base
+            + np.arange(neigh.size, dtype=np.int32).reshape(neigh.shape)
+        )
+        dst_local = np.broadcast_to(
+            offset + np.arange(len(frontier), dtype=np.int32)[:, None],
+            neigh.shape,
+        )
+        keep = np.broadcast_to(has_edge, neigh.shape).reshape(-1)
+        edges_src_local.append(src_local.reshape(-1)[keep])
+        edges_dst_local.append(dst_local.reshape(-1)[keep])
+        nodes.append(neigh.reshape(-1))
+        offset = new_local_base
+        frontier = neigh.reshape(-1)
+    all_nodes = np.concatenate(nodes)
+    return {
+        "node_ids": all_nodes,  # global ids, for feature gather
+        "edge_src": np.concatenate(edges_src_local),
+        "edge_dst": np.concatenate(edges_dst_local),
+        "n_targets": len(batch_nodes),
+    }

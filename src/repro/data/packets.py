@@ -1,0 +1,111 @@
+"""Synthetic network traffic + pcap-lite on-disk format.
+
+The paper generates traffic two ways: replaying a PCAP (dpdk-burst-replay)
+and wire-rate random 64-byte frames (pktgen). The analogues here:
+
+* ``uniform_traffic`` — uniform random (src, dst) over the 2^32 space,
+  matching the paper's "simulated random packets" (worst case for the
+  builder: nearly all coordinates unique).
+* ``zipf_traffic`` — heavy-tailed traffic over a host pool, matching real
+  internet traffic (CAIDA-style), which exercises duplicate accumulation.
+* ``PcapLite`` — a minimal binary capture format (magic + uint32 pairs,
+  optionally zstd-compressed) so ingest can replay files like the DPU
+  replays PCAPs.
+
+Generation is numpy on the host (it plays the role of the NIC), so the
+device pipeline's measured rate is pure GraphBLAS(+transfer) work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import struct
+from pathlib import Path
+from typing import Iterator
+
+import numpy as np
+
+try:
+    import zstandard
+except ImportError:  # pragma: no cover
+    zstandard = None
+
+MAGIC = b"PCAPLITE"
+VERSION = 1
+
+
+def uniform_traffic(rng: np.random.Generator, n: int) -> np.ndarray:
+    """[n, 2] uint32 uniform random packets."""
+    return rng.integers(0, 1 << 32, size=(n, 2), dtype=np.uint32)
+
+
+def zipf_traffic(
+    rng: np.random.Generator,
+    n: int,
+    *,
+    n_hosts: int = 100_000,
+    alpha: float = 1.2,
+) -> np.ndarray:
+    """[n, 2] uint32 heavy-tailed traffic over a random host pool."""
+    hosts = rng.integers(0, 1 << 32, size=n_hosts, dtype=np.uint32)
+    ranks_s = rng.zipf(alpha, size=n) % n_hosts
+    ranks_d = rng.zipf(alpha, size=n) % n_hosts
+    return np.stack([hosts[ranks_s], hosts[ranks_d]], axis=1)
+
+
+@dataclasses.dataclass
+class PcapLite:
+    """Minimal packet capture: sequence of (src, dst) uint32 pairs."""
+
+    @staticmethod
+    def write(path: str | Path, packets: np.ndarray,
+              compress: bool = True) -> None:
+        packets = np.ascontiguousarray(packets.astype(np.uint32))
+        raw = packets.tobytes()
+        flags = 0
+        if compress and zstandard is not None:
+            raw = zstandard.ZstdCompressor(level=3).compress(raw)
+            flags |= 1
+        header = MAGIC + struct.pack("<HHQ", VERSION, flags, packets.shape[0])
+        Path(path).write_bytes(header + raw)
+
+    @staticmethod
+    def read(path: str | Path) -> np.ndarray:
+        blob = Path(path).read_bytes()
+        assert blob[:8] == MAGIC, "not a pcap-lite file"
+        version, flags, n = struct.unpack("<HHQ", blob[8:20])
+        assert version == VERSION
+        raw = blob[20:]
+        if flags & 1:
+            if zstandard is None:
+                raise RuntimeError("zstandard required to read this capture")
+            raw = zstandard.ZstdDecompressor().decompress(raw)
+        return np.frombuffer(raw, dtype=np.uint32).reshape(n, 2).copy()
+
+    @staticmethod
+    def stream_windows(path: str | Path, window: int) -> Iterator[np.ndarray]:
+        pkts = PcapLite.read(path)
+        for i in range(0, len(pkts) - window + 1, window):
+            yield pkts[i : i + window]
+
+
+def traffic_batches(
+    seed: int,
+    *,
+    n_batches: int,
+    windows_per_batch: int,
+    window_size: int,
+    kind: str = "uniform",
+) -> Iterator[np.ndarray]:
+    """The paper's workload: batches of [W, window, 2] random packets."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        n = windows_per_batch * window_size
+        if kind == "uniform":
+            flat = uniform_traffic(rng, n)
+        elif kind == "zipf":
+            flat = zipf_traffic(rng, n)
+        else:
+            raise ValueError(kind)
+        yield flat.reshape(windows_per_batch, window_size, 2)

@@ -1,0 +1,53 @@
+"""Collective helpers for shard_map code paths.
+
+``compressed_psum`` implements the int8 error-feedback gradient reduction
+for the slow cross-pod (DCN) axis: payloads cross the wire as int8
+(+ one fp32 scale per tensor), a 4x byte reduction against fp32 all-reduce
+on small pod counts, dequantized and summed locally.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.grad import int8_compress
+
+Params = Any
+
+
+def psum_tree(tree: Params, axis_name: str) -> Params:
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), tree)
+
+
+def pmean_tree(tree: Params, axis_name: str) -> Params:
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), tree)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """all-reduce(x) with int8 on-the-wire payload (all-gather + local sum).
+
+    Exact for the quantized values; pair with error feedback
+    (optim.grad.error_feedback_compress) to keep training unbiased.
+    """
+    q, scale = int8_compress(x)
+    qg = jax.lax.all_gather(q, axis_name)          # [N, ...] int8
+    sg = jax.lax.all_gather(scale, axis_name)      # [N] fp32
+    deq = qg.astype(jnp.float32) * sg.reshape(
+        (-1,) + (1,) * (qg.ndim - 1)
+    )
+    return deq.sum(axis=0).astype(x.dtype)
+
+
+def compressed_psum_tree(tree: Params, axis_name: str) -> Params:
+    return jax.tree.map(lambda x: compressed_psum(x, axis_name), tree)
+
+
+def reduce_scatter_mean(x: jax.Array, axis_name: str,
+                        scatter_dim: int = 0) -> jax.Array:
+    n = jax.lax.psum(1, axis_name)
+    return jax.lax.psum_scatter(
+        x, axis_name, scatter_dimension=scatter_dim, tiled=True
+    ) / n

@@ -1,0 +1,174 @@
+"""Fault tolerance control plane: heartbeats, straggler policy, elastic
+re-meshing.
+
+On a real multi-pod deployment these hooks sit in the launcher process group
+(one agent per host). The *policy logic* is hardware-independent and fully
+tested here:
+
+  * ``HeartbeatMonitor`` tracks per-host step completion times and flags
+    hosts whose step latency exceeds ``threshold x`` the rolling median
+    (classic straggler detection);
+  * ``StragglerPolicy`` decides: tolerate / drop-contribution (the step
+    proceeds with the straggler's microbatch dropped and gradients rescaled
+    by the surviving fraction) / evict (trigger elastic re-mesh);
+  * ``plan_mesh`` re-plans the (pod, data, model) mesh after losing hosts —
+    model parallelism is pinned (params must fit), data parallelism shrinks;
+    paired with the topology-free checkpoints this is the elastic-restart
+    path: detect -> re-plan -> restore -> continue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Iterable
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_step: int = -1
+    last_beat: float = 0.0
+    step_times: list = dataclasses.field(default_factory=list)
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_hosts: int, window: int = 16,
+                 straggle_factor: float = 3.0, dead_after_s: float = 60.0):
+        self.hosts = {h: HostState(h) for h in range(n_hosts)}
+        self.window = window
+        self.straggle_factor = straggle_factor
+        self.dead_after_s = dead_after_s
+
+    def beat(self, host_id: int, step: int, step_time_s: float,
+             now: float | None = None) -> None:
+        h = self.hosts[host_id]
+        h.last_step = step
+        h.last_beat = now if now is not None else time.monotonic()
+        h.step_times.append(step_time_s)
+        if len(h.step_times) > self.window:
+            h.step_times.pop(0)
+
+    def median_step_time(self) -> float:
+        times = [
+            statistics.median(h.step_times)
+            for h in self.hosts.values()
+            if h.alive and h.step_times
+        ]
+        return statistics.median(times) if times else 0.0
+
+    def stragglers(self) -> list[int]:
+        med = self.median_step_time()
+        if med <= 0:
+            return []
+        out = []
+        for h in self.hosts.values():
+            if h.alive and h.step_times:
+                if statistics.median(h.step_times) > self.straggle_factor * med:
+                    out.append(h.host_id)
+        return out
+
+    def dead(self, now: float | None = None) -> list[int]:
+        now = now if now is not None else time.monotonic()
+        return [
+            h.host_id
+            for h in self.hosts.values()
+            if h.alive and h.last_beat > 0
+            and now - h.last_beat > self.dead_after_s
+        ]
+
+    def mark_dead(self, host_id: int) -> None:
+        self.hosts[host_id].alive = False
+
+    def alive_hosts(self) -> list[int]:
+        return [h.host_id for h in self.hosts.values() if h.alive]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyDecision:
+    action: str            # "proceed" | "drop" | "evict"
+    hosts: tuple = ()
+    grad_rescale: float = 1.0
+
+
+class StragglerPolicy:
+    """Deadline-based mitigation: tolerate brief lag, drop persistent
+    stragglers' contributions (rescaling gradients), evict dead hosts."""
+
+    def __init__(self, monitor: HeartbeatMonitor,
+                 drop_after_straggles: int = 3):
+        self.monitor = monitor
+        self.drop_after = drop_after_straggles
+        self._counts: dict[int, int] = {}
+
+    def evaluate(self, now: float | None = None) -> PolicyDecision:
+        dead = self.monitor.dead(now)
+        if dead:
+            return PolicyDecision("evict", tuple(dead))
+        stragglers = self.monitor.stragglers()
+        persistent = []
+        for h in list(self._counts):
+            if h not in stragglers:
+                self._counts[h] = 0
+        for h in stragglers:
+            self._counts[h] = self._counts.get(h, 0) + 1
+            if self._counts[h] >= self.drop_after:
+                persistent.append(h)
+        if persistent:
+            n = len(self.monitor.alive_hosts())
+            surviving = max(n - len(persistent), 1)
+            return PolicyDecision(
+                "drop", tuple(persistent), grad_rescale=n / surviving
+            )
+        return PolicyDecision("proceed")
+
+
+def plan_mesh(
+    n_devices: int,
+    *,
+    model_parallel: int = 16,
+    devices_per_pod: int = 256,
+) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest usable (pod, data, model) mesh for a device count.
+
+    Model parallelism is pinned (parameter shards must fit); whole pods are
+    used when possible; leftover devices idle (reported by caller).
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need at least model_parallel={model_parallel} devices, "
+            f"got {n_devices}"
+        )
+    pods = n_devices // devices_per_pod
+    if pods >= 2:
+        data = devices_per_pod // model_parallel
+        return (pods, data, model_parallel), ("pod", "data", "model")
+    data = n_devices // model_parallel
+    return (data, model_parallel), ("data", "model")
+
+
+def elastic_transition(
+    current_devices: Iterable[int],
+    failed: Iterable[int],
+    *,
+    model_parallel: int = 16,
+    devices_per_pod: int = 256,
+):
+    """Devices after failure -> new mesh plan + devices left idle."""
+    remaining = sorted(set(current_devices) - set(failed))
+    shape, axes = plan_mesh(
+        len(remaining),
+        model_parallel=model_parallel,
+        devices_per_pod=devices_per_pod,
+    )
+    used = 1
+    for s in shape:
+        used *= s
+    return {
+        "devices": remaining[:used],
+        "idle": remaining[used:],
+        "mesh_shape": shape,
+        "mesh_axes": axes,
+    }

@@ -1,0 +1,183 @@
+"""Sharding rules: parameter and batch PartitionSpecs per arch family.
+
+Path-pattern rules map parameter pytree paths to PartitionSpecs given the
+mesh's axis names, implementing:
+  * Megatron-style tensor parallelism over `model` for transformer QKV/O and
+    MLP up/down, vocab-sharded embedding + LM head;
+  * expert parallelism over `model` for MoE expert weights;
+  * row-sharded embedding tables over `model` for recsys;
+  * replicated (tiny) GNN parameters with edge-sharded batches;
+  * data parallelism over `pod` x `data` for every batch-like axis.
+
+Optimizer state inherits parameter specs; ``zero1_specs`` additionally
+shards replicated-state dims over `data` (ZeRO-1).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+
+def mesh_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes used for data parallelism (pod + data when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes_for(batch_size: int, mesh: Mesh):
+    """Largest prefix-combination of dp axes that divides batch_size."""
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        size = mesh.shape[a]
+        if batch_size % (prod * size) == 0:
+            axes.append(a)
+            prod *= size
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def all_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# rule engine
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def specs_from_rules(params: Params, rules: list[tuple[str, P]]) -> Params:
+    """Per-leaf PartitionSpec from the first matching path regex."""
+    compiled = [(re.compile(pat), spec) for pat, spec in rules]
+
+    def pick(path, leaf):
+        s = _path_str(path)
+        for pat, spec in compiled:
+            if pat.search(s):
+                if len(spec) > leaf.ndim:
+                    raise ValueError(
+                        f"spec {spec} has more axes than leaf {s} "
+                        f"{leaf.shape}"
+                    )
+                return spec
+        return P()
+
+    return jax.tree_util.tree_map_with_path(pick, params)
+
+
+# ---------------------------------------------------------------------------
+# per-family parameter rules  (mesh must have a `model` axis)
+# ---------------------------------------------------------------------------
+def transformer_param_rules(*, replicate_kv: bool = False
+                            ) -> list[tuple[str, P]]:
+    # stacked layers carry a leading layer axis (lax.scan over depth)
+    #
+    # replicate_kv: GQA-aware TP. When n_kv_heads < TP size, sharding the
+    # K/V projections forces a (kv_heads, d_head) split that SPMD can only
+    # reshard by full rematerialization (observed on granite/llama GQA at
+    # TP=16). Replicating the small K/V projections removes every resulting
+    # collective-permute/all-gather; Q/O stay fully sharded.
+    kv_spec = P() if replicate_kv else P(None, None, "model")
+    kv_bias = P() if replicate_kv else P(None, "model")
+    return [
+        (r"layers/attn/w[kv]$", kv_spec),
+        (r"layers/attn/wq$", P(None, None, "model")),
+        (r"layers/attn/wo$", P(None, "model", None)),
+        (r"layers/attn/b[kv]$", kv_bias),
+        (r"layers/attn/bq$", P(None, "model")),
+        (r"layers/moe/router$", P()),
+        (r"layers/moe/w_(gate|up)$", P(None, "model", None, None)),
+        (r"layers/moe/w_down$", P(None, "model", None, None)),
+        (r"layers/moe/shared/w_(gate|up)$", P(None, None, "model")),
+        (r"layers/moe/shared/w_down$", P(None, "model", None)),
+        (r"layers/mlp/w_(gate|up)$", P(None, None, "model")),
+        (r"layers/mlp/w_down$", P(None, "model", None)),
+        (r"^embed$", P("model", None)),
+        (r"^lm_head$", P(None, "model")),
+        # norms and everything else: replicated
+    ]
+
+
+def recsys_param_rules(**_) -> list[tuple[str, P]]:
+    return [
+        (r"(user|item)_table$", P("model", None)),
+        # tower MLPs are small: replicate
+    ]
+
+
+def gnn_param_rules(**_) -> list[tuple[str, P]]:
+    return []  # tiny params, fully replicated
+
+
+def param_specs(params: Params, family: str, **opts) -> Params:
+    rules = {
+        "transformer": transformer_param_rules,
+        "recsys": recsys_param_rules,
+        "gnn": gnn_param_rules,
+        "traffic": gnn_param_rules,  # no params
+    }[family](**opts)
+    return specs_from_rules(params, rules)
+
+
+def named_shardings(specs: Params, mesh: Mesh) -> Params:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# optimizer state
+# ---------------------------------------------------------------------------
+def opt_state_specs(params_specs: Params, opt_state, *,
+                    zero1: bool = False, mesh: Mesh | None = None,
+                    params: Params | None = None):
+    """Moments inherit param specs; optionally ZeRO-1 shard over `data`."""
+
+    def moment_specs():
+        if not zero1:
+            return params_specs
+        assert mesh is not None and params is not None
+        dsize = mesh.shape.get("data", 1)
+
+        def shard_more(spec, p):
+            if spec and spec[0] is not None:
+                return spec  # already sharded on dim 0 (TP)
+            if p.ndim >= 1 and p.shape[0] % dsize == 0 and dsize > 1:
+                rest = tuple(spec[1:]) if spec else (None,) * (p.ndim - 1)
+                return P("data", *rest)
+            return spec
+
+        return jax.tree.map(
+            shard_more, params_specs, params,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    ms = moment_specs()
+    from repro.optim.optimizers import OptState
+
+    return OptState(
+        step=P(),
+        mu=ms,
+        nu=ms if opt_state.nu is not None else None,
+    )

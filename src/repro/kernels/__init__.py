@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel lives in its own subpackage with three files:
+  kernel.py — the pl.pallas_call + BlockSpec implementation (TPU target),
+  ops.py    — the jit'd public wrapper (interpret=True on CPU hosts),
+  ref.py    — the pure-jnp oracle the kernel is tested against.
+
+Kernels:
+  segsum    — sorted-run segment sum with cross-block carry: the
+              GrB_Matrix_build duplicate-accumulation hot loop.
+  spmm_coo  — 2D-blocked COO SpMM (scatter-add as one-hot MXU matmul):
+              traffic-matrix x dense products and GNN aggregation.
+  sddmm     — blocked sampled dense-dense dot (GAT edge scores).
+  embed_bag — EmbeddingBag as plus_times SpMM (reuses spmm_coo): the
+              recsys lookup hot path.
+"""
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless running on a real TPU."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,57 @@
+"""EmbeddingBag as hypersparse SpMM.
+
+A bag lookup is exactly C = A @ T where A is the (bags x vocab) multi-hot
+incidence matrix — i.e. GraphBLAS plus_times mxm with a hypersparse operand.
+So the hot path reuses the spmm_coo Pallas kernel verbatim: rows = bag ids,
+cols = category ids, vals = per-sample weights. One kernel, three users
+(traffic matrices, GNN aggregation, recsys lookup).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm_coo import ops as spmm_ops
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_bags", "mode", "tile_r", "tile_c", "cap",
+                     "interpret", "strict"),
+)
+def embedding_bag(
+    table: jax.Array,
+    indices: jax.Array,
+    bag_ids: jax.Array,
+    *,
+    num_bags: int,
+    weights: jax.Array | None = None,
+    n_valid=None,
+    mode: str = "sum",
+    tile_r: int = spmm_ops.DEFAULT_TILE_R,
+    tile_c: int = spmm_ops.DEFAULT_TILE_C,
+    cap: int = spmm_ops.DEFAULT_CAP,
+    interpret: bool | None = None,
+    strict: bool = True,
+) -> jax.Array:
+    n = indices.shape[0]
+    if n_valid is None:
+        n_valid = jnp.int32(n)
+    w = jnp.ones((n,), table.dtype) if weights is None else weights
+    out = spmm_ops.spmm_coo(
+        bag_ids, indices, w, table, n_valid,
+        num_rows=num_bags, tile_r=tile_r, tile_c=tile_c, cap=cap,
+        interpret=interpret, strict=strict,
+    )
+    if mode == "mean":
+        valid = jnp.arange(n, dtype=jnp.int32) < n_valid
+        counts = jax.ops.segment_sum(
+            jnp.where(valid, 1.0, 0.0),
+            jnp.minimum(bag_ids.astype(jnp.int32), num_bags - 1),
+            num_segments=num_bags,
+        )
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    return out

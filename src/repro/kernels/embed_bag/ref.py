@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for EmbeddingBag.
+
+JAX has no native nn.EmbeddingBag; the reference is the canonical
+gather + segment-reduce construction over (bag_ids, indices, weights).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jax.Array,      # [vocab, dim]
+    indices: jax.Array,    # int32[n] token/category ids
+    bag_ids: jax.Array,    # int32[n] which bag each index belongs to
+    num_bags: int,
+    weights: jax.Array | None = None,
+    n_valid=None,
+    mode: str = "sum",
+) -> jax.Array:
+    n = indices.shape[0]
+    valid = (
+        jnp.arange(n, dtype=jnp.int32) < n_valid
+        if n_valid is not None
+        else jnp.ones((n,), bool)
+    )
+    idx = jnp.minimum(indices.astype(jnp.int32), table.shape[0] - 1)
+    w = jnp.ones((n,), table.dtype) if weights is None else weights
+    w = jnp.where(valid, w, 0)
+    bags = jnp.where(valid, bag_ids.astype(jnp.int32), num_bags)
+    gathered = table[idx] * w[:, None]
+    summed = jax.ops.segment_sum(gathered, bags, num_segments=num_bags + 1)[
+        :num_bags
+    ]
+    if mode == "sum":
+        return summed
+    if mode == "mean":
+        counts = jax.ops.segment_sum(
+            jnp.where(valid, 1.0, 0.0), bags, num_segments=num_bags + 1
+        )[:num_bags]
+        return summed / jnp.maximum(counts, 1.0)[:, None]
+    raise ValueError(f"unsupported mode {mode}")

@@ -1,0 +1,68 @@
+"""Blocked SDDMM Pallas kernel: per-edge dense-dense dots.
+
+e_k = <U[r_k, :], V[c_k, :]> for edges routed into (row-tile x col-tile)
+cells. The GAT edge-score primitive (and the masked-attention primitive in
+GraphBLAS terms: (U V^T) .* pattern(A)).
+
+Mapping: grid = (row_tiles, col_tiles); each step gathers the edge's U row
+from the VMEM U row-tile and V row from the VMEM V col-tile (sublane
+gathers), then reduces elementwise products over the lane (feature) axis —
+pure VPU work with perfectly aligned tiles. Output is cell-major edge slots;
+the wrapper scatters scores back to original edge order.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sddmm_kernel(lr_ref, lc_ref, u_ref, v_ref, out_ref):
+    lr = lr_ref[0]  # [cap] int32
+    lc = lc_ref[0]  # [cap] int32
+    u = u_ref[...]  # [TR, D]
+    v = v_ref[...]  # [TC, D]
+    ug = jnp.take(u, lr, axis=0)  # [cap, D]
+    vg = jnp.take(v, lc, axis=0)  # [cap, D]
+    out_ref[0] = jnp.sum(
+        ug.astype(jnp.float32) * vg.astype(jnp.float32), axis=1
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_r", "tile_c", "interpret")
+)
+def sddmm_bucketed(
+    local_rows: jax.Array,  # int32[RT*CT, cap]
+    local_cols: jax.Array,  # int32[RT*CT, cap]
+    u: jax.Array,           # [RT*TR, D]
+    v: jax.Array,           # [CT*TC, D]
+    *,
+    tile_r: int,
+    tile_c: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-cell edge scores [RT*CT, cap] fp32."""
+    n_cells, cap = local_rows.shape
+    rt = u.shape[0] // tile_r
+    ct = v.shape[0] // tile_c
+    assert rt * ct == n_cells, (rt, ct, n_cells)
+    d = u.shape[1]
+
+    cell_spec = pl.BlockSpec((1, cap), lambda i, j, ct=ct: (i * ct + j, 0))
+    return pl.pallas_call(
+        _sddmm_kernel,
+        grid=(rt, ct),
+        in_specs=[
+            cell_spec,
+            cell_spec,
+            pl.BlockSpec((tile_r, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_c, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=cell_spec,
+        out_shape=jax.ShapeDtypeStruct((n_cells, cap), jnp.float32),
+        interpret=interpret,
+    )(local_rows, local_cols, u, v)

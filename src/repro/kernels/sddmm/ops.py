@@ -1,0 +1,85 @@
+"""Public SDDMM wrapper: bucket, kernel, un-bucket, exact overflow fix-up."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.bucketing import bucket_coo_2d
+from repro.kernels.sddmm import kernel
+from repro.kernels.sddmm.ref import sddmm_ref
+
+DEFAULT_TILE_R = 256
+DEFAULT_TILE_C = 256
+DEFAULT_CAP = 512
+
+
+def _pad_axis(x, mult, axis, fill=0):
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_r", "tile_c", "cap", "interpret", "strict"),
+)
+def sddmm(
+    rows: jax.Array,
+    cols: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    n_valid=None,
+    *,
+    tile_r: int = DEFAULT_TILE_R,
+    tile_c: int = DEFAULT_TILE_C,
+    cap: int = DEFAULT_CAP,
+    interpret: bool | None = None,
+    strict: bool = True,
+) -> jax.Array:
+    """Edge scores in original edge order, fp32."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = rows.shape[0]
+    if n_valid is None:
+        n_valid = jnp.int32(n)
+    num_rows, num_cols = u.shape[0], v.shape[0]
+    tile_r = min(tile_r, max(8, num_rows))
+    tile_c = min(tile_c, max(8, num_cols))
+
+    ones = jnp.ones((n,), jnp.float32)
+    b = bucket_coo_2d(
+        rows, cols, ones, n_valid,
+        num_rows=num_rows, num_cols=num_cols,
+        tile_r=tile_r, tile_c=tile_c, cap=cap,
+    )
+    up = _pad_axis(_pad_axis(u, tile_r, 0), 128, 1)
+    vp = _pad_axis(_pad_axis(v, tile_c, 0), 128, 1)
+    scores = kernel.sddmm_bucketed(
+        b.local_rows, b.local_cols, up, vp,
+        tile_r=tile_r, tile_c=tile_c, interpret=interpret,
+    )  # [n_cells, cap]
+
+    in_cap = b.slot_of_edge < cap
+    flat = jnp.where(
+        in_cap,
+        b.cell_of_edge * cap + jnp.minimum(b.slot_of_edge, cap - 1),
+        0,
+    )
+    out = jnp.where(
+        in_cap & (jnp.arange(n, dtype=jnp.int32) < n_valid),
+        scores.reshape(-1)[jnp.clip(flat, 0, scores.size - 1)],
+        0.0,
+    )
+    if strict:
+        over = ~in_cap & (jnp.arange(n, dtype=jnp.int32) < n_valid)
+        fallback = sddmm_ref(rows, cols, u, v, n_valid)
+        out = jnp.where(over, fallback, out)
+    return out

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the sddmm kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def sddmm_ref(rows, cols, u, v, n_valid=None):
+    """e_k = <U[rows_k], V[cols_k]>, fp32; invalid edges -> 0."""
+    n = rows.shape[0]
+    r = jnp.minimum(rows.astype(jnp.int32), u.shape[0] - 1)
+    c = jnp.minimum(cols.astype(jnp.int32), v.shape[0] - 1)
+    out = jnp.sum(
+        u[r].astype(jnp.float32) * v[c].astype(jnp.float32), axis=1
+    )
+    if n_valid is not None:
+        out = jnp.where(jnp.arange(n, dtype=jnp.int32) < n_valid, out, 0.0)
+    return out

@@ -1,0 +1,117 @@
+"""Sorted-run segment-sum Pallas kernel: the GrB build duplicate-accumulate
+hot loop.
+
+Problem: given values ``v[n]`` and *non-decreasing* segment ids ``seg[n]``
+(the post-sort state inside ``matrix_build``), produce, at the CLOSING
+position of every run, the total of that run (other positions get 0). The
+wrapper then scatters the per-run totals wherever the caller needs them
+(segment space for ``segment_sum_sorted``, or kept in position space for the
+fused dedup path).
+
+TPU-native formulation — no gathers, no scatters inside the kernel:
+
+  * a **segmented inclusive scan** (``lax.associative_scan`` over
+    (value, start-flag) pairs, log2(B) vector ops) gives the running
+    within-run total at every position;
+  * a run *closes* at position i iff ``seg[i] != seg[i+1]`` (the wrapper
+    passes a globally shifted copy, so block boundaries need no peeking);
+  * runs crossing block boundaries are handled with an SMEM **carry**
+    (partial total + segment id of the open run), legal because TPU Pallas
+    grids execute sequentially.
+
+BlockSpec: 1D blocks of ``block_size`` elements (multiple of 128 lanes);
+the value/seg/shifted-seg streams are tiled identically; output is tiled
+the same so every grid step touches O(block) VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 2048  # 16 sublanes x 128 lanes of fp32
+
+
+def _seg_scan(vals, starts):
+    """Segmented inclusive scan: cumsum that restarts where starts=1."""
+
+    def combine(a, b):
+        va, fa = a
+        vb, fb = b
+        return jnp.where(fb, vb, va + vb), fa | fb
+
+    total, _ = jax.lax.associative_scan(combine, (vals, starts))
+    return total
+
+
+def _segsum_kernel(seg_ref, nxt_ref, val_ref, out_ref, carry_val, carry_seg):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_val[0] = jnp.zeros((), val_ref.dtype)
+        carry_seg[0] = jnp.int32(-1)
+
+    seg = seg_ref[...]
+    nxt = nxt_ref[...]
+    val = val_ref[...]
+
+    starts = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), seg[1:] != seg[:-1]]
+    )
+    running = _seg_scan(val, starts)
+
+    # splice the carry into the first run if it continues the open run
+    cont = seg == seg[0]
+    carry_here = jnp.where(
+        cont & (carry_seg[0] == seg[0]), carry_val[0], jnp.zeros((), val.dtype)
+    )
+    running = running + carry_here
+
+    closes = seg != nxt
+    out_ref[...] = jnp.where(closes, running, jnp.zeros((), val.dtype))
+
+    # update carry: open iff the block's last run does not close at the end
+    last_open = ~closes[-1]
+    carry_val[0] = jnp.where(last_open, running[-1], jnp.zeros((), val.dtype))
+    carry_seg[0] = jnp.where(last_open, seg[-1], jnp.int32(-1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def run_totals(
+    vals: jax.Array,
+    seg: jax.Array,
+    *,
+    block_size: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-run totals at closing positions (0 elsewhere). 1D, padded inputs.
+
+    vals: [n] float/int values; seg: [n] int32 non-decreasing segment ids.
+    n must be a multiple of ``block_size`` (wrapper pads: padding must use a
+    segment id strictly greater than every real id, with value 0).
+    """
+    n = vals.shape[0]
+    assert n % block_size == 0, (n, block_size)
+    seg = seg.astype(jnp.int32)
+    # seg of the next element; the final element always closes its run
+    nxt = jnp.concatenate([seg[1:], jnp.full((1,), jnp.int32(0x7FFFFFFF))])
+
+    grid = (n // block_size,)
+    spec = pl.BlockSpec((block_size,), lambda i: (i,))
+    return pl.pallas_call(
+        _segsum_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), vals.dtype),
+        scratch_shapes=[
+            pltpu.SMEM((1,), vals.dtype),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(seg, nxt, vals)

@@ -1,0 +1,78 @@
+"""Public wrappers for the segsum kernel (jit'd, CPU interpret fallback)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.segsum import kernel
+
+_PAD_SEG = jnp.int32(0x7FFFFFFE)  # sorts after every real id; != close sentinel
+
+
+def _pad(vals, seg, block_size):
+    n = vals.shape[0]
+    m = -(-n // block_size) * block_size
+    if m == n:
+        return vals, seg
+    pad = m - n
+    vals = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
+    seg = jnp.concatenate([seg, jnp.full((pad,), _PAD_SEG)])
+    return vals, seg
+
+
+def _pick_block(n: int, block_size: int | None) -> int:
+    if block_size is not None:
+        return block_size
+    if n <= kernel.DEFAULT_BLOCK:
+        return max(128, -(-n // 128) * 128)
+    return kernel.DEFAULT_BLOCK
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_size", "interpret")
+)
+def segment_sum_sorted(
+    vals: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    block_size: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Segment sum for sorted ``seg`` via the Pallas run-total kernel.
+
+    Drop-in for ``jax.ops.segment_sum`` under the sortedness precondition
+    (which ``matrix_build`` guarantees). Out-of-range segment ids are
+    dropped, matching the padding discipline of the build pipeline.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    seg = seg.astype(jnp.int32)
+    bs = _pick_block(vals.shape[0], block_size)
+    pvals, pseg = _pad(vals, seg, bs)
+    totals = kernel.run_totals(pvals, pseg, block_size=bs, interpret=interpret)
+    out = jnp.zeros((num_segments,), vals.dtype)
+    return out.at[pseg].add(totals, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def run_totals(
+    vals: jax.Array,
+    seg: jax.Array,
+    *,
+    block_size: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Position-space per-run totals (fused dedup fast path)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = vals.shape[0]
+    seg = seg.astype(jnp.int32)
+    bs = _pick_block(n, block_size)
+    pvals, pseg = _pad(vals, seg, bs)
+    totals = kernel.run_totals(pvals, pseg, block_size=bs, interpret=interpret)
+    return totals[:n]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the segsum kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def run_totals_ref(vals: jax.Array, seg: jax.Array) -> jax.Array:
+    """Per-run totals at closing positions, 0 elsewhere.
+
+    seg must be non-decreasing. Mirrors kernel semantics exactly.
+    """
+    seg = seg.astype(jnp.int32)
+    n = vals.shape[0]
+    totals = jax.ops.segment_sum(vals, seg, num_segments=n + 1)
+    nxt = jnp.concatenate([seg[1:], jnp.full((1,), jnp.int32(0x7FFFFFFF))])
+    closes = seg != nxt
+    return jnp.where(closes, totals[jnp.clip(seg, 0, n)], jnp.zeros_like(vals))
+
+
+def segment_sum_sorted_ref(
+    vals: jax.Array, seg: jax.Array, num_segments: int
+) -> jax.Array:
+    """Plain sorted segment-sum into segment space (the dedup contract)."""
+    return jax.ops.segment_sum(vals, seg.astype(jnp.int32),
+                               num_segments=num_segments)

@@ -1,0 +1,92 @@
+"""2D-blocked COO SpMM Pallas kernel.
+
+C[i, :] += v_e * X[j, :] over edges e = (i, j, v), with edges pre-routed
+into (row-tile x col-tile) cells (see ``kernels.bucketing``).
+
+TPU-native mapping:
+  * grid = (row_tiles, col_tiles); the col-tile axis is the contraction
+    axis — output tiles are revisited and accumulated across it (sequential
+    grid, so the accumulation is race-free);
+  * the gather X[local_cols] reads rows of the VMEM-resident X col-tile
+    (sublane gather);
+  * the scatter-add into the output tile is expressed as a ONE-HOT MATMUL:
+    onehot(local_rows)^T @ (v * X[local_cols]) — turning irregular
+    scatter-add into dense MXU work, which is the whole point of blocking
+    the hypersparse matrix;
+  * all tile dims (TR, TC, cap, D) should be multiples of 8/128 for
+    sublane/lane alignment; accumulation is fp32 regardless of X dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(lr_ref, lc_ref, v_ref, x_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lr = lr_ref[0]  # [cap] int32 local row ids
+    lc = lc_ref[0]  # [cap] int32 local col ids
+    v = v_ref[0]    # [cap] values (0 for padding)
+
+    x = x_ref[...]  # [TC, D]
+    gathered = jnp.take(x, lc, axis=0)  # [cap, D] sublane gather
+    weighted = gathered * v[:, None].astype(x.dtype)
+
+    tr = out_ref.shape[0]
+    onehot = (
+        lr[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, tr), 1)
+    ).astype(x.dtype)  # [cap, TR]
+    contrib = jax.lax.dot_general(
+        onehot,
+        weighted,
+        (((0,), (0,)), ((), ())),  # contract over the edge axis
+        preferred_element_type=jnp.float32,
+    )  # [TR, D]
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_r", "tile_c", "interpret"),
+)
+def spmm_bucketed(
+    local_rows: jax.Array,  # int32[RT*CT, cap]
+    local_cols: jax.Array,  # int32[RT*CT, cap]
+    vals: jax.Array,        # [RT*CT, cap]
+    x: jax.Array,           # [CT*TC, D]
+    *,
+    tile_r: int,
+    tile_c: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Run the kernel over pre-bucketed edges. Returns [RT*tile_r, D] fp32."""
+    n_cells, cap = local_rows.shape
+    ct = x.shape[0] // tile_c
+    rt = n_cells // ct
+    d = x.shape[1]
+
+    cell_spec = pl.BlockSpec(
+        (1, cap), lambda i, j, ct=ct: (i * ct + j, 0)
+    )
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid=(rt, ct),
+        in_specs=[
+            cell_spec,
+            cell_spec,
+            cell_spec,
+            pl.BlockSpec((tile_c, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rt * tile_r, d), jnp.float32),
+        interpret=interpret,
+    )(local_rows, local_cols, vals, x)

@@ -1,0 +1,86 @@
+"""Public SpMM wrapper: bucket COO edges, run the Pallas kernel, fix up
+capacity overflow exactly.
+
+The bucketing capacity ``cap`` is a performance knob, not a correctness
+bound: edges that overflow their cell are accumulated through the jnp
+fallback path and added back in, so results are exact for any cap.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.bucketing import bucket_coo_2d
+from repro.kernels.spmm_coo import kernel
+from repro.kernels.spmm_coo.ref import spmm_coo_ref
+
+DEFAULT_TILE_R = 256
+DEFAULT_TILE_C = 256
+DEFAULT_CAP = 512
+
+
+def _pad_axis(x, mult, axis, fill=0):
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_rows", "tile_r", "tile_c", "cap", "interpret", "strict"
+    ),
+)
+def spmm_coo(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    x: jax.Array,
+    n_valid,
+    *,
+    num_rows: int,
+    tile_r: int = DEFAULT_TILE_R,
+    tile_c: int = DEFAULT_TILE_C,
+    cap: int = DEFAULT_CAP,
+    interpret: bool | None = None,
+    strict: bool = True,
+) -> jax.Array:
+    """C = A @ X for COO A (plus_times), fp32 out. See module docstring."""
+    if interpret is None:
+        interpret = default_interpret()
+    num_cols = x.shape[0]
+    tile_r = min(tile_r, max(8, num_rows))
+    tile_c = min(tile_c, max(8, num_cols))
+
+    b = bucket_coo_2d(
+        rows, cols, vals, n_valid,
+        num_rows=num_rows, num_cols=num_cols,
+        tile_r=tile_r, tile_c=tile_c, cap=cap,
+    )
+    xp = _pad_axis(_pad_axis(x, tile_c, 0), 128, 1)
+    out = kernel.spmm_bucketed(
+        b.local_rows, b.local_cols, b.vals, xp,
+        tile_r=tile_r, tile_c=tile_c, interpret=interpret,
+    )
+    out = out[:num_rows, : x.shape[1]]
+
+    if strict:
+        # exact overflow fix-up: re-run only overflowed edges via jnp path
+        n = rows.shape[0]
+        over = (b.slot_of_edge >= cap) & (
+            jnp.arange(n, dtype=jnp.int32) < n_valid
+        )
+        zero = jnp.zeros((), vals.dtype)
+        out = out + spmm_coo_ref(
+            rows, cols, jnp.where(over, vals, zero), x, n_valid,
+            num_rows=num_rows,
+        )
+    return out

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the spmm_coo kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_coo_ref(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    x: jax.Array,
+    n_valid,
+    *,
+    num_rows: int,
+) -> jax.Array:
+    """C[i, :] = sum_e [rows_e == i] * vals_e * X[cols_e, :], fp32."""
+    n = rows.shape[0]
+    valid = jnp.arange(n, dtype=jnp.int32) < n_valid
+    r = jnp.minimum(rows.astype(jnp.int32), num_rows - 1)
+    c = jnp.minimum(cols.astype(jnp.int32), x.shape[0] - 1)
+    v = jnp.where(valid, vals, jnp.zeros((), vals.dtype)).astype(jnp.float32)
+    contrib = v[:, None] * x[c].astype(jnp.float32)
+    return jax.ops.segment_sum(contrib, r, num_segments=num_rows)

@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first initialization, and the dry-run needs 512
+placeholder CPU devices to build the 2x16x16 production mesh.
+
+Per cell this runs up to two compiles:
+  * production program (scans as while loops, real microbatching):
+    proves the sharding config compiles at scale + per-device memory stats;
+  * costing program (scans unrolled, one microbatch, scaled by cost_scale):
+    XLA's cost model counts a while body once regardless of trip count, so
+    the roofline flops/bytes/collectives come from the unrolled variant.
+
+Results are cached as JSON per (arch, shape, mesh) under --out, so the full
+40-cell sweep is restartable and the roofline table (benchmarks/roofline.py)
+is a pure read of the cache.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+# TPU v5e constants for the roofline terms
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per-device injection)
+
+# result type is either a single `dtype[dims]{layout}` or a tuple
+# `(dtype[dims]{..}, /*index=5*/ dtype[dims]{..}, ...)` for variadic
+# collectives; lhs is matched within the line only (HLO is one op per line)
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(?P<lhs>[^\n]+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, from post-SPMD HLO.
+
+    Result-shape convention per op (ring algorithms, per-device traffic):
+      all-gather: result bytes (each device receives ~the full result)
+      all-reduce: 2x result bytes (reduce-scatter + all-gather phases)
+      reduce-scatter: result bytes x group size (sends its full input)
+      all-to-all / collective-permute: result bytes
+    """
+    totals = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+              "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(totals, 0)
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        op = m.group("op")
+        nbytes = sum(
+            _shape_bytes(dt, dims)
+            for dt, dims in _SHAPE_RE.findall(m.group("lhs"))
+        )
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start():line_end]
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        group = int(gm.group(2)) if gm else 1
+        if op == "all-reduce":
+            moved = 2.0 * nbytes * (group - 1) / max(group, 1)
+        elif op == "all-gather":
+            moved = nbytes * (group - 1) / max(group, 1)
+        elif op == "reduce-scatter":
+            moved = nbytes * (group - 1)
+        else:
+            moved = nbytes
+        totals[op] += moved
+        counts[op] += 1
+    return {
+        "per_device_bytes": sum(totals.values()),
+        "by_op_bytes": totals,
+        "counts": counts,
+    }
+
+
+def build_mesh(which: str):
+    from repro.launch.mesh import make_production_mesh
+
+    return make_production_mesh(multi_pod=(which == "multi"))
+
+
+def _shardings(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             *, skip_costing: bool = False) -> dict:
+    from repro import configs
+
+    mod = configs.get(arch_id)
+    mesh = build_mesh(mesh_kind)
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "n_devices": mesh.size,
+        "status": "ok",
+    }
+
+    # ---- production compile: proves sharding + memory at scale -------------
+    cell = mod.build_cell(shape_name, mesh)
+    rec["kind"] = cell.kind
+    rec["note"] = cell.note
+    rec["model_flops_per_step"] = cell.model_flops_per_step
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=_shardings(cell.in_specs, mesh),
+            out_shardings=(
+                _shardings(cell.out_specs, mesh)
+                if cell.out_specs is not None else None
+            ),
+        )
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        rec["memory_per_device"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "total_bytes": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        }
+
+    # ---- costing compile: unrolled variant for flops/bytes/collectives -----
+    # For layer-stacked (transformer) cells, lower shallow variants at
+    # L=1 and L=2 and extrapolate affinely: per-step cost is exactly
+    # a + b*L for a homogeneous stack, and compile time stays O(1) in L.
+    def _compile_cost(c):
+        with jax.set_mesh(mesh):
+            return jax.jit(
+                c.fn,
+                in_shardings=_shardings(c.in_specs, mesh),
+                out_shardings=(
+                    _shardings(c.out_specs, mesh)
+                    if c.out_specs is not None else None
+                ),
+            ).lower(*c.args).compile()
+
+    def _measure(compiled_prog, scale):
+        ca = compiled_prog.cost_analysis() or {}
+        coll = parse_collective_bytes(compiled_prog.as_text())
+        return {
+            "flops": float(ca.get("flops", 0.0)) * scale,
+            "bytes": float(ca.get("bytes accessed", 0.0)) * scale,
+            "coll": coll["per_device_bytes"] * scale,
+            "by_op": {k: v * scale for k, v in coll["by_op_bytes"].items()},
+            "counts": coll["counts"],
+        }
+
+    t1 = time.time()
+    if skip_costing:
+        m = _measure(compiled, cell.cost_scale)
+        rec["cost_scale"] = cell.cost_scale
+    elif getattr(mod, "FAMILY", None) == "transformer":
+        n_layers = mod.model_config().n_layers
+        c1 = mod.build_cell(shape_name, mesh, costing=True, costing_layers=1)
+        c2 = mod.build_cell(shape_name, mesh, costing=True, costing_layers=2)
+        rec["cost_scale"] = c1.cost_scale
+        m1 = _measure(_compile_cost(c1), c1.cost_scale)
+        m2 = _measure(_compile_cost(c2), c2.cost_scale)
+
+        def extrap(a, b):
+            # affine in depth when the lowered program is layer-homogeneous
+            # (b >= a); XLA occasionally picks a different sharding strategy
+            # at L=1 (e.g. all-gathering a dispatch buffer it keeps
+            # replicated at L=2), breaking homogeneity — fall back to
+            # treating the L=2 program as fully layer-proportional, which
+            # over-counts fixed parts but stays sane and positive.
+            if b >= a:
+                return a + (n_layers - 1) * (b - a)
+            return b * n_layers / 2.0
+
+        m = {
+            "flops": extrap(m1["flops"], m2["flops"]),
+            "bytes": extrap(m1["bytes"], m2["bytes"]),
+            "coll": sum(
+                extrap(m1["by_op"][k], m2["by_op"][k]) for k in m1["by_op"]
+            ),
+            "by_op": {k: extrap(m1["by_op"][k], m2["by_op"][k])
+                      for k in m1["by_op"]},
+            "counts": m2["counts"],
+        }
+        rec["costing_method"] = f"affine_extrapolation_L1_L2_to_{n_layers}"
+    else:
+        cost_cell = mod.build_cell(shape_name, mesh, costing=True)
+        rec["cost_scale"] = cost_cell.cost_scale
+        m = _measure(_compile_cost(cost_cell), cost_cell.cost_scale)
+    rec["costing_compile_s"] = round(time.time() - t1, 2)
+
+    flops_dev = m["flops"]
+    bytes_dev = m["bytes"]
+    coll_dev = m["coll"]
+
+    n_dev = mesh.size
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1],
+    )[0]
+    rec.update({
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+            "collectives": {
+                "by_op_bytes": m["by_op"],
+                "counts": m["counts"],
+            },
+        },
+        "global": {
+            "hlo_flops": flops_dev * n_dev,
+            "hlo_bytes": bytes_dev * n_dev,
+            "collective_bytes": coll_dev * n_dev,
+        },
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "step_s_lower_bound": max(compute_s, memory_s, collective_s),
+        },
+        "model_flops_ratio": (
+            cell.model_flops_per_step / (flops_dev * n_dev)
+            if flops_dev else None
+        ),
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-costing", action="store_true")
+    args = ap.parse_args()
+
+    from repro import configs
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    cells = configs.all_cells()
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch_id, shape_name in cells:
+        for mesh_kind in meshes:
+            slug = f"{arch_id}__{shape_name}__{mesh_kind}".replace("/", "_")
+            path = outdir / f"{slug}.json"
+            if path.exists() and not args.force:
+                n_skip += 1
+                continue
+            print(f"=== {arch_id} x {shape_name} [{mesh_kind}] ===",
+                  flush=True)
+            try:
+                rec = run_cell(arch_id, shape_name, mesh_kind,
+                               skip_costing=args.skip_costing)
+                r = rec["roofline"]
+                mem = rec.get("memory_per_device", {})
+                print(
+                    f"  compile {rec['compile_s']}s | "
+                    f"mem/dev {mem.get('total_bytes', 0)/1e9:.2f}GB | "
+                    f"compute {r['compute_s']*1e3:.3f}ms "
+                    f"memory {r['memory_s']*1e3:.3f}ms "
+                    f"collective {r['collective_s']*1e3:.3f}ms "
+                    f"-> {r['dominant']}", flush=True,
+                )
+                n_ok += 1
+            except Exception as e:
+                rec = {
+                    "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"  FAILED: {e}", flush=True)
+                n_fail += 1
+            path.write_text(json.dumps(rec, indent=2))
+    print(f"done: {n_ok} ok, {n_fail} failed, {n_skip} cached")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,77 @@
+"""Serving driver: batched prefill + decode loop with a KV cache.
+
+Demonstrates the inference path end-to-end on the dev host: requests are
+batched, prompts prefill once, then tokens decode step-by-step against the
+cache (the decode_32k / long_500k dry-run cells lower exactly this
+``decode_step``). Greedy sampling; the loop is host-driven as a real
+serving binary would be, with the cache living on device between steps.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as tfm
+
+
+def generate(params, cfg, prompts: np.ndarray, *, max_new_tokens: int,
+             max_seq: int):
+    """prompts: [b, prompt_len] int32 -> [b, max_new_tokens] int32."""
+    b, plen = prompts.shape
+    logits, cache, clen = jax.jit(
+        lambda p, t: tfm.prefill(p, t, cfg)
+    )(params, jnp.asarray(prompts))
+    # grow cache to max_seq
+    pad = max_seq - cache["k"].shape[2]
+    cache = jax.tree.map(
+        lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        cache,
+    )
+    decode = jax.jit(lambda p, t, c, l: tfm.decode_step(p, t, c, l, cfg))
+    out = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    for i in range(max_new_tokens):
+        out.append(np.asarray(tok)[:, 0])
+        logits, cache = decode(params, tok, cache, clen + i)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return np.stack(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    mod = configs.get(args.arch)
+    cfg = dataclasses.replace(mod.smoke_config(), dtype="float32")
+    params = tfm.init_transformer(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)
+    ).astype(np.int32)
+
+    t0 = time.time()
+    tokens = generate(
+        params, cfg, prompts, max_new_tokens=args.new_tokens,
+        max_seq=args.prompt_len + args.new_tokens + 1,
+    )
+    dt = time.time() - t0
+    n = args.batch * args.new_tokens
+    print(f"[serve] generated {n} tokens in {dt:.2f}s "
+          f"({n/dt:,.0f} tok/s incl. compile)")
+    print("[serve] sample:", tokens[0, :16].tolist())
+    return tokens
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Architecture substrate: transformers (dense/GQA/MoE), GNNs, recsys."""

@@ -1,0 +1,353 @@
+"""GNN architectures on edge lists: GCN, GAT, EGNN, PNA.
+
+Message passing is GraphBLAS algebra (SpMM / SDDMM over the adjacency
+pattern), and these layers are built directly on the core segment primitives
+— the same sort/segment/scatter machinery that builds traffic matrices.
+JAX has no CSR/CSC; the edge-index + ``segment_sum`` formulation IS the
+system's sparse substrate (with the Pallas spmm_coo/sddmm kernels as the
+TPU hot path via ``use_kernel``).
+
+Graphs arrive padded: ``edge_src/edge_dst [E]`` with ``n_edges`` valid,
+node features ``x [N, d]`` with ``n_nodes`` valid. Batched small graphs
+(molecule shape) are flattened into one padded graph with a ``graph_id``
+per node for readout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str  # gcn | gat | egnn | pna
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    n_heads: int = 1           # gat
+    aggregators: tuple = ("mean", "max", "min", "std")  # pna
+    scalers: tuple = ("identity", "amplification", "attenuation")  # pna
+    mean_log_degree: float = 2.0  # pna delta
+    use_kernel: bool = False
+    dtype: str = "float32"
+
+
+def _edge_valid(e: int, n_edges) -> jax.Array:
+    return jnp.arange(e, dtype=jnp.int32) < n_edges
+
+
+def _clip(idx, n):
+    return jnp.minimum(idx.astype(jnp.int32), n - 1)
+
+
+def _agg_sum(src_feat, dst, n, valid):
+    contrib = jnp.where(valid[:, None], src_feat, 0)
+    return jax.ops.segment_sum(contrib, dst, num_segments=n)
+
+
+# ---------------------------------------------------------------------------
+# GCN
+# ---------------------------------------------------------------------------
+def init_gcn(key, cfg: GNNConfig) -> Params:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        "layers": [
+            {
+                "w": jax.random.normal(k, (di, do), jnp.float32) * di ** -0.5,
+                "b": jnp.zeros((do,), jnp.float32),
+            }
+            for k, di, do in zip(keys, dims[:-1], dims[1:])
+        ]
+    }
+
+
+def gcn_apply(params, x, edge_src, edge_dst, n_nodes, n_edges,
+              cfg: GNNConfig):
+    n, e = x.shape[0], edge_src.shape[0]
+    valid = _edge_valid(e, n_edges)
+    src = _clip(edge_src, n)
+    dst = _clip(edge_dst, n)
+    # symmetric normalization from in-degree (graph is pre-symmetrized
+    # with self-loops by the data layer)
+    deg = jax.ops.segment_sum(valid.astype(jnp.float32), dst, num_segments=n)
+    deg = jnp.maximum(deg, 1.0)
+    w_e = jax.lax.rsqrt(deg[src]) * jax.lax.rsqrt(deg[dst])
+    w_e = jnp.where(valid, w_e, 0.0)
+
+    h = x
+    for i, layer in enumerate(params["layers"]):
+        hw = h @ layer["w"]
+        if cfg.use_kernel:
+            from repro.kernels.spmm_coo import ops as spmm_ops
+
+            agg = spmm_ops.spmm_coo(dst, src, w_e, hw, n_edges, num_rows=n)
+        else:
+            agg = jax.ops.segment_sum(
+                w_e[:, None] * hw[src], dst, num_segments=n
+            )
+        h = agg + layer["b"]
+        if i < len(params["layers"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GAT
+# ---------------------------------------------------------------------------
+def init_gat(key, cfg: GNNConfig) -> Params:
+    dims_in = [cfg.d_in] + [cfg.d_hidden * cfg.n_heads] * (cfg.n_layers - 1)
+    dims_out = [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, cfg.n_layers)
+    layer_params = []
+    for k, di, do in zip(keys, dims_in, dims_out):
+        k1, k2, k3 = jax.random.split(k, 3)
+        layer_params.append(
+            {
+                "w": jax.random.normal(k1, (di, cfg.n_heads, do), jnp.float32)
+                * di ** -0.5,
+                "a_src": jax.random.normal(k2, (cfg.n_heads, do), jnp.float32)
+                * do ** -0.5,
+                "a_dst": jax.random.normal(k3, (cfg.n_heads, do), jnp.float32)
+                * do ** -0.5,
+            }
+        )
+    return {"layers": layer_params}
+
+
+def gat_apply(params, x, edge_src, edge_dst, n_nodes, n_edges,
+              cfg: GNNConfig):
+    n, e = x.shape[0], edge_src.shape[0]
+    valid = _edge_valid(e, n_edges)
+    src = _clip(edge_src, n)
+    dst = _clip(edge_dst, n)
+    h = x
+    n_layers = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        nh, do = layer["a_src"].shape
+        hw = jnp.einsum("nd,dhf->nhf", h, layer["w"])  # [n, heads, do]
+        s_src = jnp.einsum("nhf,hf->nh", hw, layer["a_src"])
+        s_dst = jnp.einsum("nhf,hf->nh", hw, layer["a_dst"])
+        scores = jax.nn.leaky_relu(
+            s_src[src] + s_dst[dst], negative_slope=0.2
+        )  # [e, heads]
+        scores = jnp.where(valid[:, None], scores, -1e30)
+        smax = jax.ops.segment_max(scores, dst, num_segments=n)
+        smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+        ex = jnp.where(valid[:, None], jnp.exp(scores - smax[dst]), 0.0)
+        denom = jax.ops.segment_sum(ex, dst, num_segments=n)
+        alpha = ex / jnp.maximum(denom[dst], 1e-9)  # [e, heads]
+        agg = jax.ops.segment_sum(
+            alpha[..., None] * hw[src], dst, num_segments=n
+        )  # [n, heads, do]
+        if i < n_layers - 1:
+            h = jax.nn.elu(agg.reshape(n, nh * do))
+        else:
+            h = agg.mean(axis=1)  # average heads at the output layer
+    return h
+
+
+# ---------------------------------------------------------------------------
+# EGNN (E(n)-equivariant)
+# ---------------------------------------------------------------------------
+def init_egnn(key, cfg: GNNConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layer_params = []
+    for k in keys[: cfg.n_layers]:
+        k1, k2, k3 = jax.random.split(k, 3)
+        layer_params.append(
+            {
+                "phi_e": layers.init_mlp(k1, [2 * d + 1, d, d]),
+                "phi_x": layers.init_mlp(k2, [d, d, 1]),
+                "phi_h": layers.init_mlp(k3, [2 * d, d, d]),
+            }
+        )
+    return {
+        "encode": layers.init_mlp(keys[-2], [cfg.d_in, d]),
+        "layers": layer_params,
+        "decode": layers.init_mlp(keys[-1], [d, d, cfg.n_classes]),
+    }
+
+
+def egnn_apply(params, x, coords, edge_src, edge_dst, n_nodes, n_edges,
+               cfg: GNNConfig):
+    n, e = x.shape[0], edge_src.shape[0]
+    valid = _edge_valid(e, n_edges)
+    src = _clip(edge_src, n)
+    dst = _clip(edge_dst, n)
+    h = layers.mlp_apply(params["encode"], x)
+    pos = coords
+    for layer in params["layers"]:
+        diff = pos[dst] - pos[src]           # [e, 3]
+        dist2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = layers.mlp_apply(
+            params_in := layer["phi_e"],
+            jnp.concatenate([h[dst], h[src], dist2], axis=-1),
+            act=jax.nn.silu, final_act=True,
+        )
+        m = jnp.where(valid[:, None], m, 0.0)
+        # coordinate update (equivariant)
+        xw = layers.mlp_apply(layer["phi_x"], m, act=jax.nn.silu)
+        deg = jax.ops.segment_sum(
+            valid.astype(jnp.float32), dst, num_segments=n
+        )
+        coord_upd = jax.ops.segment_sum(
+            jnp.where(valid[:, None], diff * xw, 0.0), dst, num_segments=n
+        ) / jnp.maximum(deg, 1.0)[:, None]
+        pos = pos + coord_upd
+        # feature update
+        m_agg = jax.ops.segment_sum(m, dst, num_segments=n)
+        h = h + layers.mlp_apply(
+            layer["phi_h"],
+            jnp.concatenate([h, m_agg], axis=-1),
+            act=jax.nn.silu,
+        )
+    return layers.mlp_apply(params["decode"], h, act=jax.nn.silu), pos
+
+
+# ---------------------------------------------------------------------------
+# PNA (principal neighbourhood aggregation)
+# ---------------------------------------------------------------------------
+def init_pna(key, cfg: GNNConfig) -> Params:
+    n_agg = len(cfg.aggregators) * len(cfg.scalers)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layer_params = []
+    for i, k in enumerate(keys[: cfg.n_layers]):
+        layer_params.append(
+            {"post": layers.init_mlp(k, [(n_agg + 1) * d, d, d])}
+        )
+    return {
+        "encode": layers.init_mlp(keys[-2], [cfg.d_in, d]),
+        "layers": layer_params,
+        "decode": layers.init_mlp(keys[-1], [d, d, cfg.n_classes]),
+    }
+
+
+def pna_apply(params, x, edge_src, edge_dst, n_nodes, n_edges,
+              cfg: GNNConfig):
+    n, e = x.shape[0], edge_src.shape[0]
+    valid = _edge_valid(e, n_edges)
+    src = _clip(edge_src, n)
+    dst = _clip(edge_dst, n)
+    deg = jax.ops.segment_sum(valid.astype(jnp.float32), dst, num_segments=n)
+    degc = jnp.maximum(deg, 1.0)
+    log_deg = jnp.log(deg + 1.0)
+    delta = cfg.mean_log_degree
+
+    h = layers.mlp_apply(params["encode"], x)
+    for layer in params["layers"]:
+        msg = jnp.where(valid[:, None], h[src], 0.0)
+        s = jax.ops.segment_sum(msg, dst, num_segments=n)
+        mean = s / degc[:, None]
+        mx = jax.ops.segment_max(
+            jnp.where(valid[:, None], h[src], -1e30), dst, num_segments=n
+        )
+        mx = jnp.where(mx < -1e29, 0.0, mx)
+        mn = jax.ops.segment_min(
+            jnp.where(valid[:, None], h[src], 1e30), dst, num_segments=n
+        )
+        mn = jnp.where(mn > 1e29, 0.0, mn)
+        sq = jax.ops.segment_sum(msg * msg, dst, num_segments=n)
+        var = jnp.maximum(sq / degc[:, None] - mean * mean, 0.0)
+        std = jnp.sqrt(var + 1e-5)
+        aggs = {"mean": mean, "max": mx, "min": mn, "std": std, "sum": s}
+        feats = []
+        for agg_name in cfg.aggregators:
+            a = aggs[agg_name]
+            for scaler in cfg.scalers:
+                if scaler == "identity":
+                    feats.append(a)
+                elif scaler == "amplification":
+                    feats.append(a * (log_deg / delta)[:, None])
+                elif scaler == "attenuation":
+                    feats.append(a * (delta / jnp.maximum(log_deg, 1e-5))[:, None])
+        feats.append(h)
+        h = layers.mlp_apply(
+            layer["post"], jnp.concatenate(feats, axis=-1), act=jax.nn.relu,
+            final_act=True,
+        )
+    return layers.mlp_apply(params["decode"], h, act=jax.nn.relu)
+
+
+# ---------------------------------------------------------------------------
+# unified entry points
+# ---------------------------------------------------------------------------
+def init_gnn(key, cfg: GNNConfig) -> Params:
+    return {
+        "gcn": init_gcn, "gat": init_gat, "egnn": init_egnn, "pna": init_pna
+    }[cfg.arch](key, cfg)
+
+
+def gnn_forward(params, batch, cfg: GNNConfig):
+    """batch: dict with x, edge_src, edge_dst, n_nodes, n_edges
+    (+ coords for egnn). Returns node-level outputs [N, n_classes]."""
+    args = (
+        batch["x"], batch["edge_src"], batch["edge_dst"],
+        batch["n_nodes"], batch["n_edges"],
+    )
+    if cfg.arch == "gcn":
+        return gcn_apply(params, *args, cfg)
+    if cfg.arch == "gat":
+        return gat_apply(params, *args, cfg)
+    if cfg.arch == "egnn":
+        out, _ = egnn_apply(
+            params, batch["x"], batch["coords"], batch["edge_src"],
+            batch["edge_dst"], batch["n_nodes"], batch["n_edges"], cfg
+        )
+        return out
+    if cfg.arch == "pna":
+        return pna_apply(params, *args, cfg)
+    raise ValueError(cfg.arch)
+
+
+def node_classification_loss(params, batch, cfg: GNNConfig):
+    """Masked cross-entropy over labeled nodes."""
+    logits = gnn_forward(params, batch, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch["label_mask"].astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(
+        logp, jnp.maximum(labels, 0)[:, None], axis=-1
+    )[:, 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    acc = (
+        ((logits.argmax(-1) == labels).astype(jnp.float32) * mask).sum()
+        / jnp.maximum(mask.sum(), 1.0)
+    )
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def graph_classification_loss(params, batch, cfg: GNNConfig):
+    """Readout (mean over graph_id) + cross-entropy; molecule shape."""
+    node_out = gnn_forward(params, batch, cfg).astype(jnp.float32)
+    n = node_out.shape[0]
+    gid = batch["graph_id"].astype(jnp.int32)
+    n_graphs = batch["graph_labels"].shape[0]
+    node_valid = (jnp.arange(n, dtype=jnp.int32) < batch["n_nodes"]).astype(
+        jnp.float32
+    )
+    summed = jax.ops.segment_sum(
+        node_out * node_valid[:, None], gid, num_segments=n_graphs
+    )
+    counts = jax.ops.segment_sum(node_valid, gid, num_segments=n_graphs)
+    pooled = summed / jnp.maximum(counts, 1.0)[:, None]
+    logp = jax.nn.log_softmax(pooled, axis=-1)
+    labels = batch["graph_labels"]
+    nll = -jnp.take_along_axis(
+        logp, jnp.maximum(labels, 0)[:, None], axis=-1
+    )[:, 0]
+    loss = nll.mean()
+    acc = (pooled.argmax(-1) == labels).astype(jnp.float32).mean()
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,306 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (train + cached
+decode), gated MLPs.
+
+Pure-function style: ``init_*`` builds parameter pytrees (plain dicts),
+``*_apply`` consumes them. Params are kept in ``param_dtype`` (fp32 by
+default) and compute runs in ``dtype`` (bf16 for LM configs), matching
+standard mixed-precision training. Sharding is applied at jit boundaries by
+``distributed.sharding``; the layer code is mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    causal: bool = True
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, param_dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), param_dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, param_dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), param_dtype),
+            "bias": jnp.zeros((d,), param_dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = normed * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, d_head]; positions: [..., seq] int32."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)  # [d_head/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., s, dh/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., s, 1, dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(
+    key, cfg: AttentionConfig, param_dtype=jnp.float32
+) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, nh, nkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    scale = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, nh * dh), param_dtype) * scale,
+        "wk": jax.random.normal(k2, (d, nkv * dh), param_dtype) * scale,
+        "wv": jax.random.normal(k3, (d, nkv * dh), param_dtype) * scale,
+        "wo": jax.random.normal(k4, (nh * dh, d), param_dtype) * scale,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * dh,), param_dtype)
+        p["bk"] = jnp.zeros((nkv * dh,), param_dtype)
+        p["bv"] = jnp.zeros((nkv * dh,), param_dtype)
+    return p
+
+
+def _qkv(params, x, cfg: AttentionConfig):
+    b, s, _ = x.shape
+    nh, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return (
+        q.reshape(b, s, nh, dh),
+        k.reshape(b, s, nkv, dh),
+        v.reshape(b, s, nkv, dh),
+    )
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=0):
+    """q: [b, sq, nh, dh]; k/v: [b, sk, nkv, dh]; GQA via head grouping."""
+    b, sq, nh, dh = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    qg = q.reshape(b, sq, nkv, group, dh)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (dh ** -0.5)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = qpos >= kpos
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, nh, dh)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, kv_block: int,
+                  unroll: bool = False, compute_dtype=jnp.float32):
+    """Online-softmax attention, scanning KV blocks (flash-attention
+    schedule in pure lax): memory is O(sq * kv_block) instead of O(sq * sk).
+
+    This is what makes 32k prefill lowerable at production batch sizes; on
+    real TPU the same schedule is the Pallas flash kernel's.
+    """
+    b, sq, nh, dh = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    nblocks = sk // kv_block
+    qg = q.reshape(b, sq, nkv, group, dh).astype(compute_dtype)
+    kb = k.reshape(b, nblocks, kv_block, nkv, dh)
+    vb = v.reshape(b, nblocks, kv_block, nkv, dh)
+    qpos = jnp.arange(sq)[:, None]
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kblk, vblk, blk_idx = blk
+        scores = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, kblk.astype(compute_dtype),
+            preferred_element_type=jnp.float32,
+        ) * (dh ** -0.5)
+        if causal:
+            kpos = blk_idx * kv_block + jnp.arange(kv_block)[None, :]
+            scores = jnp.where((qpos >= kpos)[None, None, None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(compute_dtype),
+            vblk.astype(compute_dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, nkv, group, sq, dh), jnp.float32)
+    m0 = jnp.full((b, nkv, group, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, nkv, group, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step,
+        (acc0, m0, l0),
+        (
+            jnp.moveaxis(kb, 1, 0),
+            jnp.moveaxis(vb, 1, 0),
+            jnp.arange(nblocks),
+        ),
+        unroll=nblocks if unroll else 1,
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # [b, nkv, group, sq, dh] -> [b, sq, nh, dh]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, nh, dh)
+    return out.astype(q.dtype)
+
+
+def attention_apply(
+    params: Params,
+    x: jax.Array,
+    cfg: AttentionConfig,
+    positions=None,
+    kv_block: int | None = None,
+    unroll: bool = False,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Full-sequence (training / prefill) attention.
+
+    ``kv_block`` switches to the online-softmax KV-block scan (required at
+    long sequence to avoid materializing [sq, sk] scores).
+    """
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_block is not None and s % kv_block == 0 and s > kv_block:
+        out = _sdpa_chunked(q, k, v, causal=cfg.causal, kv_block=kv_block,
+                            unroll=unroll, compute_dtype=compute_dtype)
+    else:
+        out = _sdpa(q, k, v, causal=cfg.causal)
+    return out.reshape(b, s, -1) @ params["wo"].astype(x.dtype)
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,          # [b, 1, d] the new token
+    cache_k: jax.Array,    # [b, max_seq, nkv, dh]
+    cache_v: jax.Array,
+    cache_len: jax.Array,  # int32 scalar: tokens already cached
+    cfg: AttentionConfig,
+):
+    """One-token decode against a KV cache. Returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k, v = _qkv(params, x, cfg)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cache_len, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cache_len, axis=1
+    )
+    # mask out cache slots beyond cache_len (+1 for the new token)
+    sk = cache_k.shape[1]
+    nh, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    group = nh // nkv
+    qg = q.reshape(b, 1, nkv, group, dh)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk",
+        qg.astype(jnp.float32),
+        cache_k.astype(jnp.float32),
+    ) * (dh ** -0.5)
+    kpos = jnp.arange(sk)[None, None, None, None, :]
+    scores = jnp.where(kpos <= cache_len, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", probs.astype(cache_v.dtype), cache_v
+    ).reshape(b, 1, nh * dh)
+    return out @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_gated_mlp(key, d: int, d_ff: int, param_dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (d, d_ff), param_dtype) * d ** -0.5,
+        "w_up": jax.random.normal(k2, (d, d_ff), param_dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (d_ff, d), param_dtype) * d_ff ** -0.5,
+    }
+
+
+def gated_mlp(params: Params, x: jax.Array, act=jax.nn.silu) -> jax.Array:
+    g = act(x @ params["w_gate"].astype(x.dtype))
+    u = x @ params["w_up"].astype(x.dtype)
+    return (g * u) @ params["w_down"].astype(x.dtype)
+
+
+def init_mlp(key, dims: list[int], param_dtype=jnp.float32,
+             bias: bool = True) -> Params:
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for k, din, dout in zip(keys, dims[:-1], dims[1:]):
+        layer = {"w": jax.random.normal(k, (din, dout), param_dtype)
+                 * din ** -0.5}
+        if bias:
+            layer["b"] = jnp.zeros((dout,), param_dtype)
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def mlp_apply(params: Params, x: jax.Array, act=jax.nn.relu,
+              final_act: bool = False) -> jax.Array:
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        x = x @ layer["w"].astype(x.dtype)
+        if "b" in layer:
+            x = x + layer["b"].astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,282 @@
+"""Mixture-of-Experts layer with sort-based dispatch.
+
+The token->expert dispatch is a hypersparse incidence problem (tokens x
+experts, k entries per token), and we route it with exactly the machinery of
+the paper's matrix builder: stable sort by expert id, run-rank within runs,
+capacity-bounded scatter into dense per-expert buffers, grouped GEMM, then a
+segment-sum combine. No [T, E, C] one-hot dispatch tensors are ever
+materialized — at production token counts those don't fit HBM, while the
+sort-based path is O(T*k) memory, the same reason the paper's DPU pipeline
+sorts packets instead of densifying 2^32-wide rows.
+
+Expert-parallel sharding: the expert axis of the buffers/weights shards over
+the ``model`` mesh axis (all-to-all inserted by SPMD at the buffer
+boundary); experts are padded up to a multiple of the axis size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    d_ff_shared: int = 0  # 0 = no shared expert
+    capacity_factor: float = 1.25
+    norm_topk: bool = True  # qwen-style renormalized top-k gates
+    n_experts_padded: int | None = None  # pad for expert-parallel divisibility
+    # expert-parallel shard_map path (moe_apply_ep): dispatch locally per
+    # shard (activations are model-replicated under Megatron TP, so every
+    # shard routes identically and just slices its own experts), combine
+    # with one psum. Avoids XLA's global-sort all-gather of dispatch
+    # buffers, which replicates O(T*k*d) bytes per device at 32k prefill.
+    expert_shard_map: bool = False
+    model_axis: str = "model"
+    dp_axes: tuple = ("data",)
+
+    @property
+    def e_padded(self) -> int:
+        return self.n_experts_padded or self.n_experts
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, param_dtype=jnp.float32):
+    k_router, k_e, k_s = jax.random.split(key, 3)
+    e, ff = cfg.e_padded, cfg.d_ff_expert
+    scale_d = d_model ** -0.5
+    scale_f = ff ** -0.5
+    ks = jax.random.split(k_e, 3)
+    params = {
+        "router": jax.random.normal(k_router, (d_model, cfg.n_experts),
+                                    param_dtype) * scale_d,
+        "w_gate": jax.random.normal(ks[0], (e, d_model, ff), param_dtype)
+        * scale_d,
+        "w_up": jax.random.normal(ks[1], (e, d_model, ff), param_dtype)
+        * scale_d,
+        "w_down": jax.random.normal(ks[2], (e, ff, d_model), param_dtype)
+        * scale_f,
+    }
+    if cfg.d_ff_shared:
+        params["shared"] = layers.init_gated_mlp(
+            k_s, d_model, cfg.d_ff_shared, param_dtype
+        )
+    return params
+
+
+def expert_capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_apply(params, x: jax.Array, cfg: MoEConfig):
+    """x: [b, s, d] -> (out [b, s, d], aux losses dict)."""
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    e = cfg.e_padded
+    cap = expert_capacity(t, cfg)
+
+    # --- routing -----------------------------------------------------------
+    logits = (tokens @ params["router"].astype(tokens.dtype)).astype(
+        jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)  # [t, k]
+    if cfg.norm_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9
+        )
+
+    # --- sort-based dispatch (the GrB build primitive) ----------------------
+    n_pairs = t * cfg.top_k
+    expert_of_pair = gate_idx.reshape(n_pairs)
+    token_of_pair = jnp.repeat(jnp.arange(t, dtype=jnp.int32), cfg.top_k)
+    gate_of_pair = gate_vals.reshape(n_pairs)
+
+    order = jnp.argsort(expert_of_pair, stable=True)
+    sorted_expert = expert_of_pair[order]
+    # rank within each expert run
+    iota = jnp.arange(n_pairs, dtype=jnp.int32)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_expert[1:] != sorted_expert[:-1]]
+    )
+    run_start = jax.lax.cummax(jnp.where(first, iota, 0), axis=0)
+    rank = iota - run_start
+
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_expert * cap + rank, e * cap)
+
+    sorted_token = token_of_pair[order]
+    buffer = jnp.zeros((e * cap, d), tokens.dtype)
+    buffer = buffer.at[slot].set(tokens[sorted_token], mode="drop")
+
+    # --- grouped expert GEMMs (expert axis shards over `model`) ------------
+    h = buffer.reshape(e, cap, d)
+    g = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", h, params["w_gate"].astype(h.dtype))
+    )
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"].astype(h.dtype))
+    y = jnp.einsum(
+        "ecf,efd->ecd", g * u, params["w_down"].astype(h.dtype)
+    ).reshape(e * cap, d)
+
+    # --- combine ------------------------------------------------------------
+    out_pair = jnp.where(
+        keep[:, None],
+        y[jnp.minimum(slot, e * cap - 1)],
+        jnp.zeros((1, d), y.dtype),
+    )
+    weighted = out_pair * gate_of_pair[order][:, None].astype(y.dtype)
+    combined = jax.ops.segment_sum(weighted, sorted_token, num_segments=t)
+
+    if cfg.d_ff_shared:
+        combined = combined + layers.gated_mlp(params["shared"], tokens)
+
+    # --- aux losses ----------------------------------------------------------
+    # Switch-style load balance: E * sum_e f_e * p_e
+    one_hot_top1 = jax.nn.one_hot(gate_idx[:, 0], cfg.n_experts,
+                                  dtype=jnp.float32)
+    f = one_hot_top1.mean(axis=0)
+    p = probs.mean(axis=0)
+    aux = {
+        "load_balance_loss": cfg.n_experts * jnp.sum(f * p),
+        "router_z_loss": jnp.mean(
+            jax.nn.logsumexp(logits, axis=-1) ** 2
+        ),
+        "dropped_fraction": 1.0 - keep.mean(),
+    }
+    return combined.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel shard_map path
+# ---------------------------------------------------------------------------
+def _moe_local(x_loc, router, w_gate, w_up, w_down, shared, cfg: MoEConfig):
+    """Per-shard body: x_loc [t_loc, d] (replicated over model axis);
+    w_* are this shard's expert slices [e_loc, ...]."""
+    t, d = x_loc.shape
+    e = cfg.e_padded
+    e_loc = w_gate.shape[0]
+    m = e // e_loc
+    mi = jax.lax.axis_index(cfg.model_axis)
+    cap = expert_capacity(t, cfg)
+
+    logits = (x_loc @ router.astype(x_loc.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9
+        )
+
+    n_pairs = t * cfg.top_k
+    expert_of_pair = gate_idx.reshape(n_pairs)
+    token_of_pair = jnp.repeat(jnp.arange(t, dtype=jnp.int32), cfg.top_k)
+    gate_of_pair = gate_vals.reshape(n_pairs)
+
+    order = jnp.argsort(expert_of_pair, stable=True)
+    sorted_expert = expert_of_pair[order]
+    iota = jnp.arange(n_pairs, dtype=jnp.int32)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_expert[1:] != sorted_expert[:-1]]
+    )
+    run_start = jax.lax.cummax(jnp.where(first, iota, 0), axis=0)
+    rank = iota - run_start
+
+    # only this shard's experts get buffered: zero-communication dispatch
+    local_expert = sorted_expert - mi * e_loc
+    is_mine = (local_expert >= 0) & (local_expert < e_loc)
+    keep = is_mine & (rank < cap)
+    slot = jnp.where(keep, local_expert * cap + rank, e_loc * cap)
+    sorted_token = token_of_pair[order]
+    buffer = jnp.zeros((e_loc * cap, d), x_loc.dtype)
+    buffer = buffer.at[slot].set(x_loc[sorted_token], mode="drop")
+
+    h = buffer.reshape(e_loc, cap, d)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, w_gate.astype(h.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", h, w_up.astype(h.dtype))
+    y = jnp.einsum(
+        "ecf,efd->ecd", g * u, w_down.astype(h.dtype)
+    ).reshape(e_loc * cap, d)
+
+    out_pair = jnp.where(
+        keep[:, None],
+        y[jnp.minimum(slot, e_loc * cap - 1)],
+        jnp.zeros((1, d), y.dtype),
+    )
+    weighted = out_pair * gate_of_pair[order][:, None].astype(y.dtype)
+    combined = jax.ops.segment_sum(weighted, sorted_token, num_segments=t)
+    # each token's experts are spread across shards: one all-reduce combines
+    combined = jax.lax.psum(combined, cfg.model_axis)
+
+    if cfg.d_ff_shared:
+        # shared expert: column-parallel over the model axis, local partial
+        gs = jax.nn.silu(x_loc @ shared["w_gate"].astype(x_loc.dtype))
+        us = x_loc @ shared["w_up"].astype(x_loc.dtype)
+        partial = (gs * us) @ shared["w_down"].astype(x_loc.dtype)
+        combined = combined + jax.lax.psum(partial, cfg.model_axis)
+
+    one_hot_top1 = jax.nn.one_hot(gate_idx[:, 0], cfg.n_experts,
+                                  dtype=jnp.float32)
+    aux = {
+        "load_balance_loss": cfg.n_experts * jnp.sum(
+            one_hot_top1.mean(0) * probs.mean(0)
+        ),
+        "router_z_loss": jnp.mean(jax.nn.logsumexp(logits, -1) ** 2),
+        "dropped_fraction": 1.0 - (rank < cap).mean(),
+    }
+    # aux values are identical across model shards (same routing); average
+    # over data shards happens in the caller's metrics reduction
+    aux = {k: jax.lax.pmean(v, cfg.dp_axes) for k, v in aux.items()}
+    return combined, aux
+
+
+def moe_apply_ep(params, x: jax.Array, cfg: MoEConfig):
+    """shard_map expert-parallel MoE: x [b, s, d] -> (out, aux).
+
+    Requires an ambient mesh (jax.set_mesh) whose axes include
+    cfg.model_axis and cfg.dp_axes. Parameters must be sharded with
+    `transformer_param_rules` (experts over `model`; shared expert
+    column-parallel).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    dp = cfg.dp_axes if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
+    shared = params.get("shared", {
+        "w_gate": jnp.zeros((d, 0), x.dtype),
+        "w_up": jnp.zeros((d, 0), x.dtype),
+        "w_down": jnp.zeros((0, d), x.dtype),
+    })
+    shared_specs = {"w_gate": P(None, cfg.model_axis),
+                    "w_up": P(None, cfg.model_axis),
+                    "w_down": P(cfg.model_axis, None)}
+
+    def body(xf, router, wg, wu, wd, sh):
+        return _moe_local(xf, router, wg, wu, wd, sh, cfg)
+
+    out, aux = jax.shard_map(
+        body,
+        in_specs=(
+            P(dp, None),                       # x tokens
+            P(),                               # router
+            P(cfg.model_axis, None, None),     # w_gate
+            P(cfg.model_axis, None, None),     # w_up
+            P(cfg.model_axis, None, None),     # w_down
+            shared_specs,
+        ),
+        out_specs=(P(dp, None), {k: P() for k in (
+            "load_balance_loss", "router_z_loss", "dropped_fraction")}),
+        check_vma=False,
+    )(
+        x.reshape(b * s, d), params["router"], params["w_gate"],
+        params["w_up"], params["w_down"], shared,
+    )
+    return out.reshape(b, s, d), aux

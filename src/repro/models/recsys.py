@@ -1,0 +1,171 @@
+"""Two-tower retrieval model (Yi et al., RecSys'19 / Covington RecSys'16).
+
+Huge sparse embedding tables -> per-field lookup (single-hot) + history
+EmbeddingBag (multi-hot) -> tower MLP -> L2-normalized embeddings -> dot
+interaction -> in-batch sampled softmax with logQ correction.
+
+The lookup hot path is the hypersparse plus_times product (EmbeddingBag ==
+bags x vocab incidence @ table), implemented on the same segment machinery
+as the traffic-matrix builder, with the spmm_coo Pallas kernel available via
+``use_kernel``. Tables are row-sharded over the `model` mesh axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str
+    embed_dim: int = 256
+    tower_mlp: tuple = (1024, 512, 256)
+    n_user_fields: int = 8      # single-hot categorical fields
+    n_item_fields: int = 8
+    history_len: int = 50       # multi-hot user history (item ids)
+    user_vocab: int = 10_000_000
+    item_vocab: int = 10_000_000
+    temperature: float = 0.05
+    use_kernel: bool = False
+    dtype: str = "float32"
+
+    @property
+    def user_tower_in(self) -> int:
+        # field embeddings + history bag embedding
+        return (self.n_user_fields + 1) * self.embed_dim
+
+    @property
+    def item_tower_in(self) -> int:
+        return self.n_item_fields * self.embed_dim
+
+
+def init_two_tower(key, cfg: TwoTowerConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = cfg.embed_dim ** -0.5
+    return {
+        "user_table": jax.random.normal(
+            k1, (cfg.user_vocab, cfg.embed_dim), jnp.float32
+        ) * scale,
+        "item_table": jax.random.normal(
+            k2, (cfg.item_vocab, cfg.embed_dim), jnp.float32
+        ) * scale,
+        "user_mlp": layers.init_mlp(
+            k3, [cfg.user_tower_in, *cfg.tower_mlp]
+        ),
+        "item_mlp": layers.init_mlp(
+            k4, [cfg.item_tower_in, *cfg.tower_mlp]
+        ),
+    }
+
+
+def _bag_lookup(table, indices, bag_ids, num_bags, n_valid, use_kernel):
+    if use_kernel:
+        from repro.kernels.embed_bag import ops as eb_ops
+
+        return eb_ops.embedding_bag(
+            table, indices, bag_ids, num_bags=num_bags, n_valid=n_valid,
+            mode="mean",
+        )
+    from repro.kernels.embed_bag.ref import embedding_bag_ref
+
+    return embedding_bag_ref(
+        table, indices, bag_ids, num_bags, None, n_valid, mode="mean"
+    )
+
+
+def user_tower(params, user_fields, history, history_len, cfg: TwoTowerConfig):
+    """user_fields: int32[b, n_user_fields]; history: int32[b, H] item ids
+    (padded); history_len: int32[b]."""
+    b = user_fields.shape[0]
+    field_emb = params["user_table"][
+        jnp.minimum(user_fields, cfg.user_vocab - 1)
+    ]  # [b, F, dim]
+    h = history.reshape(b * cfg.history_len)
+    bag = jnp.repeat(jnp.arange(b, dtype=jnp.int32), cfg.history_len)
+    # mask padded history slots by pushing them to an out-of-range bag
+    slot = jnp.tile(jnp.arange(cfg.history_len, dtype=jnp.int32), b)
+    valid = slot < jnp.repeat(history_len, cfg.history_len)
+    bag = jnp.where(valid, bag, b)
+    from repro.kernels.embed_bag.ref import embedding_bag_ref
+
+    if cfg.use_kernel:
+        from repro.kernels.embed_bag import ops as eb_ops
+
+        hist_emb = eb_ops.embedding_bag(
+            params["item_table"], h, bag, num_bags=b, mode="mean"
+        )
+    else:
+        hist_emb = embedding_bag_ref(
+            params["item_table"], h, bag, b, None, None, "mean"
+        )
+    feats = jnp.concatenate(
+        [field_emb.reshape(b, -1), hist_emb], axis=-1
+    )
+    out = layers.mlp_apply(params["user_mlp"], feats, act=jax.nn.relu)
+    return out / jnp.maximum(
+        jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6
+    )
+
+
+def item_tower(params, item_fields, cfg: TwoTowerConfig):
+    """item_fields: int32[b, n_item_fields]."""
+    b = item_fields.shape[0]
+    emb = params["item_table"][
+        jnp.minimum(item_fields, cfg.item_vocab - 1)
+    ]
+    out = layers.mlp_apply(
+        params["item_mlp"], emb.reshape(b, -1), act=jax.nn.relu
+    )
+    return out / jnp.maximum(
+        jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6
+    )
+
+
+def in_batch_softmax_loss(params, batch, cfg: TwoTowerConfig):
+    """Sampled softmax with in-batch negatives and logQ correction."""
+    u = user_tower(
+        params, batch["user_fields"], batch["history"],
+        batch["history_len"], cfg,
+    )
+    v = item_tower(params, batch["item_fields"], cfg)
+    logits = (u @ v.T) / cfg.temperature  # [b, b]
+    # logQ correction: subtract log sampling probability of each candidate
+    logq = batch.get("log_q")
+    if logq is not None:
+        logits = logits - logq[None, :]
+    b = logits.shape[0]
+    labels = jnp.arange(b)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).astype(jnp.float32).mean()
+    return loss, {"loss": loss, "in_batch_accuracy": acc}
+
+
+def score_pairs(params, batch, cfg: TwoTowerConfig):
+    """Online inference: score one (user, item) pair per row."""
+    u = user_tower(
+        params, batch["user_fields"], batch["history"],
+        batch["history_len"], cfg,
+    )
+    v = item_tower(params, batch["item_fields"], cfg)
+    return jnp.sum(u * v, axis=-1)
+
+
+def retrieve_topk(params, batch, candidate_fields, cfg: TwoTowerConfig,
+                  k: int = 100):
+    """One query against n_candidates items: batched dot + top-k."""
+    u = user_tower(
+        params, batch["user_fields"], batch["history"],
+        batch["history_len"], cfg,
+    )  # [1, dim]
+    v = item_tower(params, candidate_fields, cfg)  # [n_cand, dim]
+    scores = (u @ v.T)[0]  # [n_cand]
+    return jax.lax.top_k(scores, k)

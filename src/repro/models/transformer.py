@@ -1,0 +1,338 @@
+"""Decoder-only transformer LMs (dense / GQA / MoE) with train, prefill and
+cached-decode entry points.
+
+Layers are stacked with ``lax.scan`` (params carry a leading layer axis), so
+compile time is O(1) in depth — essential for 512-device dry-runs — and the
+layer body is rematerialized (activation checkpointing) for training memory.
+The LM loss is computed in token chunks so the [tokens, vocab] logits tensor
+never materializes at once (vocab stays sharded over the `model` axis; the
+chunk loop bounds the transient).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import AttentionConfig
+from repro.models.moe import MoEConfig, init_moe, moe_apply
+
+Params = Any
+
+
+def _checkpoint(body, cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return jax.checkpoint(body)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    qkv_bias: bool = False
+    # vocab rows are padded so embedding/LM-head shard evenly over `model`
+    # (granite's 49155 is not divisible by 16); padded logits are masked
+    vocab_pad_multiple: int = 16
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    moe: MoEConfig | None = None
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    attn_kv_block: int = 2048   # online-softmax KV block for seq > block
+    loss_chunk: int = 8192      # tokens per logits chunk
+    remat: bool = True
+    # remat policy: 'full' recomputes everything (min memory, max recompute
+    # flops); 'dots' saves matmul outputs (kills the recompute of the whole
+    # attention score pipeline at ~2x boundary memory)
+    remat_policy: str = "full"
+    # dtype of the attention score/PV matmuls (f32 accumulation either way);
+    # bf16 halves score-pipeline HBM traffic on TPU
+    attn_compute_dtype: str = "float32"
+    # Megatron-style sequence parallelism: residual stream sharded over the
+    # `model` axis on the sequence dim between blocks; turns activation
+    # all-reduces into reduce-scatter/all-gather pairs and divides
+    # norm/residual bytes per device by the TP degree
+    seq_parallel: bool = False
+    dp_axes_for_sp: tuple = ("data",)
+    # unroll all depth/microbatch/chunk scans: identical math, no while
+    # loops — used by the dry-run so cost_analysis counts every iteration
+    # (XLA costs a while body ONCE, not x trip-count)
+    unroll_scans: bool = False
+
+    @property
+    def attn(self) -> AttentionConfig:
+        return AttentionConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            d_head=self.d_head,
+            rope_theta=self.rope_theta,
+            qkv_bias=self.qkv_bias,
+        )
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    def param_count(self) -> int:
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        nh, nkv, dh = self.n_heads, self.n_kv_heads, self.d_head
+        attn = d * nh * dh + 2 * d * nkv * dh + nh * dh * d
+        if self.moe:
+            m = self.moe
+            mlp = (
+                d * m.n_experts  # router
+                + m.n_experts * 3 * d * m.d_ff_expert
+                + (3 * d * m.d_ff_shared if m.d_ff_shared else 0)
+            )
+        else:
+            mlp = 3 * d * ff
+        return self.n_layers * (attn + mlp + 2 * d) + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.param_count()
+        d, v, m = self.d_model, self.vocab_size, self.moe
+        nh, nkv, dh = self.n_heads, self.n_kv_heads, self.d_head
+        attn = d * nh * dh + 2 * d * nkv * dh + nh * dh * d
+        mlp = (
+            d * m.n_experts
+            + m.top_k * 3 * d * m.d_ff_expert
+            + (3 * d * m.d_ff_shared if m.d_ff_shared else 0)
+        )
+        return self.n_layers * (attn + mlp + 2 * d) + 2 * v * d + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: TransformerConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    k_attn, k_mlp = jax.random.split(key)
+    p = {
+        "ln1": layers.init_rmsnorm(cfg.d_model, pd),
+        "ln2": layers.init_rmsnorm(cfg.d_model, pd),
+        "attn": layers.init_attention(k_attn, cfg.attn, pd),
+    }
+    if cfg.moe:
+        p["moe"] = init_moe(k_mlp, cfg.d_model, cfg.moe, pd)
+    else:
+        p["mlp"] = layers.init_gated_mlp(k_mlp, cfg.d_model, cfg.d_ff, pd)
+    return p
+
+
+def init_transformer(key, cfg: TransformerConfig) -> Params:
+    pd = jnp.dtype(cfg.param_dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": jax.random.normal(
+            k_embed, (cfg.padded_vocab, cfg.d_model), pd
+        ) * cfg.d_model ** -0.5,
+        "layers": stacked,
+        "ln_f": layers.init_rmsnorm(cfg.d_model, pd),
+        "lm_head": jax.random.normal(
+            k_head, (cfg.d_model, cfg.padded_vocab), pd
+        ) * cfg.d_model ** -0.5,
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _sp_constraint(x, cfg):
+    from jax.sharding import PartitionSpec as P
+
+    dp = cfg.dp_axes_for_sp
+    dp = dp if len(dp) > 1 else dp[0]
+    return jax.lax.with_sharding_constraint(x, P(dp, "model", None))
+
+
+def _layer_body(x, layer_params, cfg: TransformerConfig, positions):
+    kv_block = cfg.attn_kv_block if x.shape[1] > cfg.attn_kv_block else None
+    if cfg.seq_parallel:
+        x = _sp_constraint(x, cfg)
+    h = x + layers.attention_apply(
+        layer_params["attn"],
+        layers.rmsnorm(layer_params["ln1"], x, cfg.norm_eps),
+        cfg.attn,
+        positions,
+        kv_block=kv_block,
+        unroll=cfg.unroll_scans,
+        compute_dtype=jnp.dtype(cfg.attn_compute_dtype),
+    )
+    if cfg.seq_parallel:
+        h = _sp_constraint(h, cfg)
+    normed = layers.rmsnorm(layer_params["ln2"], h, cfg.norm_eps)
+    if cfg.moe and cfg.moe.expert_shard_map:
+        from repro.models.moe import moe_apply_ep
+
+        y, aux = moe_apply_ep(layer_params["moe"], normed, cfg.moe)
+    elif cfg.moe:
+        y, aux = moe_apply(layer_params["moe"], normed, cfg.moe)
+    else:
+        y, aux = layers.gated_mlp(layer_params["mlp"], normed), {}
+    return h + y, aux
+
+
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig):
+    """tokens [b, s] -> (hidden [b, s, d], aux). Scan over layers + remat."""
+    dt = cfg.compute_dtype
+    x = params["embed"].astype(dt)[tokens]
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+
+    def body(x, layer_params):
+        return _layer_body(x, layer_params, cfg, positions)
+
+    if cfg.remat:
+        body = _checkpoint(body, cfg)
+    x, aux = jax.lax.scan(body, x, params["layers"],
+                          unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    aux = {k: v.mean() for k, v in aux.items()} if aux else {}
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked over tokens)
+# ---------------------------------------------------------------------------
+def lm_loss(params: Params, tokens, labels, cfg: TransformerConfig,
+            aux_weight: float = 0.01, z_weight: float = 1e-4):
+    hidden, aux = forward(params, tokens, cfg)
+    b, s, d = hidden.shape
+    t = b * s
+    h = hidden.reshape(t, d)
+    y = labels.reshape(t)
+    chunk = min(cfg.loss_chunk, t)
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        h = jnp.concatenate([h, jnp.zeros((pad, d), h.dtype)])
+        y = jnp.concatenate([y, jnp.full((pad,), -1, y.dtype)])
+    hc = h.reshape(n_chunks, chunk, d)
+    yc = y.reshape(n_chunks, chunk)
+    head = params["lm_head"]
+
+    vocab_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+
+    def chunk_loss(carry, xs):
+        hb, yb = xs
+        logits = (hb @ head.astype(hb.dtype)).astype(jnp.float32)
+        logits = jnp.where(vocab_mask[None, :], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(yb, 0)[:, None], axis=-1
+        )[:, 0]
+        w = (yb >= 0).astype(jnp.float32)
+        nll = (lse - gold) * w
+        return carry, (nll.sum(), w.sum())
+
+    _, (nll_sums, w_sums) = jax.lax.scan(
+        chunk_loss, (), (hc, yc),
+        unroll=n_chunks if cfg.unroll_scans else 1,
+    )
+    loss = nll_sums.sum() / jnp.maximum(w_sums.sum(), 1.0)
+    metrics = {"lm_loss": loss, **aux}
+    total = loss
+    if "load_balance_loss" in aux:
+        total = total + aux_weight * aux["load_balance_loss"]
+        total = total + z_weight * aux["router_z_loss"]
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + cached decode
+# ---------------------------------------------------------------------------
+def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig):
+    """Run the prompt; return (last-token logits, kv cache, cache_len).
+
+    Cache layout: k/v [n_layers, b, s, n_kv, d_head] (seq dim shardable
+    over `model` for long-context decode).
+    """
+    dt = cfg.compute_dtype
+    b, s = tokens.shape
+    x = params["embed"].astype(dt)[tokens]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    def body(x, layer_params):
+        # recompute k/v (cheap relative to attention) to emit the cache
+        normed = layers.rmsnorm(layer_params["ln1"], x, cfg.norm_eps)
+        _, k, v = layers._qkv(layer_params["attn"], normed, cfg.attn)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+        x, _ = _layer_body(x, layer_params, cfg, positions)
+        return x, (k, v)
+
+    if cfg.remat:
+        body = _checkpoint(body, cfg)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"],
+                               unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x[:, -1] @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    logits = jnp.where(
+        jnp.arange(cfg.padded_vocab) < cfg.vocab_size, logits, -1e30
+    )
+    return logits, {"k": ks, "v": vs}, jnp.int32(s)
+
+
+def decode_step(params: Params, token: jax.Array, cache, cache_len,
+                cfg: TransformerConfig):
+    """One decode step. token [b, 1] -> (logits, updated cache)."""
+    dt = cfg.compute_dtype
+    x = params["embed"].astype(dt)[token]
+
+    def body(x, xs):
+        layer_params, k_l, v_l = xs
+        normed = layers.rmsnorm(layer_params["ln1"], x, cfg.norm_eps)
+        attn_out, k_new, v_new = layers.attention_decode(
+            layer_params["attn"], normed, k_l, v_l, cache_len, cfg.attn
+        )
+        h = x + attn_out
+        normed2 = layers.rmsnorm(layer_params["ln2"], h, cfg.norm_eps)
+        if cfg.moe and cfg.moe.expert_shard_map:
+            from repro.models.moe import moe_apply_ep
+
+            y, _ = moe_apply_ep(layer_params["moe"], normed2, cfg.moe)
+        elif cfg.moe:
+            y, _ = moe_apply(layer_params["moe"], normed2, cfg.moe)
+        else:
+            y = layers.gated_mlp(layer_params["mlp"], normed2)
+        return h + y, (k_new, v_new)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.n_layers if cfg.unroll_scans else 1,
+    )
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x[:, -1] @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    logits = jnp.where(
+        jnp.arange(cfg.padded_vocab) < cfg.vocab_size, logits, -1e30
+    )
+    return logits, {"k": ks, "v": vs}
+
+
+def make_empty_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+                     dtype=None):
+    dt = dtype or cfg.compute_dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

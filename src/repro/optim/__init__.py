@@ -1,0 +1,14 @@
+"""Optimizers, schedules, gradient transforms (clipping, compression)."""
+
+from repro.optim.optimizers import adamw, sgd, OptState, Optimizer  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine_warmup,
+    linear_warmup,
+)
+from repro.optim.grad import (  # noqa: F401
+    clip_by_global_norm,
+    global_norm,
+    int8_compress,
+    int8_decompress,
+)

@@ -1,0 +1,73 @@
+"""Gradient transforms: clipping, accumulation, int8 error-feedback
+compression.
+
+The compression pair targets the slow cross-pod (DCN) axis: gradients are
+quantized to int8 with a per-tensor scale before the pod all-reduce and the
+quantization error is fed back into the next step's gradient (error-feedback
+SGD, Seide et al. / Karimireddy et al.), which keeps convergence unbiased
+in practice. 4x fewer bytes on the pod axis = 4x lower collective term for
+DP-over-DCN (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def int8_compress(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x -> (int8 payload, fp32 scale). Symmetric per-tensor quantization."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: Params):
+    """Quantize every leaf; returns (payload tree, scale tree)."""
+    qs = jax.tree.map(int8_compress, grads)
+    payload = jax.tree.map(lambda t: t[0], qs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    scales = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return payload, scales
+
+
+def error_feedback_compress(grads: Params, error: Params):
+    """(grads + error) -> int8 payload; returns payload, scales, new error.
+
+    new_error = (g + e) - dequant(quant(g + e)); feed into next step.
+    """
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, error)
+    payload, scales = compress_tree(corrected)
+    dq = jax.tree.map(int8_decompress, payload, scales)
+    new_error = jax.tree.map(lambda c, d: c - d, corrected, dq)
+    return payload, scales, new_error
+
+
+def init_error_state(params: Params) -> Params:
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )

@@ -1,0 +1,88 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+Self-contained (no optax dependency): AdamW and SGD+momentum, both
+shard-transparent — optimizer state inherits parameter sharding, so ZeRO-1
+style sharded optimizer state falls out of pjit by giving the state the same
+(or more sharded) PartitionSpecs as the params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment / momentum
+    nu: Any          # second moment (None for sgd)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, Params, OptState, jax.Array], tuple]
+    # update(grads, params, state, lr) -> (new_params, new_state)
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params: Params) -> OptState:
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return OptState(step=jnp.int32(0), mu=zeros,
+                        nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, params, state: OptState, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * (g * g), state.nu, grads
+        )
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return (
+                p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+            ).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params: Params) -> OptState:
+        return OptState(
+            step=jnp.int32(0),
+            mu=jax.tree.map(jnp.zeros_like, params),
+            nu=None,
+        )
+
+    def update(grads, params, state: OptState, lr):
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g, state.mu, grads
+        )
+        if nesterov:
+            eff = jax.tree.map(lambda g, m: g + momentum * m, grads, mu)
+        else:
+            eff = mu
+        new_params = jax.tree.map(
+            lambda p, e: (p - lr * e).astype(p.dtype), params, eff
+        )
+        return new_params, OptState(step=state.step + 1, mu=mu, nu=None)
+
+    return Optimizer(init=init, update=update)

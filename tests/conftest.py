@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# CPU-contention-friendly hypothesis defaults (the dry-run sweep may be
+# running concurrently on this single-core container)
+settings.register_profile("repro", max_examples=25, deadline=None)
+settings.load_profile("repro")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

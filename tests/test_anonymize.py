@@ -1,0 +1,62 @@
+"""Anonymization properties: bijectivity, prefix preservation, structure
+preservation of the traffic matrix."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import anonymize, matrix_build
+
+u32 = st.integers(0, 2 ** 32 - 1)
+
+
+@given(st.lists(u32, min_size=1, max_size=256), st.integers(0, 2 ** 31))
+def test_feistel_bijective(addrs, key):
+    a = jnp.asarray(np.array(addrs, np.uint32))
+    anon = anonymize.feistel_permute(a, key)
+    back = anonymize.feistel_unpermute(anon, key)
+    assert np.array_equal(np.asarray(back), np.asarray(a))
+
+
+@given(st.lists(u32, min_size=1, max_size=256), st.integers(0, 2 ** 31))
+def test_cryptopan_bijective(addrs, key):
+    a = jnp.asarray(np.array(addrs, np.uint32))
+    anon = anonymize.cryptopan(a, key)
+    back = anonymize.cryptopan_inverse(anon, key)
+    assert np.array_equal(np.asarray(back), np.asarray(a))
+
+
+@given(u32, st.integers(0, 31), st.integers(0, 2 ** 31))
+def test_cryptopan_prefix_preserving(addr, flip_bit, key):
+    """Two addresses differing first at bit k share exactly the top-k
+    anonymized prefix."""
+    a1 = np.uint32(addr)
+    a2 = np.uint32(addr ^ (1 << flip_bit))
+    c1, c2 = np.asarray(
+        anonymize.cryptopan(jnp.asarray(np.array([a1, a2])), key)
+    )
+    # common input prefix length
+    diff = int(a1 ^ a2)
+    k = 32 - diff.bit_length()
+    out_diff = int(c1 ^ c2)
+    out_k = 32 - out_diff.bit_length()
+    assert out_k == k
+
+
+def test_distinctness_preserved(rng):
+    """Anonymized traffic matrix has identical structure statistics."""
+    pkts = rng.integers(0, 1 << 16, (2048, 2)).astype(np.uint32)
+    anon = anonymize.anonymize_packets(jnp.asarray(pkts), 7, "feistel")
+    A = matrix_build(jnp.asarray(pkts[:, 0]), jnp.asarray(pkts[:, 1]))
+    B = matrix_build(anon[:, 0], anon[:, 1])
+    assert int(A.nnz) == int(B.nnz)
+    av = np.sort(np.asarray(A.masked_vals()))
+    bv = np.sort(np.asarray(B.masked_vals()))
+    assert np.array_equal(av, bv)  # multiset of link counts identical
+
+
+def test_keys_differ(rng):
+    addrs = jnp.asarray(rng.integers(0, 1 << 32, 512, dtype=np.uint32))
+    a1 = np.asarray(anonymize.feistel_permute(addrs, 1))
+    a2 = np.asarray(anonymize.feistel_permute(addrs, 2))
+    assert (a1 != a2).mean() > 0.99

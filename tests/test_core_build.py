@@ -1,0 +1,162 @@
+"""matrix_build: the GrB_Matrix_build reproduction, against numpy oracles
+and algebraic properties (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import matrix_build, types
+from repro.core.build import build_window, dedup_sorted, lex_sort, vector_build
+
+
+def dense_ref(src, dst, n, vals=None):
+    ref = np.zeros((n, n), np.int64)
+    np.add.at(ref, (src.astype(np.int64), dst.astype(np.int64)),
+              1 if vals is None else vals)
+    return ref
+
+
+def as_dense(A, n):
+    r, c, v = A.entries()
+    out = np.zeros((n, n), np.int64)
+    out[r.astype(np.int64), c.astype(np.int64)] = v
+    return out
+
+
+@pytest.mark.parametrize("n,ids", [(64, 8), (1024, 50), (4096, 3000)])
+def test_build_matches_numpy(rng, n, ids):
+    src = rng.integers(0, ids, n).astype(np.uint32)
+    dst = rng.integers(0, ids, n).astype(np.uint32)
+    A = jax.jit(lambda r, c: matrix_build(r, c, nrows=ids, ncols=ids))(
+        src, dst
+    )
+    assert np.array_equal(as_dense(A, ids), dense_ref(src, dst, ids))
+    assert int(A.nnz) == (dense_ref(src, dst, ids) > 0).sum()
+
+
+def test_build_full_address_space(rng):
+    """Coordinates across the whole 2^32 space, including 0xFFFFFFFF."""
+    src = rng.integers(0, 1 << 32, 500, dtype=np.uint32)
+    dst = rng.integers(0, 1 << 32, 500, dtype=np.uint32)
+    src[:3] = 0xFFFFFFFF  # broadcast addresses are legal traffic
+    dst[:3] = 0xFFFFFFFF
+    A = matrix_build(jnp.asarray(src), jnp.asarray(dst))
+    r, c, v = A.entries()
+    # exact multiset equality with numpy unique
+    pairs = np.stack([src, dst], 1)
+    uniq, counts = np.unique(pairs, axis=0, return_counts=True)
+    assert int(A.nnz) == len(uniq)
+    got = {(int(a), int(b)): int(x) for a, b, x in zip(r, c, v)}
+    want = {(int(a), int(b)): int(k) for (a, b), k in zip(uniq, counts)}
+    assert got == want
+
+
+def test_build_with_n_valid(rng):
+    src = rng.integers(0, 50, 256).astype(np.uint32)
+    dst = rng.integers(0, 50, 256).astype(np.uint32)
+    A = matrix_build(jnp.asarray(src), jnp.asarray(dst), nrows=64, ncols=64,
+                     n_valid=100)
+    assert np.array_equal(
+        as_dense(A, 64), dense_ref(src[:100], dst[:100], 64)
+    )
+
+
+def test_build_dup_monoids(rng):
+    src = rng.integers(0, 10, 200).astype(np.uint32)
+    dst = rng.integers(0, 10, 200).astype(np.uint32)
+    vals = rng.integers(1, 100, 200).astype(np.int32)
+    for monoid, np_op in [(types.PLUS_MONOID, np.add),
+                          (types.MIN_MONOID, np.minimum),
+                          (types.MAX_MONOID, np.maximum)]:
+        A = matrix_build(jnp.asarray(src), jnp.asarray(dst),
+                         jnp.asarray(vals), nrows=10, ncols=10, dup=monoid)
+        ident = {"plus": 0, "min": np.iinfo(np.int32).max,
+                 "max": np.iinfo(np.int32).min}[monoid.name]
+        ref = np.full((10, 10), ident, np.int64)
+        np_op.at(ref, (src.astype(int), dst.astype(int)), vals)
+        if monoid.name == "plus":
+            ref[ref == ident] = 0
+        mask = dense_ref(src, dst, 10) > 0
+        got = as_dense(A, 10)
+        assert np.array_equal(got[mask], ref[mask]), monoid.name
+
+
+@given(
+    st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)),
+             min_size=1, max_size=200)
+)
+def test_build_property_counts(pairs):
+    """nnz == #distinct pairs; sum == #pairs; order sorted; no dups."""
+    arr = np.array(pairs, np.uint32)
+    A = matrix_build(jnp.asarray(arr[:, 0]), jnp.asarray(arr[:, 1]),
+                     nrows=32, ncols=32)
+    r, c, v = A.entries()
+    assert int(A.nnz) == len({tuple(p) for p in pairs})
+    assert v.sum() == len(pairs)
+    keys = list(zip(r.tolist(), c.tolist()))
+    assert keys == sorted(keys)
+    assert len(set(keys)) == len(keys)
+
+
+def test_lex_sort_stability_and_validity(rng):
+    """Caller contract: invalid keys are forced to SENTINEL first; the
+    valid= tiebreak then guarantees real max-key entries (255.255.255.255)
+    still precede padding, so the leading-nnz invariant holds."""
+    from repro.core.hypersparse import SENTINEL
+
+    rows = rng.integers(0, 5, 64).astype(np.uint32)
+    cols = rng.integers(0, 5, 64).astype(np.uint32)
+    valid = rng.random(64) < 0.5
+    # include a real broadcast-address entry among the valid ones
+    rows[np.argmax(valid)] = 0xFFFFFFFF
+    cols[np.argmax(valid)] = 0xFFFFFFFF
+    forced_r = np.where(valid, rows, np.uint32(SENTINEL))
+    forced_c = np.where(valid, cols, np.uint32(SENTINEL))
+    payload = np.arange(64).astype(np.int32)
+    r, c, p = lex_sort(jnp.asarray(forced_r), jnp.asarray(forced_c),
+                       jnp.asarray(payload), valid=jnp.asarray(valid))
+    r, c, p = np.asarray(r), np.asarray(c), np.asarray(p)
+    nv = valid.sum()
+    # all valid entries first (their original keys), sorted lexicographically
+    assert valid[p[:nv]].all() and not valid[p[nv:]].any()
+    got = list(zip(r[:nv].tolist(), c[:nv].tolist()))
+    want = sorted(zip(rows[valid].tolist(), cols[valid].tolist()))
+    assert got == want
+
+
+def test_vector_build(rng):
+    idx = rng.integers(0, 100, 300).astype(np.uint32)
+    vals = rng.integers(1, 5, 300).astype(np.int32)
+    v = vector_build(jnp.asarray(idx), jnp.asarray(vals), length=100)
+    ref = np.zeros(100, np.int64)
+    np.add.at(ref, idx.astype(int), vals)
+    assert np.array_equal(np.asarray(v.to_dense()), ref)
+
+
+def test_build_window_shape(rng):
+    pkts = rng.integers(0, 1 << 32, (1024, 2), dtype=np.uint32)
+    A = build_window(jnp.asarray(pkts))
+    assert A.capacity == 1024
+    assert int(A.vals.sum()) == 1024
+
+
+def test_count_fast_path_equals_general(rng):
+    """The counting build (no value payload) == the general build with
+    explicit ones, including the broadcast-address corner."""
+    src = rng.integers(0, 1 << 32, 2048, dtype=np.uint32)
+    dst = rng.integers(0, 1 << 32, 2048, dtype=np.uint32)
+    src[:5] = 0xFFFFFFFF
+    dst[:5] = 0xFFFFFFFF
+    fast = matrix_build(jnp.asarray(src), jnp.asarray(dst),
+                        count_fast_path=True, n_valid=2000)
+    slow = matrix_build(jnp.asarray(src), jnp.asarray(dst),
+                        count_fast_path=False, n_valid=2000)
+    assert int(fast.nnz) == int(slow.nnz)
+    np.testing.assert_array_equal(np.asarray(fast.rows),
+                                  np.asarray(slow.rows))
+    np.testing.assert_array_equal(np.asarray(fast.cols),
+                                  np.asarray(slow.cols))
+    np.testing.assert_array_equal(np.asarray(fast.vals),
+                                  np.asarray(slow.vals))

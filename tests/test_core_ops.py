@@ -1,0 +1,156 @@
+"""GraphBLAS op set vs dense numpy oracles + semiring properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import from_dense, ops, types
+
+
+def rand_dense(rng, n=24, density=0.2, lo=1, hi=9):
+    d = rng.integers(lo, hi, (n, n)).astype(np.int32)
+    mask = rng.random((n, n)) < density
+    return (d * mask).astype(np.int32)
+
+
+def as_np(A, n):
+    r, c, v = A.entries()
+    out = np.zeros((n, n), np.int64)
+    out[r.astype(int), c.astype(int)] = v
+    return out
+
+
+def test_ewise_add_union(rng):
+    a, b = rand_dense(rng), rand_dense(rng)
+    A, B = from_dense(jnp.asarray(a)), from_dense(jnp.asarray(b))
+    C, ovf = ops.ewise_add(A, B)
+    assert int(ovf) == 0
+    assert np.array_equal(as_np(C, 24), a.astype(np.int64) + b)
+
+
+def test_ewise_add_noncommutative_op(rng):
+    a, b = rand_dense(rng), rand_dense(rng)
+    A, B = from_dense(jnp.asarray(a)), from_dense(jnp.asarray(b))
+    C, _ = ops.ewise_add(A, B, types.FIRST)
+    # where both present: takes A's value; union elsewhere
+    both = (a != 0) & (b != 0)
+    ref = (a + b).astype(np.int64)
+    ref[both] = a[both]
+    assert np.array_equal(as_np(C, 24), ref)
+
+
+def test_ewise_add_overflow_accounting(rng):
+    a, b = rand_dense(rng, density=0.5), rand_dense(rng, density=0.5)
+    A, B = from_dense(jnp.asarray(a)), from_dense(jnp.asarray(b))
+    cap = 10
+    C, ovf = ops.ewise_add(A, B, out_capacity=cap)
+    union = ((a != 0) | (b != 0)).sum()
+    assert int(ovf) == max(0, union - cap)
+    assert int(C.nnz) == min(cap, union)
+
+
+def test_ewise_mult_intersection(rng):
+    a, b = rand_dense(rng, density=0.4), rand_dense(rng, density=0.4)
+    A, B = from_dense(jnp.asarray(a)), from_dense(jnp.asarray(b))
+    C, _ = ops.ewise_mult(A, B, out_capacity=24 * 24)
+    assert np.array_equal(as_np(C, 24), a.astype(np.int64) * b)
+
+
+def test_mxm_plus_times(rng):
+    a, b = rand_dense(rng, 16, 0.3), rand_dense(rng, 16, 0.3)
+    A, B = from_dense(jnp.asarray(a)), from_dense(jnp.asarray(b))
+    C, ovf = ops.mxm(A, B, types.PLUS_TIMES, expansion_capacity=4096)
+    assert int(ovf) == 0
+    assert np.array_equal(as_np(C, 16), a.astype(np.int64) @ b)
+
+
+def test_mxm_min_plus(rng):
+    # shortest-path relaxation semiring over the pattern
+    inf = 10 ** 6
+    a = rand_dense(rng, 12, 0.4, 1, 9).astype(np.int32)
+    b = rand_dense(rng, 12, 0.4, 1, 9).astype(np.int32)
+    A, B = from_dense(jnp.asarray(a)), from_dense(jnp.asarray(b))
+    C, _ = ops.mxm(A, B, types.MIN_PLUS, expansion_capacity=4096)
+    ad = np.where(a == 0, inf, a).astype(np.int64)
+    bd = np.where(b == 0, inf, b).astype(np.int64)
+    ref = (ad[:, :, None] + bd[None, :, :]).min(axis=1)
+    got = as_np(C, 12)
+    mask = got != 0  # only compare where structurally present
+    assert (got[mask] == ref[mask]).all()
+
+
+def test_mxm_overflow_reported(rng):
+    a = (rand_dense(rng, 16, 0.9) > 0).astype(np.int32)
+    A = from_dense(jnp.asarray(a))
+    C, ovf = ops.mxm(A, A, expansion_capacity=64)
+    assert int(ovf) > 0  # dense-ish square blows a tiny expansion budget
+
+
+def test_reductions(rng):
+    a = rand_dense(rng)
+    A = from_dense(jnp.asarray(a))
+    assert np.array_equal(
+        np.asarray(ops.reduce_rows(A).to_dense()), a.sum(1)
+    )
+    assert np.array_equal(
+        np.asarray(ops.reduce_cols(A).to_dense()), a.sum(0)
+    )
+    assert int(ops.reduce_scalar(A)) == a.sum()
+    assert int(ops.reduce_scalar(A, types.MAX_MONOID)) == a.max()
+    fanout = ops.reduce_rows(ops.apply(A, types.ONE))
+    assert np.array_equal(
+        np.asarray(fanout.to_dense()), (a > 0).sum(1)
+    )
+
+
+def test_transpose_select_extract(rng):
+    a = rand_dense(rng)
+    A = from_dense(jnp.asarray(a))
+    assert np.array_equal(as_np(ops.transpose(A), 24), a.T)
+    # select: keep entries > 4
+    S = ops.select(A, lambda r, c, v: v > 4)
+    ref = np.where(a > 4, a, 0)
+    assert np.array_equal(as_np(S, 24), ref)
+    # extract block [4, 12) x [8, 20)
+    E = ops.extract_block(A, 4, 12, 8, 20)
+    r, c, v = E.entries()
+    got = np.zeros((8, 12), np.int64)
+    got[r.astype(int), c.astype(int)] = v
+    assert np.array_equal(got, a[4:12, 8:20])
+
+
+def test_with_capacity_roundtrip(rng):
+    a = rand_dense(rng)
+    A = from_dense(jnp.asarray(a))
+    B, ovf = ops.with_capacity(A, int(A.nnz))
+    assert int(ovf) == 0
+    assert np.array_equal(as_np(B, 24), a)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 40))
+def test_ewise_add_commutative_plus(seed, n):
+    rng = np.random.default_rng(seed)
+    a = rand_dense(rng, 16, 0.3)
+    b = rand_dense(rng, 16, 0.3)
+    A, B = from_dense(jnp.asarray(a)), from_dense(jnp.asarray(b))
+    C1, _ = ops.ewise_add(A, B)
+    C2, _ = ops.ewise_add(B, A)
+    assert np.array_equal(as_np(C1, 16), as_np(C2, 16))
+
+
+def test_spmm_sddmm_vs_dense(rng):
+    a = rand_dense(rng, 32, 0.2).astype(np.float32)
+    A = from_dense(jnp.asarray(a))
+    X = rng.standard_normal((32, 7)).astype(np.float32)
+    out = ops.spmm_dense(A, jnp.asarray(X), num_rows=32)
+    np.testing.assert_allclose(np.asarray(out), a @ X, rtol=1e-4, atol=1e-4)
+
+    U = rng.standard_normal((32, 5)).astype(np.float32)
+    V = rng.standard_normal((32, 5)).astype(np.float32)
+    e = ops.sddmm(A.rows, A.cols, jnp.asarray(U), jnp.asarray(V), A.nnz)
+    r, c, _ = A.entries()
+    ref = np.einsum("ed,ed->e", U[r.astype(int)], V[c.astype(int)])
+    np.testing.assert_allclose(np.asarray(e)[: len(ref)], ref, rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,117 @@
+"""Algebraic property tests (hypothesis): the GraphBLAS laws the system's
+distributed correctness rests on.
+
+The merge tree and the distributed psum/all_to_all analytics are only exact
+because ewise_add(plus) is associative+commutative, build is
+order-invariant, and reductions are monoid homomorphisms — so these are
+tested as laws, not examples.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_dense, matrix_build, ops, types
+
+
+def _dense(seed, n=12, density=0.35):
+    rng = np.random.default_rng(seed)
+    d = rng.integers(1, 8, (n, n)).astype(np.int32)
+    return (d * (rng.random((n, n)) < density)).astype(np.int32)
+
+
+def _np(A, n=12):
+    r, c, v = A.entries()
+    out = np.zeros((n, n), np.int64)
+    out[r.astype(int), c.astype(int)] = v
+    return out
+
+
+seeds = st.integers(0, 2 ** 31 - 1)
+
+
+@given(seeds, seeds, seeds)
+@settings(max_examples=15)
+def test_ewise_add_associative(s1, s2, s3):
+    A, B, C = (from_dense(jnp.asarray(_dense(s))) for s in (s1, s2, s3))
+    left = ops.ewise_add(ops.ewise_add(A, B).matrix, C).matrix
+    right = ops.ewise_add(A, ops.ewise_add(B, C).matrix).matrix
+    assert np.array_equal(_np(left), _np(right))
+
+
+@given(seeds, seeds)
+@settings(max_examples=15)
+def test_mxm_distributes_over_ewise_add(s1, s2):
+    """A @ (B + C) == A@B + A@C over plus_times."""
+    A = from_dense(jnp.asarray(_dense(s1)))
+    B = from_dense(jnp.asarray(_dense(s2)))
+    C = from_dense(jnp.asarray(_dense(s1 ^ s2)))
+    bc = ops.ewise_add(B, C).matrix
+    left = ops.mxm(A, bc, expansion_capacity=4096).matrix
+    ab = ops.mxm(A, B, expansion_capacity=4096).matrix
+    ac = ops.mxm(A, C, expansion_capacity=4096).matrix
+    right = ops.ewise_add(ab, ac).matrix
+    assert np.array_equal(_np(left), _np(right))
+
+
+@given(seeds)
+@settings(max_examples=15)
+def test_build_order_invariance(seed):
+    """Permuting the packet stream never changes the matrix."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 20, 300).astype(np.uint32)
+    dst = rng.integers(0, 20, 300).astype(np.uint32)
+    perm = rng.permutation(300)
+    A = matrix_build(jnp.asarray(src), jnp.asarray(dst), nrows=32, ncols=32)
+    B = matrix_build(jnp.asarray(src[perm]), jnp.asarray(dst[perm]),
+                     nrows=32, ncols=32)
+    np.testing.assert_array_equal(np.asarray(A.rows), np.asarray(B.rows))
+    np.testing.assert_array_equal(np.asarray(A.vals), np.asarray(B.vals))
+
+
+@given(seeds, st.integers(1, 4))
+@settings(max_examples=15)
+def test_split_build_merge_equals_single_build(seed, parts):
+    """The distributed invariant: building shards and ewise_add-merging ==
+    building everything at once (this is why window/device sharding is
+    exact)."""
+    rng = np.random.default_rng(seed)
+    n = 64 * parts
+    src = rng.integers(0, 30, n).astype(np.uint32)
+    dst = rng.integers(0, 30, n).astype(np.uint32)
+    whole = matrix_build(jnp.asarray(src), jnp.asarray(dst), nrows=32,
+                         ncols=32)
+    shards = [
+        matrix_build(jnp.asarray(src[i::parts]), jnp.asarray(dst[i::parts]),
+                     nrows=32, ncols=32)
+        for i in range(parts)
+    ]
+    acc = shards[0]
+    for sh in shards[1:]:
+        acc = ops.ewise_add(acc, sh).matrix
+    assert np.array_equal(_np(whole, 32), _np(acc, 32))
+
+
+@given(seeds)
+@settings(max_examples=15)
+def test_transpose_involution(seed):
+    A = from_dense(jnp.asarray(_dense(seed)))
+    att = ops.transpose(ops.transpose(A))
+    assert np.array_equal(_np(A), _np(att))
+
+
+@given(seeds)
+@settings(max_examples=15)
+def test_reduce_is_homomorphism(seed):
+    """reduce(A + B) == reduce(A) + reduce(B) for the plus monoid."""
+    A = from_dense(jnp.asarray(_dense(seed)))
+    B = from_dense(jnp.asarray(_dense(seed ^ 0xABCD)))
+    merged = ops.ewise_add(A, B).matrix
+    lhs = int(ops.reduce_scalar(merged))
+    rhs = int(ops.reduce_scalar(A)) + int(ops.reduce_scalar(B))
+    assert lhs == rhs
+    # and for max: reduce_max(A+B) >= max(reduce_max(A), reduce_max(B))
+    mx = int(ops.reduce_scalar(merged, types.MAX_MONOID))
+    assert mx >= max(int(ops.reduce_scalar(A, types.MAX_MONOID)),
+                     int(ops.reduce_scalar(B, types.MAX_MONOID)))

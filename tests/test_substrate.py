@@ -1,0 +1,235 @@
+"""Substrate: optimizers, schedules, compression, checkpointing, data
+pipeline, distributed control plane."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data.packets import PcapLite, traffic_batches, zipf_traffic
+from repro.data.pipeline import Prefetcher
+from repro.data.tokens import TokenStream
+from repro.distributed.fault import (
+    HeartbeatMonitor,
+    StragglerPolicy,
+    elastic_transition,
+    plan_mesh,
+)
+from repro.optim import adamw, cosine_warmup, linear_warmup, sgd
+from repro.optim.grad import (
+    clip_by_global_norm,
+    error_feedback_compress,
+    global_norm,
+    init_error_state,
+    int8_compress,
+    int8_decompress,
+)
+
+
+# -- optimizers ---------------------------------------------------------------
+def test_adamw_first_step_math():
+    """First AdamW step = -lr * (g/(|g|+eps) + wd*p) elementwise."""
+    opt = adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.1)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.25])}
+    st0 = opt.init(p)
+    p1, st1 = opt.update(g, p, st0, 0.01)
+    # bias-corrected mhat = g, vhat = g^2 -> update = g/|g| = sign(g)
+    expect = np.asarray([1.0, -2.0]) - 0.01 * (
+        np.asarray([1.0, 1.0]) + 0.1 * np.asarray([1.0, -2.0])
+    )
+    np.testing.assert_allclose(np.asarray(p1["w"]), expect, rtol=1e-4)
+    assert int(st1.step) == 1
+
+
+def test_sgd_momentum():
+    opt = sgd(momentum=0.5)
+    p = {"w": jnp.ones(3)}
+    g = {"w": jnp.ones(3)}
+    st0 = opt.init(p)
+    p1, st1 = opt.update(g, p, st0, 0.1)
+    p2, st2 = opt.update(g, p1, st1, 0.1)
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               1 - 0.1 - 0.1 * 1.5, rtol=1e-5)
+
+
+def test_convergence_quadratic():
+    """AdamW minimizes a quadratic — sanity that the update math descends."""
+    opt = adamw(weight_decay=0.0)
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, state = opt.update(g, p, state, 0.1)
+    assert float(jnp.abs(p["w"]).max()) < 0.2
+
+
+def test_schedules():
+    f = linear_warmup(1.0, 10)
+    assert float(f(0)) < float(f(5)) < float(f(20)) == 1.0
+    g = cosine_warmup(1.0, 10, 100)
+    assert float(g(99)) < float(g(20))
+    assert abs(float(g(10 ** 6)) - 0.1) < 1e-5
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    assert float(norm) == 20.0
+
+
+# -- compression ----------------------------------------------------------------
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int8_roundtrip_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(128).astype(np.float32) * 10)
+    q, s = int8_compress(x)
+    back = int8_decompress(q, s)
+    assert float(jnp.abs(back - x).max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_telescopes(rng):
+    """Sum of dequantized payloads + final error == sum of raw gradients."""
+    params = {"w": jnp.zeros(64)}
+    err = init_error_state(params)
+    total_raw = np.zeros(64, np.float32)
+    total_deq = np.zeros(64, np.float32)
+    for i in range(5):
+        g = {"w": jnp.asarray(rng.standard_normal(64).astype(np.float32))}
+        payload, scales, err = error_feedback_compress(g, err)
+        total_raw += np.asarray(g["w"])
+        total_deq += np.asarray(int8_decompress(payload["w"], scales["w"]))
+    resid = total_raw - (total_deq + np.asarray(err["w"]))
+    np.testing.assert_allclose(resid, 0, atol=1e-4)
+
+
+# -- checkpoint ----------------------------------------------------------------
+def test_pytree_roundtrip(rng):
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((3, 4)).astype(np.float32)),
+        "b": [jnp.int32(7), None],
+        "c": {"d": jnp.asarray(rng.integers(0, 5, 6, dtype=np.int32))},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree(tree, f"{d}/x.rpck", meta={"k": 1})
+        back, meta = load_pytree(f"{d}/x.rpck", like=tree)
+        assert meta == {"k": 1}
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manager_retention_and_restart(rng):
+    state = {"w": jnp.arange(8, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, jax.tree.map(lambda x: x * s, state))
+        assert mgr.steps() == [3, 4]
+        restored, meta = mgr.restore(state)
+        assert meta["step"] == 4
+        np.testing.assert_allclose(np.asarray(restored["w"]),
+                                   np.arange(8) * 4)
+        # structure mismatch is rejected, not silently mis-restored
+        try:
+            mgr.restore({"other": state["w"], "second": state["w"]})
+            raised = False
+        except ValueError:
+            raised = True
+        assert raised
+
+
+def test_checkpoint_crash_safety(rng):
+    """A .tmp from a crashed save never shadows the latest checkpoint."""
+    state = {"w": jnp.ones(4)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        mgr.save(1, state)
+        (mgr.dir / "ckpt_0000000002.tmp").write_bytes(b"garbage")
+        assert mgr.latest_step() == 1
+        restored, _ = mgr.restore(state)
+        assert restored is not None
+
+
+# -- data ----------------------------------------------------------------------
+def test_token_stream_exact_resume():
+    s1 = TokenStream(7, 500, 2, 8)
+    batches = [next(s1) for _ in range(5)]
+    s2 = TokenStream.from_state(
+        {"seed": 7, "step": 3, "vocab_size": 500, "batch": 2, "seq_len": 8}
+    )
+    np.testing.assert_array_equal(batches[3][0], next(s2)[0])
+
+
+def test_pcap_roundtrip_and_stream(rng, tmp_path):
+    pkts = zipf_traffic(rng, 1000)
+    PcapLite.write(tmp_path / "t.pcl", pkts)
+    assert np.array_equal(PcapLite.read(tmp_path / "t.pcl"), pkts)
+    wins = list(PcapLite.stream_windows(tmp_path / "t.pcl", 256))
+    assert len(wins) == 3 and wins[0].shape == (256, 2)
+
+
+def test_traffic_batches_deterministic():
+    a = list(traffic_batches(seed=1, n_batches=2, windows_per_batch=2,
+                             window_size=16))
+    b = list(traffic_batches(seed=1, n_batches=2, windows_per_batch=2,
+                             window_size=16))
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_prefetcher_error_propagation():
+    def gen():
+        yield 1
+        raise RuntimeError("boom")
+
+    pf = Prefetcher(gen())
+    assert next(pf) == 1
+    try:
+        next(pf)
+        raised = False
+    except RuntimeError:
+        raised = True
+    assert raised
+
+
+# -- fault control plane -------------------------------------------------------
+def test_straggler_lifecycle():
+    mon = HeartbeatMonitor(3, dead_after_s=5.0)
+    for step in range(6):
+        mon.beat(0, step, 1.0, now=step)
+        mon.beat(1, step, 1.0, now=step)
+        mon.beat(2, step, 10.0, now=step)
+    pol = StragglerPolicy(mon, drop_after_straggles=2)
+    assert pol.evaluate(now=5.0).action == "proceed"
+    d = pol.evaluate(now=5.5)
+    assert d.action == "drop" and d.hosts == (2,)
+    assert abs(d.grad_rescale - 1.5) < 1e-9
+    # now host 2 stops beating entirely -> evict
+    for step in range(6, 9):
+        mon.beat(0, step, 1.0, now=step)
+        mon.beat(1, step, 1.0, now=step)
+    d2 = pol.evaluate(now=20.0)
+    assert d2.action == "evict" and 2 in d2.hosts
+
+
+def test_elastic_plans():
+    assert plan_mesh(512) == ((2, 16, 16), ("pod", "data", "model"))
+    assert plan_mesh(256) == ((16, 16), ("data", "model"))
+    assert plan_mesh(768, devices_per_pod=256) == (
+        (3, 16, 16), ("pod", "data", "model")
+    )
+    tr = elastic_transition(range(512), [0])
+    assert tr["mesh_shape"] == (31, 16)
+    assert len(tr["devices"]) == 496 and len(tr["idle"]) == 15
+
+
+def test_sharding_batch_axes():
+    import jax as j
+    from repro.distributed.sharding import batch_axes_for
+
+    mesh = j.make_mesh((1, 1), ("data", "model"),
+                       axis_types=(j.sharding.AxisType.Auto,) * 2)
+    assert batch_axes_for(7, mesh) == "data"  # size-1 axis divides anything

@@ -1,0 +1,104 @@
+"""Window pipeline: merge tree exactness + overflow audit; analytics vs
+numpy oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analytics, matrix_build
+from repro.core.window import (
+    WindowConfig,
+    merge_tree,
+    process_batch,
+    process_windows_batched,
+    window_slices,
+)
+
+
+def test_merge_tree_exact(rng):
+    cfg = WindowConfig(window_log2=7, windows_per_batch=16,
+                       cap_max_log2=12, anonymization="none")
+    pkts = rng.integers(0, 60, (16 * 128, 2)).astype(np.uint32)
+    wins = window_slices(jnp.asarray(pkts), cfg)
+    merged, _, ovf = jax.jit(lambda w: process_batch(w, cfg))(wins)
+    assert int(ovf) == 0
+    ref = np.zeros((64, 64), np.int64)
+    np.add.at(ref, (pkts[:, 0].astype(int), pkts[:, 1].astype(int)), 1)
+    r, c, v = merged.entries()
+    got = np.zeros((64, 64), np.int64)
+    got[r.astype(int), c.astype(int)] = v
+    assert np.array_equal(got, ref)
+
+
+def test_merge_tree_overflow_is_counted(rng):
+    cfg = WindowConfig(window_log2=7, windows_per_batch=8,
+                       cap_max_log2=7, anonymization="none")  # tiny cap
+    pkts = rng.integers(0, 5000, (8 * 128, 2)).astype(np.uint32)
+    wins = window_slices(jnp.asarray(pkts), cfg)
+    mats = process_windows_batched(wins, cfg)
+    merged, ovf = merge_tree(mats, cfg)
+    uniq = len({(int(a), int(b)) for a, b in pkts})
+    # dropped + kept == distinct links
+    assert int(ovf) + int(merged.nnz) == uniq
+    assert int(ovf) > 0
+
+
+def test_anonymization_invariant_stats(rng):
+    cfg_plain = WindowConfig(window_log2=8, windows_per_batch=4,
+                             cap_max_log2=11, anonymization="none")
+    cfg_anon = WindowConfig(window_log2=8, windows_per_batch=4,
+                            cap_max_log2=11, anonymization="feistel")
+    pkts = rng.integers(0, 1 << 20, (4, 256, 2)).astype(np.uint32)
+    w = jnp.asarray(pkts)
+    m_plain = process_batch(w, cfg_plain)[0]
+    m_anon = process_batch(w, cfg_anon)[0]
+    s1 = analytics.window_stats(m_plain)
+    s2 = analytics.window_stats(m_anon)
+    for k in ("valid_packets", "unique_links", "unique_sources",
+              "unique_destinations", "max_packets_per_link",
+              "max_source_fanout", "max_dest_fanin"):
+        assert int(s1[k]) == int(s2[k]), k
+
+
+def test_analytics_vs_numpy(rng):
+    src = rng.integers(0, 40, 2000).astype(np.uint32)
+    dst = rng.integers(0, 40, 2000).astype(np.uint32)
+    A = matrix_build(jnp.asarray(src), jnp.asarray(dst), nrows=64, ncols=64)
+    st = jax.jit(analytics.window_stats)(A)
+    dense = np.zeros((64, 64), np.int64)
+    np.add.at(dense, (src.astype(int), dst.astype(int)), 1)
+    assert int(st["valid_packets"]) == 2000
+    assert int(st["unique_links"]) == (dense > 0).sum()
+    assert int(st["unique_sources"]) == (dense.sum(1) > 0).sum()
+    assert int(st["unique_destinations"]) == (dense.sum(0) > 0).sum()
+    assert int(st["max_packets_per_link"]) == dense.max()
+    assert int(st["max_source_packets"]) == dense.sum(1).max()
+    assert int(st["max_source_fanout"]) == (dense > 0).sum(1).max()
+    assert int(st["max_dest_packets"]) == dense.sum(0).max()
+    assert int(st["max_dest_fanin"]) == (dense > 0).sum(0).max()
+    # histogram mass equals the number of active sources/dests
+    assert int(st["src_packet_hist"].sum()) == (dense.sum(1) > 0).sum()
+    assert int(st["dst_fanin_hist"].sum()) == (dense.sum(0) > 0).sum()
+
+
+def test_top_k(rng):
+    src = rng.integers(0, 30, 1000).astype(np.uint32)
+    dst = rng.integers(0, 30, 1000).astype(np.uint32)
+    A = matrix_build(jnp.asarray(src), jnp.asarray(dst), nrows=32, ncols=32)
+    dense = np.zeros((32, 32), np.int64)
+    np.add.at(dense, (src.astype(int), dst.astype(int)), 1)
+    r, c, v = analytics.top_k_heavy_hitters(A, 5)
+    assert int(v[0]) == dense.max()
+    ids, counts = analytics.top_k_sources(A, 3)
+    assert int(counts[0]) == dense.sum(1).max()
+    assert int(ids[0]) == dense.sum(1).argmax()
+
+
+def test_stats_batched(rng):
+    cfg = WindowConfig(window_log2=7, windows_per_batch=4,
+                       anonymization="none")
+    pkts = rng.integers(0, 100, (4, 128, 2)).astype(np.uint32)
+    mats = process_windows_batched(jnp.asarray(pkts), cfg)
+    st = jax.jit(analytics.window_stats_batched)(mats)
+    assert st["valid_packets"].shape == (4,)
+    assert (np.asarray(st["valid_packets"]) == 128).all()
