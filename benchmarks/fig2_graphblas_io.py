@@ -1,16 +1,14 @@
 """Paper Fig. 2, GraphBLAS+IO mode: one thread receives packets (host
 generation + device transfer = the NIC stand-in), the other builds the
-hypersparse matrices (double-buffered, queue-backed), matching the paper's
-2-thread pipeline. Peak there: 8M pkt/s on 8 ARM cores.
+hypersparse matrices — the unified engine's ``double_buffered`` policy
+(bounded-queue backpressure), matching the paper's 2-thread pipeline.
+Peak there: 8M pkt/s on 8 ARM cores.
 """
 
 from __future__ import annotations
 
-import jax
-
-from repro.core import stream
-from repro.core.window import WindowConfig, process_batch
-from repro.data.packets import traffic_batches
+from repro.core.window import WindowConfig
+from repro.engine import SyntheticSource, TrafficEngine
 
 
 def run(window_log2: int = 17, windows_per_batch: int = 64,
@@ -19,24 +17,21 @@ def run(window_log2: int = 17, windows_per_batch: int = 64,
     cfg = WindowConfig(window_log2=window_log2,
                        windows_per_batch=windows_per_batch,
                        anonymization=anonymization)
+    # Build+merge only in the timed step, like the paper (no analytics).
+    engine = TrafficEngine(cfg, policy="double_buffered",
+                           stages=("anonymize", "build", "merge"),
+                           outputs=("merge_overflow",))
 
-    @jax.jit
-    def process(batch):
-        merged, _, ovf = process_batch(batch, cfg)
-        return merged.nnz
-
-    per_item = windows_per_batch * cfg.window_size
     rows = []
     for pairs in thread_pairs:
         # `pairs` producer/consumer pairs: workload scales with pairs; on
         # this 1-core host they serialize (see EXPERIMENTS.md)
-        src = traffic_batches(
+        src = SyntheticSource(
             seed=0, n_batches=pairs * n_batches + 1,
             windows_per_batch=windows_per_batch,
             window_size=cfg.window_size,
         )
-        rep = stream.run_stream(src, process, packets_per_item=per_item,
-                                warmup_items=1, queue_depth=2)
+        rep = engine.run(src, warmup_items=1)
         rows.append((
             f"fig2_graphblas_io_x{pairs}",
             rep.elapsed_s / max(rep.batches, 1) * 1e6,

@@ -1,6 +1,10 @@
 """Benchmark harness: one module per paper table/figure + kernel and
 roofline benches. Prints ``name,us_per_call,derived`` CSV.
 
+The Fig.-2 suites (and the sharded-policy suite) all drive the unified
+ingest engine (``repro.engine``), so their pkt/s numbers come from the same
+telemetry (EngineReport) regardless of execution policy.
+
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
 
@@ -9,6 +13,25 @@ from __future__ import annotations
 import argparse
 import sys
 import traceback
+
+
+def _engine_sharded(window_log2: int = 15, windows_per_batch: int = 16,
+                    n_batches: int = 2):
+    """The sharded policy (mesh-parallel + exact all_to_all merge) through
+    the same engine telemetry as the Fig.-2 curves."""
+    from repro.core.window import WindowConfig
+    from repro.engine import TrafficEngine
+
+    cfg = WindowConfig(window_log2=window_log2,
+                       windows_per_batch=windows_per_batch)
+    engine = TrafficEngine(cfg, policy="sharded")
+    rep = engine.run("uniform", n_batches=n_batches + 1, seed=0,
+                     warmup_items=1)
+    return [(
+        "engine_sharded",
+        rep.elapsed_s / max(rep.batches, 1) * 1e6,
+        f"{rep.packets_per_second:,.0f}_pkt_per_s",
+    )]
 
 
 def main(argv=None) -> int:
@@ -33,6 +56,9 @@ def main(argv=None) -> int:
         ),
         "fig2_graphblas_io": lambda: fig2_graphblas_io.run(
             **(dict(quick, thread_pairs=(1, 2)) if args.quick else {})
+        ),
+        "engine_sharded": lambda: _engine_sharded(
+            **(quick if args.quick else {})
         ),
         "window_size_sweep": lambda: window_size_sweep.run(
             **(dict(window_log2s=(10, 12), n_batches=2) if args.quick else {})

@@ -76,12 +76,12 @@ def make_ingest_step(mesh, cfg: WindowConfig, *, windows_per_device: int = 1,
                 out[k] = jax.lax.psum(v, axes)
         return out
 
-    return jax.shard_map(
+    return shrules.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=P(flat),
         out_specs=P(),
-        check_vma=False,
+        check_rep=False,
     )
 
 

@@ -1,40 +1,25 @@
-"""GraphBLAS+IO: the paper's producer/consumer streaming mode.
+"""Compatibility shim: the streaming loops now live in ``repro.engine``.
 
-On the DPU, one thread receives packets from the wire while a second thread
-builds hypersparse matrices from the previous window. The host-side analogue
-here is a double-buffered pipeline: a producer thread materializes/transfers
-the next window batch (the "IO" stage — on real hardware this is the NIC DMA
-or the host->device transfer) while the device runs the jitted build+merge
-step on the current one. JAX's async dispatch gives the overlap; an explicit
-bounded queue gives backpressure exactly like the DPU's receive queues.
+``run_stream``/``run_blocking`` keep their signatures but delegate to the
+engine's ``DoubleBufferedPolicy``/``BlockingPolicy`` — one implementation of
+the producer/consumer loop instead of three hand-rolled copies.  New code
+should use ``repro.engine.TrafficEngine`` directly.
+
+Packet-rate accounting follows the single shared rule in
+``repro.engine.telemetry.packets_in_item``: a buffer's trailing axis is the
+(src, dst) coordinate pair and every leading axis indexes packets, so a
+buffer counts ``prod(shape[:-1])`` packets (a ``[W, n, 2]`` batch is
+``W * n``).  An explicit ``packets_per_item`` overrides inference.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import queue
-import threading
-import time
 from typing import Callable, Iterable
 
-import jax
-
-
-@dataclasses.dataclass
-class StreamReport:
-    batches: int
-    packets: int
-    elapsed_s: float
-    produce_s: float
-    process_s: float
-    results: list
-
-    @property
-    def packets_per_second(self) -> float:
-        return self.packets / self.elapsed_s if self.elapsed_s > 0 else 0.0
-
-
-_STOP = object()
+from repro.engine.telemetry import (  # noqa: F401  (re-exports)
+    EngineReport as StreamReport,
+    packets_in_item,
+)
 
 
 def run_stream(
@@ -45,71 +30,12 @@ def run_stream(
     packets_per_item: int | None = None,
     warmup_items: int = 0,
 ) -> StreamReport:
-    """Run the GraphBLAS+IO pipeline.
+    """GraphBLAS+IO: double-buffered producer/consumer (Fig. 2, blue)."""
+    from repro.engine.policies import DoubleBufferedPolicy
 
-    Args:
-      source: iterable of host packet buffers (producer side; e.g. the
-        pcap-lite reader or the synthetic generator).
-      process_fn: jitted device function: buffer -> result pytree (the
-        GraphBLAS build/merge/analytics step).
-      queue_depth: receive-queue depth (2 = classic double buffering).
-      packets_per_item: packets per buffer, for rate accounting; inferred
-        from ``buf.shape[-3:-1]`` product if None and buffer is an array.
-      warmup_items: leading items excluded from timing (jit compile).
-
-    Returns a StreamReport with end-to-end packets/second — the paper's
-    Figure-2 metric.
-    """
-    q: queue.Queue = queue.Queue(maxsize=queue_depth)
-    produce_time = 0.0
-
-    def producer():
-        nonlocal produce_time
-        for item in source:
-            t0 = time.perf_counter()
-            dev = jax.device_put(item)
-            produce_time += time.perf_counter() - t0
-            q.put(dev)
-        q.put(_STOP)
-
-    t = threading.Thread(target=producer, daemon=True)
-    results = []
-    n_items = 0
-    n_packets = 0
-    process_time = 0.0
-    start = None
-
-    t.start()
-    while True:
-        item = q.get()
-        if item is _STOP:
-            break
-        if n_items == warmup_items:
-            start = time.perf_counter()
-        t0 = time.perf_counter()
-        out = process_fn(item)
-        out = jax.block_until_ready(out)
-        process_time += time.perf_counter() - t0
-        if n_items >= warmup_items:
-            if packets_per_item is not None:
-                n_packets += packets_per_item
-            elif hasattr(item, "shape") and len(item.shape) >= 2:
-                n = 1
-                for d in item.shape[:-1]:
-                    n *= d
-                n_packets += n
-            results.append(out)
-        n_items += 1
-    t.join()
-    elapsed = (time.perf_counter() - start) if start is not None else 0.0
-
-    return StreamReport(
-        batches=max(n_items - warmup_items, 0),
-        packets=n_packets,
-        elapsed_s=elapsed,
-        produce_s=produce_time,
-        process_s=process_time,
-        results=results,
+    return DoubleBufferedPolicy(queue_depth=queue_depth).run(
+        source, process_fn,
+        packets_per_item=packets_per_item, warmup_items=warmup_items,
     )
 
 
@@ -121,31 +47,9 @@ def run_blocking(
     warmup_items: int = 0,
 ) -> StreamReport:
     """GraphBLAS-only mode: no IO overlap; times pure build throughput."""
-    results = []
-    n_items = 0
-    n_packets = 0
-    start = None
-    for item in source:
-        dev = jax.device_put(item)
-        if n_items == warmup_items:
-            start = time.perf_counter()
-        out = jax.block_until_ready(process_fn(dev))
-        if n_items >= warmup_items:
-            results.append(out)
-            if packets_per_item is not None:
-                n_packets += packets_per_item
-            elif hasattr(item, "shape") and len(item.shape) >= 2:
-                n = 1
-                for d in item.shape[:-1]:
-                    n *= d
-                n_packets += n
-        n_items += 1
-    elapsed = (time.perf_counter() - start) if start is not None else 0.0
-    return StreamReport(
-        batches=max(n_items - warmup_items, 0),
-        packets=n_packets,
-        elapsed_s=elapsed,
-        produce_s=0.0,
-        process_s=elapsed,
-        results=results,
+    from repro.engine.policies import BlockingPolicy
+
+    return BlockingPolicy().run(
+        source, process_fn,
+        packets_per_item=packets_per_item, warmup_items=warmup_items,
     )

@@ -1,8 +1,9 @@
 """Host -> device input pipeline: prefetch, shard-aware placement.
 
-``Prefetcher`` overlaps host batch materialization + device transfer with
-device compute (bounded queue, same double-buffer discipline as
-``core.stream`` — the GraphBLAS+IO pattern generalized to all data kinds).
+``Prefetcher`` is a compatibility shim over
+``repro.engine.prefetch.BoundedPrefetcher`` — the one bounded-queue
+producer/consumer primitive shared with the ingest engine's
+double-buffered execution policy.
 
 ``shard_batch`` places a host batch onto the mesh with the right
 NamedSharding so jit steps consume it without implicit reshards.
@@ -10,50 +11,16 @@ NamedSharding so jit steps consume it without implicit reshards.
 
 from __future__ import annotations
 
-import queue
-import threading
-from typing import Callable, Iterable, Iterator
+from typing import Iterable
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-_STOP = object()
+from repro.engine.prefetch import BoundedPrefetcher
 
 
-class Prefetcher:
+class Prefetcher(BoundedPrefetcher):
     """Background-thread prefetch of an iterator, depth-bounded."""
-
-    def __init__(self, it: Iterable, depth: int = 2,
-                 transform: Callable | None = None):
-        self._q: queue.Queue = queue.Queue(maxsize=depth)
-        self._transform = transform
-        self._err: BaseException | None = None
-
-        def worker():
-            try:
-                for item in it:
-                    if self._transform is not None:
-                        item = self._transform(item)
-                    self._q.put(item)
-            except BaseException as e:  # surface in consumer
-                self._err = e
-            finally:
-                self._q.put(_STOP)
-
-        self._thread = threading.Thread(target=worker, daemon=True)
-        self._thread.start()
-
-    def __iter__(self) -> Iterator:
-        return self
-
-    def __next__(self):
-        item = self._q.get()
-        if item is _STOP:
-            if self._err is not None:
-                raise self._err
-            raise StopIteration
-        return item
 
 
 def batch_spec(batch: dict, mesh: Mesh, rules: dict[str, P]) -> dict:

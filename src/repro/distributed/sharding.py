@@ -51,6 +51,34 @@ def all_axes(mesh: Mesh):
     return tuple(mesh.axis_names)
 
 
+def shard_map(f, *, mesh=None, in_specs, out_specs,
+              check_rep: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes top-level ``jax.shard_map`` with ``check_vma``; older
+    releases only have ``jax.experimental.shard_map`` with ``check_rep``.
+    ``mesh=None`` means "use the ambient mesh" (``jax.set_mesh`` on newer
+    jax, the ``with mesh:`` thread resources on older).  Every shard_map in
+    this repo goes through here so version drift is handled once.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if mesh is None else {"mesh": mesh}
+        return jax.shard_map(
+            f, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_rep, **kwargs,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if mesh is None:
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_rep,
+    )
+
+
 # ---------------------------------------------------------------------------
 # rule engine
 # ---------------------------------------------------------------------------

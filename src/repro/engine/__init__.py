@@ -1,0 +1,47 @@
+"""repro.engine — the unified ingest subsystem.
+
+Source -> Stage graph -> Sink, under a pluggable execution policy:
+
+* Sources (``engine.source``): ``uniform``/``zipf`` synthetic traffic,
+  pcap-lite replay, or any iterable of window batches.
+* Stages (``engine.stages``): declarative, validated, jitted
+  anonymize -> build -> merge -> analytics graph.
+* Sinks (``engine.sinks``): stats accumulation, top-k heavy hitters,
+  matrix retention.
+* Policies (``engine.policies``): ``blocking`` (GraphBLAS-only),
+  ``double_buffered`` (GraphBLAS+IO), ``sharded`` (mesh-parallel with the
+  exact all_to_all row-block merge).
+
+See DESIGN.md at the repo root for the architecture; ``core.stream`` and
+``data.pipeline`` are compatibility shims over this package.
+"""
+
+from repro.engine.engine import TrafficEngine  # noqa: F401
+from repro.engine.policies import (  # noqa: F401
+    BlockingPolicy,
+    DoubleBufferedPolicy,
+    ExecutionPolicy,
+    ShardedPolicy,
+    make_policy,
+)
+from repro.engine.prefetch import BoundedPrefetcher  # noqa: F401
+from repro.engine.sinks import (  # noqa: F401
+    MatrixRetention,
+    Sink,
+    StatsAccumulator,
+    TopKHeavyHitters,
+)
+from repro.engine.source import (  # noqa: F401
+    IterableSource,
+    PcapLiteSource,
+    Source,
+    SyntheticSource,
+    as_source,
+)
+from repro.engine.stages import (  # noqa: F401
+    DEFAULT_STAGES,
+    Stage,
+    StageGraph,
+    register_stage,
+)
+from repro.engine.telemetry import EngineReport, packets_in_item  # noqa: F401

@@ -1,0 +1,112 @@
+"""TrafficEngine: one API over every ingest topology.
+
+    engine = TrafficEngine(WindowConfig(...), policy="double_buffered",
+                           sinks=[StatsAccumulator()])
+    report = engine.run("uniform", n_batches=8, warmup_items=1)
+    totals = engine.finalize()["stats"]
+
+Composition is Source -> StageGraph -> Sinks under an ExecutionPolicy (see
+DESIGN.md).  The engine derives the stage graph's outputs from what the
+attached sinks require, checks policy/sink compatibility, and stamps the
+unified telemetry (pkt/s, produce/process split, merge overflow) into the
+returned ``EngineReport``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.window import WindowConfig
+from repro.engine.policies import ExecutionPolicy, ShardedPolicy, make_policy
+from repro.engine.sinks import Sink
+from repro.engine.source import Source, as_source
+from repro.engine.stages import DEFAULT_OUTPUTS, DEFAULT_STAGES, StageGraph
+from repro.engine.telemetry import EngineReport
+
+
+class TrafficEngine:
+    """The paper's pipeline, assembled from pluggable parts."""
+
+    def __init__(
+        self,
+        cfg: WindowConfig,
+        *,
+        stages: Sequence[str] = DEFAULT_STAGES,
+        outputs: Sequence[str] | None = None,
+        sinks: Sequence[Sink] = (),
+        policy: str | ExecutionPolicy = "blocking",
+    ):
+        self.cfg = cfg
+        self.sinks = list(sinks)
+        self.policy = make_policy(policy)
+
+        required = list(outputs if outputs is not None else DEFAULT_OUTPUTS)
+        for sink in self.sinks:
+            for key in sink.requires:
+                if key not in required:
+                    required.append(key)
+
+        if isinstance(self.policy, ShardedPolicy):
+            # The sharded step fuses the graph per shard and only emits the
+            # exact global stats — matrix-hungry sinks can't be fed.
+            unsupported = sorted(set(required) - {"stats", "merge_overflow"})
+            if unsupported:
+                raise ValueError(
+                    f"sharded policy cannot produce outputs {unsupported} "
+                    f"(sinks: {[s.name for s in self.sinks]})"
+                )
+            self.graph = None
+        else:
+            self.graph = StageGraph(cfg, stages=stages, outputs=required)
+        self._process_fn = None
+        self._overflow = 0
+
+    def make_source(self, spec="uniform", *, n_batches: int = 8,
+                    seed: int = 0) -> Source:
+        """Build a Source with this engine's window geometry."""
+        return as_source(
+            spec,
+            window_size=self.cfg.window_size,
+            windows_per_batch=self.cfg.windows_per_batch,
+            n_batches=n_batches, seed=seed,
+        )
+
+    def run(self, source="uniform", *, n_batches: int = 8, seed: int = 0,
+            warmup_items: int = 0, keep_results: bool = True
+            ) -> EngineReport:
+        """Drive ``source`` through the pipeline; returns the telemetry.
+
+        ``source`` may be a Source, an iterable of batches, ``"uniform"`` /
+        ``"zipf"``, or a pcap-lite path (``n_batches``/``seed`` apply to the
+        synthetic kinds).  The first ``warmup_items`` batches run but are
+        excluded from timing, packet counts, and sink delivery (jit
+        compile).  ``keep_results=False`` drops per-batch outputs once the
+        sinks have consumed them, keeping long runs O(1) in memory.
+        """
+        src = self.make_source(source, n_batches=n_batches, seed=seed)
+        if self._process_fn is None:
+            self._process_fn = self.policy.build_process_fn(
+                self.graph, self.cfg
+            )
+        self._overflow = 0
+        report = self.policy.run(
+            src, self._process_fn,
+            packets_per_item=src.packets_per_item,
+            warmup_items=warmup_items,
+            consume=self._dispatch,
+            keep_results=keep_results,
+        )
+        report.merge_overflow = self._overflow
+        return report
+
+    def finalize(self) -> dict:
+        """Collect every sink's result, keyed by sink name."""
+        return {s.name: s.finalize() for s in self.sinks}
+
+    def _dispatch(self, index: int, outputs) -> None:
+        if isinstance(outputs, dict) and "merge_overflow" in outputs:
+            self._overflow += int(np.asarray(outputs["merge_overflow"]))
+        for sink in self.sinks:
+            sink.consume(index, outputs)

@@ -1,0 +1,213 @@
+"""Swappable execution policies: how the Source -> Stage -> Sink loop runs.
+
+* ``blocking``        — GraphBLAS-only (paper Fig. 2, red curve): transfer
+  and build strictly alternate; times pure build throughput.
+* ``double_buffered`` — GraphBLAS+IO (blue curve): a producer thread
+  device_puts the next batch behind a bounded queue while the device builds
+  the current one.  Generalizes the old ``core.stream`` loop.
+* ``sharded``         — mesh-parallel windows with the exact row-block
+  all_to_all merge (``engine.sharded``); per-batch output is the exact
+  global stats dict.
+
+All three share one consumption loop and return the same ``EngineReport``,
+so per-policy pkt/s numbers are directly comparable.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+
+from repro.engine.prefetch import BoundedPrefetcher
+from repro.engine.sharded import make_exact_ingest_step
+from repro.engine.stages import StageGraph
+from repro.engine.telemetry import EngineReport, packets_in_item
+
+
+def _run_loop(
+    items: Iterable,
+    process_fn: Callable,
+    *,
+    policy_name: str,
+    device_put_inline: bool,
+    packets_per_item: int | None = None,
+    warmup_items: int = 0,
+    consume: Callable | None = None,
+    produce_time: Callable[[], float] | None = None,
+    keep_results: bool = True,
+) -> EngineReport:
+    """The one pipeline loop every policy shares.
+
+    ``device_put_inline`` charges host->device transfer to this thread
+    (blocking/sharded); otherwise the producer thread already paid it and
+    ``produce_time()`` reports the bill.  ``keep_results=False`` drops each
+    batch's outputs after the sinks consume them (long runs stay O(1) in
+    memory; sinks bound their own retention).
+    """
+    results = []
+    n_items = 0
+    n_measured = 0
+    n_packets = 0
+    process_s = 0.0
+    produce_inline = 0.0
+    start = None
+
+    for item in items:
+        if device_put_inline:
+            t0 = time.perf_counter()
+            dev = jax.device_put(item)
+            produce_inline += time.perf_counter() - t0
+        else:
+            dev = item
+        if n_items == warmup_items:
+            start = time.perf_counter()
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(process_fn(dev))
+        process_s += time.perf_counter() - t0
+        if n_items >= warmup_items:
+            n_packets += packets_in_item(item, packets_per_item)
+            if keep_results:
+                results.append(out)
+            if consume is not None:
+                consume(n_measured, out)
+            n_measured += 1
+        n_items += 1
+
+    elapsed = (time.perf_counter() - start) if start is not None else 0.0
+    produce_s = produce_inline if produce_time is None else produce_time()
+    return EngineReport(
+        batches=max(n_items - warmup_items, 0),
+        packets=n_packets,
+        elapsed_s=elapsed,
+        produce_s=produce_s,
+        process_s=process_s,
+        results=results,
+        policy=policy_name,
+    )
+
+
+class ExecutionPolicy:
+    """How batches flow from a source through a process fn."""
+
+    name = "base"
+
+    def build_process_fn(self, graph: StageGraph | None, cfg) -> Callable:
+        """Device function for this policy; default is the stage graph."""
+        if graph is None:
+            raise ValueError(f"policy {self.name!r} needs a stage graph")
+        return graph
+
+    def run(self, source, process_fn, *, packets_per_item=None,
+            warmup_items=0, consume=None,
+            keep_results=True) -> EngineReport:
+        raise NotImplementedError
+
+
+class BlockingPolicy(ExecutionPolicy):
+    """Strictly serial transfer + process (GraphBLAS-only timing)."""
+
+    name = "blocking"
+
+    def run(self, source, process_fn, *, packets_per_item=None,
+            warmup_items=0, consume=None,
+            keep_results=True) -> EngineReport:
+        return _run_loop(
+            iter(source), process_fn,
+            policy_name=self.name, device_put_inline=True,
+            packets_per_item=packets_per_item, warmup_items=warmup_items,
+            consume=consume, keep_results=keep_results,
+        )
+
+
+class DoubleBufferedPolicy(ExecutionPolicy):
+    """Producer thread transfers behind a bounded queue (GraphBLAS+IO)."""
+
+    name = "double_buffered"
+
+    def __init__(self, queue_depth: int = 2):
+        self.queue_depth = queue_depth
+
+    def run(self, source, process_fn, *, packets_per_item=None,
+            warmup_items=0, consume=None,
+            keep_results=True) -> EngineReport:
+        pf = BoundedPrefetcher(
+            iter(source), depth=self.queue_depth, transform=jax.device_put
+        )
+        return _run_loop(
+            pf, process_fn,
+            policy_name=self.name, device_put_inline=False,
+            packets_per_item=packets_per_item, warmup_items=warmup_items,
+            consume=consume, produce_time=lambda: pf.produce_s,
+            keep_results=keep_results,
+        )
+
+
+class ShardedPolicy(ExecutionPolicy):
+    """Mesh-parallel windows + exact all_to_all row-block merge.
+
+    Ignores the stage graph's stage selection: the shard_map step fuses
+    anonymize/build/merge/analytics per shard, and its per-batch output is
+    the exact global stats subset (so sinks requiring ``matrix`` are
+    rejected by the engine for this policy).
+    """
+
+    name = "sharded"
+
+    def __init__(self, mesh=None, *, route_capacity_factor: float = 2.0):
+        self.mesh = mesh
+        self.route_capacity_factor = route_capacity_factor
+
+    def build_process_fn(self, graph, cfg) -> Callable:
+        mesh = self.mesh
+        if mesh is None:
+            from repro.launch.mesh import make_local_mesh
+
+            mesh = self.mesh = make_local_mesh()
+        step = jax.jit(make_exact_ingest_step(
+            mesh, cfg, route_capacity_factor=self.route_capacity_factor
+        ))
+        n_dev = mesh.size
+
+        def process(batch):
+            if batch.shape[0] % n_dev:
+                raise ValueError(
+                    f"windows_per_batch={batch.shape[0]} must divide by "
+                    f"mesh size {n_dev} for the sharded policy"
+                )
+            out = step(batch)
+            return {"stats": out, "merge_overflow": out["merge_overflow"]}
+
+        return process
+
+    def run(self, source, process_fn, *, packets_per_item=None,
+            warmup_items=0, consume=None,
+            keep_results=True) -> EngineReport:
+        return _run_loop(
+            iter(source), process_fn,
+            policy_name=self.name, device_put_inline=True,
+            packets_per_item=packets_per_item, warmup_items=warmup_items,
+            consume=consume, keep_results=keep_results,
+        )
+
+
+_POLICIES = {
+    "blocking": BlockingPolicy,
+    "double_buffered": DoubleBufferedPolicy,
+    "stream": DoubleBufferedPolicy,  # the paper's name for it
+    "sharded": ShardedPolicy,
+    "distributed": ShardedPolicy,  # launcher-CLI name
+}
+
+
+def make_policy(spec) -> ExecutionPolicy:
+    """Resolve a policy spec: instance passes through, string looks up."""
+    if isinstance(spec, ExecutionPolicy):
+        return spec
+    try:
+        return _POLICIES[spec]()
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {spec!r}; choose from {sorted(_POLICIES)}"
+        ) from None

@@ -1,0 +1,65 @@
+"""Bounded-queue background prefetch: the one producer/consumer primitive.
+
+This is the double-buffer discipline every previous copy of the pipeline
+hand-rolled (``core.stream``'s producer thread, ``data.pipeline``'s
+``Prefetcher``): a worker thread pulls items from an iterable, optionally
+transforms them (device_put, shard placement, decompression — the "IO"
+stage), and feeds a depth-bounded queue.  The bounded queue is the
+backpressure, exactly like the DPU's receive queues: when the device falls
+behind, the producer blocks instead of buffering unboundedly.
+
+Exceptions raised by the source or the transform are re-raised in the
+consumer thread, after all successfully produced items are drained.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Iterable, Iterator
+
+_STOP = object()
+
+
+class BoundedPrefetcher:
+    """Background-thread prefetch of an iterable, depth-bounded.
+
+    Attributes:
+      produce_s: cumulative seconds the worker spent in ``transform`` —
+        the pipeline's IO-side cost, reported in ``EngineReport.produce_s``.
+    """
+
+    def __init__(self, it: Iterable, depth: int = 2,
+                 transform: Callable | None = None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: BaseException | None = None
+        self.produce_s = 0.0
+
+        def worker():
+            try:
+                for item in it:
+                    if transform is not None:
+                        t0 = time.perf_counter()
+                        item = transform(item)
+                        self.produce_s += time.perf_counter() - t0
+                    self._q.put(item)
+            except BaseException as e:  # surface in consumer
+                self._err = e
+            finally:
+                self._q.put(_STOP)
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is _STOP:
+            self._thread.join()
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item

@@ -1,0 +1,136 @@
+"""Pluggable sinks: what happens to each processed batch.
+
+A Sink declares which stage-graph outputs it needs (``requires``) — the
+engine unions these into the graph's output set, so e.g. attaching a
+``MatrixRetention`` sink is what makes the jitted step return the merged
+matrix at all.  ``consume`` is called once per measured batch, inside the
+pipeline loop, so implementations should only append/accumulate; expensive
+host work belongs in ``finalize``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import analytics
+
+# Stats keys that add across batches; the rest are running maxima except the
+# histograms, which also add.
+_SUM_KEYS = ("valid_packets", "unique_links", "unique_sources",
+             "unique_destinations")
+_HIST_SUFFIX = "_hist"
+
+
+class Sink:
+    """Base sink; subclasses set ``requires`` and override the hooks."""
+
+    name = "sink"
+    requires: tuple[str, ...] = ("stats",)
+
+    def consume(self, index: int, outputs: dict) -> None:
+        raise NotImplementedError
+
+    def finalize(self) -> Any:
+        return None
+
+
+class StatsAccumulator(Sink):
+    """Accumulate per-batch analytics into totals + the per-batch trace.
+
+    ``unique_*`` totals are per-batch sums (an address active in two batches
+    counts twice — the paper's windows are disjoint in time, so that is the
+    intended semantics, not double counting).
+    """
+
+    name = "stats"
+    requires = ("stats", "merge_overflow")
+
+    def __init__(self):
+        self.per_batch: list[dict] = []
+        self.overflow: list = []
+
+    def consume(self, index: int, outputs: dict) -> None:
+        self.per_batch.append(outputs["stats"])
+        self.overflow.append(outputs["merge_overflow"])
+
+    def finalize(self) -> dict:
+        if not self.per_batch:
+            return {"batches": 0}
+        host = [
+            {k: np.asarray(v) for k, v in jax.device_get(s).items()}
+            for s in self.per_batch
+        ]
+        totals: dict[str, Any] = {"batches": len(host)}
+        for k in host[0]:
+            stacked = np.stack([s[k] for s in host])
+            if k in _SUM_KEYS or k.endswith(_HIST_SUFFIX):
+                totals[k] = stacked.sum(axis=0)
+            else:
+                totals[k] = stacked.max(axis=0)
+        totals["merge_overflow"] = int(
+            np.sum([np.asarray(o) for o in self.overflow])
+        )
+        totals["per_batch"] = host
+        return totals
+
+
+@dataclasses.dataclass
+class TopKHeavyHitters(Sink):
+    """Global top-k links by packet count, merged across batches.
+
+    Per batch it takes the device top-k candidates from the merged matrix;
+    finalize sums candidate counts per link and reports the global top-k.
+    Exact whenever a true global heavy hitter is in its batch's top-k —
+    guaranteed for k >= per-batch distinct heavy links, the usual case.
+    """
+
+    k: int = 10
+
+    name = "top_k"
+    requires = ("matrix",)
+
+    def __post_init__(self):
+        self._counts: dict[tuple[int, int], int] = {}
+
+    def consume(self, index: int, outputs: dict) -> None:
+        m = outputs["matrix"]
+        rows, cols, counts = analytics.top_k_heavy_hitters(m, self.k)
+        rows, cols, counts = jax.device_get((rows, cols, counts))
+        for r, c, v in zip(rows, cols, counts):
+            if v <= 0:
+                continue
+            key = (int(r), int(c))
+            self._counts[key] = self._counts.get(key, 0) + int(v)
+
+    def finalize(self) -> list[tuple[tuple[int, int], int]]:
+        ranked = sorted(self._counts.items(), key=lambda kv: -kv[1])
+        return ranked[: self.k]
+
+
+@dataclasses.dataclass
+class MatrixRetention(Sink):
+    """Keep the last ``max_keep`` merged batch matrices (on host)."""
+
+    max_keep: int = 8
+    device: bool = False  # True: keep device arrays (no transfer)
+
+    name = "matrices"
+    requires = ("matrix",)
+
+    def __post_init__(self):
+        self.matrices: list = []
+
+    def consume(self, index: int, outputs: dict) -> None:
+        m = outputs["matrix"]
+        if not self.device:
+            m = jax.device_get(m)
+        self.matrices.append(m)
+        if len(self.matrices) > self.max_keep:
+            self.matrices.pop(0)
+
+    def finalize(self) -> list:
+        return self.matrices

@@ -1,0 +1,147 @@
+"""Declarative stage graph: anonymize -> build -> merge -> analytics.
+
+A Stage is a named, pure function over a context dict of named arrays
+(``packets``, ``windows``, ``matrix``, ...).  A StageGraph is an ordered
+selection of stages, validated at construction (every stage's ``requires``
+must be provided upstream, every requested output must exist) and compiled
+to a single jitted device function ``[W, n, 2] packets -> outputs dict``.
+
+This replaces the per-pipeline hand-wired ``process_batch`` closures: the
+same graph runs under every execution policy, and new stages (e.g. a flow
+aggregator, a second anonymization pass) register once and become available
+to every source/sink/policy combination.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analytics
+from repro.core import anonymize as anon
+from repro.core.build import build_window
+from repro.core.window import WindowConfig, merge_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One named pipeline step: ctx subset in -> new ctx entries out."""
+
+    name: str
+    requires: tuple[str, ...]
+    provides: tuple[str, ...]
+    fn: Callable[[dict, WindowConfig], dict]
+
+
+STAGE_REGISTRY: dict[str, Stage] = {}
+
+
+def register_stage(name: str, requires: Sequence[str],
+                   provides: Sequence[str]):
+    """Register a stage fn(ctx, cfg) -> dict of provided entries."""
+
+    def deco(fn):
+        STAGE_REGISTRY[name] = Stage(
+            name=name, requires=tuple(requires), provides=tuple(provides),
+            fn=fn,
+        )
+        return fn
+
+    return deco
+
+
+@register_stage("anonymize", requires=("packets",), provides=("packets",))
+def _anonymize(ctx, cfg):
+    # Both schemes are elementwise bijections over uint32, so they apply to
+    # the whole [W, n, 2] batch at once (== vmap over windows).
+    return {
+        "packets": anon.anonymize_packets(
+            ctx["packets"], cfg.anonymization_key, cfg.anonymization
+        )
+    }
+
+
+@register_stage("build", requires=("packets",), provides=("windows",))
+def _build(ctx, cfg):
+    dtype = jnp.dtype(cfg.val_dtype)
+    windows = jax.vmap(lambda p: build_window(p, dtype=dtype))(ctx["packets"])
+    return {"windows": windows}
+
+
+@register_stage("merge", requires=("windows",),
+                provides=("matrix", "merge_overflow"))
+def _merge(ctx, cfg):
+    merged, overflow = merge_tree(ctx["windows"], cfg)
+    return {"matrix": merged, "merge_overflow": overflow}
+
+
+@register_stage("analytics", requires=("matrix",), provides=("stats",))
+def _analytics(ctx, cfg):
+    return {"stats": analytics.window_stats(ctx["matrix"])}
+
+
+@register_stage("window_analytics", requires=("windows",),
+                provides=("window_stats",))
+def _window_analytics(ctx, cfg):
+    return {"window_stats": analytics.window_stats_batched(ctx["windows"])}
+
+
+DEFAULT_STAGES = ("anonymize", "build", "merge", "analytics")
+DEFAULT_OUTPUTS = ("stats", "merge_overflow")
+
+
+class StageGraph:
+    """Validated, jitted composition of registered stages."""
+
+    def __init__(
+        self,
+        cfg: WindowConfig,
+        stages: Sequence[str] = DEFAULT_STAGES,
+        outputs: Sequence[str] = DEFAULT_OUTPUTS,
+    ):
+        self.cfg = cfg
+        self.stages: tuple[Stage, ...] = tuple(
+            self._resolve(name) for name in stages
+        )
+        self.outputs = tuple(outputs)
+
+        available = {"packets"}
+        for s in self.stages:
+            missing = set(s.requires) - available
+            if missing:
+                raise ValueError(
+                    f"stage {s.name!r} requires {sorted(missing)} which no "
+                    f"earlier stage provides (have {sorted(available)})"
+                )
+            available |= set(s.provides)
+        unmet = set(self.outputs) - available
+        if unmet:
+            raise ValueError(
+                f"requested outputs {sorted(unmet)} are not provided by "
+                f"stages {[s.name for s in self.stages]}"
+            )
+        self._jitted = jax.jit(self._forward)
+
+    @staticmethod
+    def _resolve(name: str) -> Stage:
+        if isinstance(name, Stage):
+            return name
+        try:
+            return STAGE_REGISTRY[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown stage {name!r}; registered: "
+                f"{sorted(STAGE_REGISTRY)}"
+            ) from None
+
+    def _forward(self, batch: jax.Array) -> dict:
+        ctx = {"packets": batch}
+        for s in self.stages:
+            ctx.update(s.fn(ctx, self.cfg))
+        return {k: ctx[k] for k in self.outputs}
+
+    def __call__(self, batch: jax.Array) -> dict:
+        return self._jitted(batch)

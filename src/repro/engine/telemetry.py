@@ -1,0 +1,71 @@
+"""Unified telemetry for every execution policy.
+
+Every policy — ``blocking``, ``double_buffered``, ``sharded`` — returns the
+same ``EngineReport``, so Fig. 2 curves (pkt/s vs. mode) stay directly
+comparable no matter which loop produced them.
+
+Packet accounting follows ONE rule, shared by every consumer
+(``packets_in_item``): a packet buffer's trailing axis is the (src, dst)
+coordinate pair and every leading axis indexes packets, so a buffer counts
+``prod(shape[:-1])`` packets.  A ``[W, n, 2]`` batch of W windows is
+``W * n`` packets; a flat ``[n, 2]`` window is ``n``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+
+def packets_in_item(item: Any, packets_per_item: int | None = None) -> int:
+    """Packets carried by one source item, under the shared rule.
+
+    An explicit ``packets_per_item`` (e.g. from a Source that knows its
+    geometry) wins; otherwise the count is inferred as the product of every
+    axis except the trailing coordinate axis.
+    """
+    if packets_per_item is not None:
+        return packets_per_item
+    shape = getattr(item, "shape", None)
+    if shape is not None and len(shape) >= 2:
+        return math.prod(shape[:-1])
+    return 0
+
+
+@dataclasses.dataclass
+class EngineReport:
+    """What a pipeline run measured — the paper's Figure-2 quantities.
+
+    ``produce_s`` is time spent materializing/transferring input (the "IO"
+    half: NIC DMA / host->device put); ``process_s`` is device build+merge+
+    analytics time.  In ``double_buffered`` mode the two overlap, so their
+    sum can exceed ``elapsed_s`` — that surplus *is* the overlap win.
+    """
+
+    batches: int = 0
+    packets: int = 0
+    elapsed_s: float = 0.0
+    produce_s: float = 0.0
+    process_s: float = 0.0
+    results: list = dataclasses.field(default_factory=list)
+    policy: str = ""
+    merge_overflow: int = 0
+
+    @property
+    def packets_per_second(self) -> float:
+        return self.packets / self.elapsed_s if self.elapsed_s > 0 else 0.0
+
+    def summary(self) -> str:
+        """One-line report in the Fig.-2 style."""
+        return (
+            f"[{self.policy or 'pipeline'}] {self.packets:,} packets, "
+            f"{self.elapsed_s:.2f}s -> {self.packets_per_second:,.0f} pkt/s "
+            f"(produce {self.produce_s:.2f}s / process {self.process_s:.2f}s, "
+            f"overflow {self.merge_overflow})"
+        )
+
+
+# Historical name: ``core.stream`` called this StreamReport.  The engine is
+# the home now; ``repro.core.stream`` re-exports it for compatibility.
+StreamReport = EngineReport

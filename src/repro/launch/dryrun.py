@@ -30,6 +30,8 @@ from pathlib import Path
 import jax
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.launch.mesh import ambient_mesh
+
 # TPU v5e constants for the roofline terms
 PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
 HBM_BW = 819e9             # bytes/s per chip
@@ -130,7 +132,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
     rec["note"] = cell.note
     rec["model_flops_per_step"] = cell.model_flops_per_step
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with ambient_mesh(mesh):
         jitted = jax.jit(
             cell.fn,
             in_shardings=_shardings(cell.in_specs, mesh),
@@ -160,7 +162,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
     # L=1 and L=2 and extrapolate affinely: per-step cost is exactly
     # a + b*L for a homogeneous stack, and compile time stays O(1) in L.
     def _compile_cost(c):
-        with jax.set_mesh(mesh):
+        with ambient_mesh(mesh):
             return jax.jit(
                 c.fn,
                 in_shardings=_shardings(c.in_specs, mesh),

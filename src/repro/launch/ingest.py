@@ -1,6 +1,8 @@
 """Traffic-matrix ingest service: the paper's workload as a launcher.
 
-Three modes:
+A thin CLI over ``repro.engine.TrafficEngine`` (see DESIGN.md for the
+Source -> Stage -> Sink architecture and the execution policies).  Three
+modes, mapping 1:1 onto engine policies:
 
 * ``--mode blocking``   — GraphBLAS-only (paper Fig. 2, red curve): pure
   build throughput over batches of windows.
@@ -12,149 +14,50 @@ Three modes:
   (each device becomes the owner of a 2^32/n_dev slice of source-address
   space — the 2D decomposition from DESIGN.md). Exact distinct-source /
   distinct-link counts fall out because every (row) lives on exactly one
-  owner. This is the beyond-baseline version of the ingest_* dry-run cells.
+  owner.
 """
 
 from __future__ import annotations
 
 import argparse
-import functools
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
+from repro.core.window import WindowConfig
+from repro.engine import ShardedPolicy, StatsAccumulator, TrafficEngine
 
-from repro.core import analytics, stream
-from repro.core.build import matrix_build
-from repro.core.hypersparse import SENTINEL
-from repro.core.window import WindowConfig, process_batch
-from repro.data.packets import traffic_batches
-from repro.distributed import sharding as shrules
+# Re-exported for existing callers/tests; implementation lives in the engine.
+from repro.engine.sharded import make_exact_ingest_step  # noqa: F401
 
 
-# ---------------------------------------------------------------------------
-# exact distributed merge: route entries to row-block owners via all_to_all
-# ---------------------------------------------------------------------------
-def _route_entries(rows, cols, vals, valid, n_dev: int, cap_out: int):
-    """Bucket entries by owner device (row-block) into [n_dev, cap_out]."""
-    bits = int(np.log2(n_dev))
-    if bits == 0:
-        owner = jnp.zeros(rows.shape, jnp.int32)
-    else:
-        owner = (rows >> jnp.uint32(32 - bits)).astype(jnp.int32)
-    owner = jnp.where(valid, owner, n_dev)
-    # rank within each owner bucket (stable by entry order)
-    order = jnp.argsort(owner, stable=True)
-    so = owner[order]
-    n = rows.shape[0]
-    iota = jnp.arange(n, dtype=jnp.int32)
-    first = jnp.concatenate([jnp.ones((1,), bool), so[1:] != so[:-1]])
-    run_start = jax.lax.cummax(jnp.where(first, iota, 0), axis=0)
-    rank = iota - run_start
-    keep = rank < cap_out
-    slot = jnp.where(keep, so * cap_out + rank, n_dev * cap_out)
-
-    def scatter(x, fill):
-        buf = jnp.full((n_dev * cap_out,), fill, x.dtype)
-        return buf.at[slot].set(x[order], mode="drop").reshape(
-            n_dev, cap_out
-        )
-
-    kept_valid = (keep & (so < n_dev)).sum().astype(jnp.int32)
-    overflow = valid.sum().astype(jnp.int32) - kept_valid
-    return (
-        scatter(rows, SENTINEL),
-        scatter(cols, SENTINEL),
-        scatter(vals, jnp.zeros((), vals.dtype)),
-        overflow,
-    )
-
-
-def make_exact_ingest_step(mesh, cfg: WindowConfig, *,
-                           route_capacity_factor: float = 2.0):
-    """shard_map step: local builds -> all_to_all row-block exchange ->
-    owner-local dedup -> exact global analytics."""
-    axes = shrules.all_axes(mesh)
-    flat = axes if len(axes) > 1 else axes[0]
-    n_dev = mesh.size
-
-    def shard_fn(windows_local):
-        merged, ovf = process_batch(windows_local, cfg)[0::2]
-        cap = merged.capacity
-        cap_out = int(cap * route_capacity_factor / n_dev) + 8
-        r, c, v, route_ovf = _route_entries(
-            merged.rows, merged.cols, merged.vals, merged.valid_mask(),
-            n_dev, cap_out,
-        )
-        # exchange: device d sends bucket j to device j
-        if n_dev > 1:
-            r = jax.lax.all_to_all(r, flat, split_axis=0, concat_axis=0,
-                                   tiled=True)
-            c = jax.lax.all_to_all(c, flat, split_axis=0, concat_axis=0,
-                                   tiled=True)
-            v = jax.lax.all_to_all(v, flat, split_axis=0, concat_axis=0,
-                                   tiled=True)
-        # owner-local dedup of everything received (rows all in my block)
-        r, c, v = r.reshape(-1), c.reshape(-1), v.reshape(-1)
-        n_valid = (r != SENTINEL).sum().astype(jnp.int32)
-        # move sentinels to the back for the build contract
-        order = jnp.argsort(r == SENTINEL, stable=True)
-        mine = matrix_build(r[order], c[order], v[order],
-                            n_valid=n_valid, dtype=v.dtype)
-        local = analytics.window_stats(mine)
-        out = {
-            # row-keyed stats are exact under row ownership
-            "valid_packets": jax.lax.psum(local["valid_packets"], axes),
-            "unique_links": jax.lax.psum(mine.nnz, axes),
-            "unique_sources": jax.lax.psum(local["unique_sources"], axes),
-            "max_packets_per_link": jax.lax.pmax(
-                local["max_packets_per_link"], axes),
-            "max_source_packets": jax.lax.pmax(
-                local["max_source_packets"], axes),
-            "max_source_fanout": jax.lax.pmax(
-                local["max_source_fanout"], axes),
-            "src_packet_hist": jax.lax.psum(local["src_packet_hist"], axes),
-            "src_fanout_hist": jax.lax.psum(local["src_fanout_hist"], axes),
-            "merge_overflow": jax.lax.psum(ovf + route_ovf, axes),
-        }
-        return out
-
-    return jax.shard_map(shard_fn, mesh=mesh, in_specs=P(flat),
-                         out_specs=P(), check_vma=False)
-
-
-# ---------------------------------------------------------------------------
-# host driver (paper modes)
-# ---------------------------------------------------------------------------
 def run_paper_mode(mode: str, *, window_log2: int = 17,
                    windows_per_batch: int = 64, n_batches: int = 8,
                    anonymization: str = "feistel", kind: str = "uniform",
                    use_kernel: bool = False):
+    """Run one Fig.-2 mode through the engine; returns its EngineReport."""
     cfg = WindowConfig(window_log2=window_log2,
                        windows_per_batch=windows_per_batch,
                        anonymization=anonymization)
+    policy = "double_buffered" if mode == "stream" else "blocking"
+    # Fig.-2 comparability: time build+merge only, like the paper.
+    engine = TrafficEngine(cfg, policy=policy,
+                           stages=("anonymize", "build", "merge"),
+                           outputs=("merge_overflow",))
+    # one extra leading batch absorbs jit compile (excluded from timing)
+    return engine.run(kind, n_batches=n_batches + 1, seed=0, warmup_items=1)
 
-    @jax.jit
-    def process(batch):
-        merged, _, ovf = process_batch(batch, cfg)
-        return {"nnz": merged.nnz, "overflow": ovf,
-                "packets": analytics.window_stats(merged)["valid_packets"]}
 
-    src = traffic_batches(
-        seed=0, n_batches=n_batches + 1,
-        windows_per_batch=windows_per_batch,
-        window_size=cfg.window_size, kind=kind,
-    )
-    ppi = windows_per_batch * cfg.window_size
-    if mode == "stream":
-        rep = stream.run_stream(src, process, packets_per_item=ppi,
-                                warmup_items=1)
-    else:
-        rep = stream.run_blocking(src, process, packets_per_item=ppi,
-                                  warmup_items=1)
-    return rep
+def run_distributed(mesh, *, window_log2: int = 17,
+                    windows_per_batch: int | None = None,
+                    n_batches: int = 1, anonymization: str = "feistel",
+                    kind: str = "uniform"):
+    """The sharded policy on ``mesh``; windows_per_batch defaults to
+    2 windows per device."""
+    wpb = windows_per_batch or mesh.size * 2
+    cfg = WindowConfig(window_log2=window_log2, windows_per_batch=wpb,
+                       anonymization=anonymization)
+    engine = TrafficEngine(cfg, policy=ShardedPolicy(mesh),
+                           sinks=[StatsAccumulator()])
+    report = engine.run(kind, n_batches=n_batches, seed=0)
+    return report, engine.finalize()["stats"]
 
 
 def main(argv=None):
@@ -174,23 +77,14 @@ def main(argv=None):
         from repro.launch.mesh import make_local_mesh
 
         mesh = make_local_mesh()
-        cfg = WindowConfig(window_log2=args.window_log2,
-                           windows_per_batch=args.windows_per_batch,
-                           anonymization=args.anonymization)
-        step = make_exact_ingest_step(mesh, cfg)
-        rng = np.random.default_rng(0)
-        w = rng.integers(
-            0, 1 << 32,
-            (mesh.size * 2, cfg.window_size, 2), dtype=np.uint32,
+        rep, totals = run_distributed(
+            mesh, window_log2=args.window_log2, n_batches=args.batches,
+            anonymization=args.anonymization, kind=args.traffic,
         )
-        t0 = time.time()
-        out = jax.block_until_ready(step(jnp.asarray(w)))
-        dt = time.time() - t0
-        pkts = w.shape[0] * w.shape[1]
-        print(f"[ingest/distributed] {pkts:,} packets in {dt:.2f}s "
-              f"({pkts/dt:,.0f} pkt/s incl. compile)")
-        print({k: int(v) for k, v in out.items() if v.ndim == 0})
-        return out
+        print(f"[ingest/distributed] {rep.summary()} (incl. compile)")
+        print({k: int(v) for k, v in totals.items()
+               if getattr(v, "ndim", 1) == 0 or isinstance(v, int)})
+        return rep
 
     rep = run_paper_mode(
         args.mode, window_log2=args.window_log2,

@@ -31,7 +31,8 @@ from repro.data.pipeline import Prefetcher
 from repro.data.tokens import TokenStream
 from repro.distributed import sharding as shrules
 from repro.distributed.fault import HeartbeatMonitor, StragglerPolicy
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import (ambient_mesh, make_local_mesh,
+                               make_production_mesh)
 
 
 def build_lm_trainer(arch_id: str, preset: str, mesh, *,
@@ -88,7 +89,7 @@ def main(argv=None):
     monitor = HeartbeatMonitor(n_hosts=1)
     policy = StragglerPolicy(monitor)
 
-    with jax.set_mesh(mesh):
+    with ambient_mesh(mesh):
         state_abstract = jax.eval_shape(init_state, jax.random.PRNGKey(0))
         specs = pspecs_of(state_abstract)
         shardings = jax.tree.map(

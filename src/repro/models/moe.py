@@ -241,12 +241,14 @@ def _moe_local(x_loc, router, w_gate, w_up, w_down, shared, cfg: MoEConfig):
 def moe_apply_ep(params, x: jax.Array, cfg: MoEConfig):
     """shard_map expert-parallel MoE: x [b, s, d] -> (out, aux).
 
-    Requires an ambient mesh (jax.set_mesh) whose axes include
-    cfg.model_axis and cfg.dp_axes. Parameters must be sharded with
+    Requires an ambient mesh (``launch.mesh.ambient_mesh``) whose axes
+    include cfg.model_axis and cfg.dp_axes. Parameters must be sharded with
     `transformer_param_rules` (experts over `model`; shared expert
     column-parallel).
     """
     from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
 
     b, s, d = x.shape
     dp = cfg.dp_axes if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
@@ -262,7 +264,7 @@ def moe_apply_ep(params, x: jax.Array, cfg: MoEConfig):
     def body(xf, router, wg, wu, wd, sh):
         return _moe_local(xf, router, wg, wu, wd, sh, cfg)
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         in_specs=(
             P(dp, None),                       # x tokens
@@ -274,7 +276,7 @@ def moe_apply_ep(params, x: jax.Array, cfg: MoEConfig):
         ),
         out_specs=(P(dp, None), {k: P() for k in (
             "load_balance_loss", "router_z_loss", "dropped_fraction")}),
-        check_vma=False,
+        check_rep=False,
     )(
         x.reshape(b * s, d), params["router"], params["w_gate"],
         params["w_up"], params["w_down"], shared,

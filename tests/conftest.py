@@ -1,11 +1,64 @@
+import sys
+import types
+
 import numpy as np
 import pytest
-from hypothesis import settings
 
-# CPU-contention-friendly hypothesis defaults (the dry-run sweep may be
-# running concurrently on this single-core container)
-settings.register_profile("repro", max_examples=25, deadline=None)
-settings.load_profile("repro")
+try:
+    from hypothesis import settings
+
+    # CPU-contention-friendly hypothesis defaults (the dry-run sweep may be
+    # running concurrently on this single-core container)
+    settings.register_profile("repro", max_examples=25, deadline=None)
+    settings.load_profile("repro")
+except ImportError:  # pragma: no cover - exercised when hypothesis is absent
+    # hypothesis is an optional dev dependency (see requirements-dev.txt).
+    # Install a stub so modules that mix property tests with plain oracle
+    # tests still import and run; @given tests auto-skip at call time.
+    class _Strategy:
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    def _given(*args, **kwargs):
+        def deco(fn):
+            def skipper(*a, **k):
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    class _Settings:
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @classmethod
+        def register_profile(cls, *args, **kwargs):
+            pass
+
+        @classmethod
+        def load_profile(cls, *args, **kwargs):
+            pass
+
+    _stub = types.ModuleType("hypothesis")
+    _stub.given = _given
+    _stub.settings = _Settings
+    _stub.assume = lambda *a, **k: True
+    _stub.HealthCheck = _Strategy()
+    _stub.strategies = _Strategy()
+    _strategies = types.ModuleType("hypothesis.strategies")
+    _strategies.__getattr__ = lambda name: _Strategy()
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _strategies
 
 
 @pytest.fixture

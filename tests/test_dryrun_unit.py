@@ -46,10 +46,9 @@ def test_cells_constructible_without_mesh_devices():
     import jax
     from repro import configs
 
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_mesh_from_plan
+
+    mesh = make_mesh_from_plan((1, 1), ("data", "model"))
     for arch in ("llama3.2-1b", "gcn-cora", "two-tower-retrieval"):
         for shape in configs.get(arch).SHAPES:
             cell = configs.get(arch).build_cell(shape, mesh)
@@ -62,10 +61,9 @@ def test_flops_model_sane_llama():
     from repro import configs
     import jax
 
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_mesh_from_plan
+
+    mesh = make_mesh_from_plan((1, 1), ("data", "model"))
     cell = configs.get("llama3.2-1b").build_cell("train_4k", mesh)
     # 6 * ~1.5B * 1.05M tokens ~ 9.4e15
     assert 5e15 < cell.model_flops_per_step < 2e16

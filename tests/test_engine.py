@@ -1,0 +1,192 @@
+"""The unified ingest engine: policy equivalence (the Fig.-2 contract),
+source plug-ins, stage-graph validation, sinks, and the shared
+packet-accounting rule."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.build import matrix_build
+from repro.core.window import WindowConfig
+from repro.engine import (
+    IterableSource,
+    MatrixRetention,
+    StatsAccumulator,
+    TopKHeavyHitters,
+    TrafficEngine,
+    packets_in_item,
+)
+from repro.engine.stages import StageGraph
+from repro.engine.telemetry import EngineReport
+
+
+def _cfg(**kw):
+    kw.setdefault("window_log2", 6)
+    kw.setdefault("windows_per_batch", 4)
+    kw.setdefault("cap_max_log2", 9)
+    return WindowConfig(**kw)
+
+
+def _stats_trace(engine):
+    return engine.finalize()["stats"]["per_batch"]
+
+
+# -- the acceptance contract: policies agree on analytics, differ only in
+#    schedule ---------------------------------------------------------------
+def test_blocking_and_double_buffered_identical_stats():
+    cfg = _cfg()
+    reports, traces = {}, {}
+    for policy in ("blocking", "double_buffered"):
+        eng = TrafficEngine(cfg, policy=policy, sinks=[StatsAccumulator()])
+        reports[policy] = eng.run("uniform", n_batches=4, seed=7,
+                                  warmup_items=1)
+        traces[policy] = _stats_trace(eng)
+
+    rb, rd = reports["blocking"], reports["double_buffered"]
+    assert rb.batches == rd.batches == 3
+    assert rb.packets == rd.packets == 3 * 4 * 64
+    assert rb.packets_per_second > 0 and rd.packets_per_second > 0
+    assert rb.policy == "blocking" and rd.policy == "double_buffered"
+
+    for a, b in zip(traces["blocking"], traces["double_buffered"]):
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_sharded_policy_matches_blocking_exactly():
+    cfg = _cfg(windows_per_batch=2, anonymization="none")
+    eb = TrafficEngine(cfg, policy="blocking", sinks=[StatsAccumulator()])
+    eb.run("uniform", n_batches=2, seed=3)
+    es = TrafficEngine(cfg, policy="sharded", sinks=[StatsAccumulator()])
+    rep_s = es.run("uniform", n_batches=2, seed=3)
+
+    assert rep_s.policy == "sharded"
+    shared_keys = ("valid_packets", "unique_links", "unique_sources",
+                   "max_packets_per_link", "max_source_packets",
+                   "max_source_fanout", "src_packet_hist",
+                   "src_fanout_hist")
+    for a, b in zip(_stats_trace(eb), _stats_trace(es)):
+        for k in shared_keys:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+# -- packet accounting: one rule everywhere ---------------------------------
+def test_packets_in_item_rule():
+    batch = np.zeros((4, 64, 2), np.uint32)
+    window = np.zeros((64, 2), np.uint32)
+    assert packets_in_item(batch) == 4 * 64
+    assert packets_in_item(window) == 64
+    assert packets_in_item(batch, packets_per_item=17) == 17
+    assert packets_in_item(object()) == 0
+
+
+def test_stream_shims_share_the_rule():
+    """run_blocking/run_stream infer rates identically (the old code
+    multiplied different axes in each loop)."""
+    from repro.core import stream
+
+    assert stream.packets_in_item is packets_in_item
+    assert stream.StreamReport is EngineReport
+
+    batches = [np.zeros((2, 32, 2), np.uint32) for _ in range(3)]
+    rep_b = stream.run_blocking(iter(batches), lambda x: x.sum())
+    rep_s = stream.run_stream(iter(batches), lambda x: x.sum())
+    assert rep_b.packets == rep_s.packets == 3 * 2 * 32
+
+
+# -- sources ----------------------------------------------------------------
+def test_pcaplite_source_replay(rng, tmp_path):
+    from repro.data.packets import PcapLite
+
+    cfg = _cfg(windows_per_batch=2, anonymization="none")
+    n = 2 * cfg.window_size * 2  # exactly two batches
+    pkts = rng.integers(0, 1 << 16, (n + 13, 2), dtype=np.uint32)
+    path = tmp_path / "capture.pcl"
+    PcapLite.write(path, pkts, compress=False)
+
+    eng = TrafficEngine(cfg, policy="blocking", sinks=[StatsAccumulator()])
+    rep = eng.run(str(path))
+    assert rep.batches == 2  # trailing partial batch dropped
+    assert rep.packets == n
+    totals = eng.finalize()["stats"]
+    assert int(totals["valid_packets"]) == n
+
+    # batch 0 analytics match a direct build of the same packets
+    half = pkts[: n // 2]
+    A = matrix_build(jnp.asarray(half[:, 0]), jnp.asarray(half[:, 1]))
+    assert int(totals["per_batch"][0]["unique_links"]) == int(A.nnz)
+
+
+def test_iterable_source_and_report_overflow(rng):
+    cfg = _cfg(windows_per_batch=2, cap_max_log2=6, anonymization="none")
+    # all-unique coordinates => each 2-window merge overflows its 64-cap
+    batch = np.arange(2 * 64 * 2, dtype=np.uint32).reshape(2, 64, 2)
+    eng = TrafficEngine(cfg, policy="blocking")
+    rep = eng.run(IterableSource(it=[batch, batch]))
+    assert rep.batches == 2
+    assert rep.merge_overflow == 2 * 64  # 128 unique into cap 64, twice
+
+
+# -- stage graph validation -------------------------------------------------
+def test_stage_graph_rejects_missing_dependency():
+    with pytest.raises(ValueError, match="requires"):
+        StageGraph(_cfg(), stages=("anonymize", "merge"))
+
+
+def test_stage_graph_rejects_unknown_stage_and_output():
+    with pytest.raises(ValueError, match="unknown stage"):
+        StageGraph(_cfg(), stages=("anonymize", "nope"))
+    with pytest.raises(ValueError, match="outputs"):
+        StageGraph(_cfg(), stages=("anonymize", "build"),
+                   outputs=("stats",))
+
+
+def test_window_analytics_stage():
+    cfg = _cfg(windows_per_batch=2)
+    graph = StageGraph(cfg, stages=("build", "window_analytics"),
+                       outputs=("window_stats",))
+    batch = np.random.default_rng(0).integers(
+        0, 1 << 16, (2, cfg.window_size, 2), dtype=np.uint32
+    )
+    out = graph(jnp.asarray(batch))
+    assert out["window_stats"]["valid_packets"].shape == (2,)
+    np.testing.assert_array_equal(
+        np.asarray(out["window_stats"]["valid_packets"]),
+        [cfg.window_size, cfg.window_size],
+    )
+
+
+# -- sinks ------------------------------------------------------------------
+def test_top_k_sink_finds_planted_heavy_hitter():
+    cfg = _cfg(windows_per_batch=2, anonymization="none")
+    rng = np.random.default_rng(1)
+    batch = rng.integers(100, 1 << 16, (2, 64, 2), dtype=np.uint32)
+    batch[0, :40] = (5, 7)  # plant a dominant link
+    batch[1, :25] = (5, 7)
+
+    eng = TrafficEngine(cfg, sinks=[TopKHeavyHitters(k=4)])
+    eng.run(IterableSource(it=[batch]))
+    ranked = eng.finalize()["top_k"]
+    assert ranked[0][0] == (5, 7)
+    assert ranked[0][1] == 65
+
+
+def test_matrix_retention_sink(rng):
+    cfg = _cfg(windows_per_batch=2)
+    eng = TrafficEngine(cfg, sinks=[MatrixRetention(max_keep=2)])
+    eng.run("uniform", n_batches=3, seed=0)
+    kept = eng.finalize()["matrices"]
+    assert len(kept) == 2  # oldest evicted
+    assert kept[-1].rows.shape[0] == cfg.level_capacity(1)
+
+
+def test_sharded_rejects_matrix_sinks():
+    with pytest.raises(ValueError, match="sharded"):
+        TrafficEngine(_cfg(), policy="sharded", sinks=[MatrixRetention()])
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown policy"):
+        TrafficEngine(_cfg(), policy="quantum")

@@ -1,0 +1,147 @@
+"""Merge correctness: merge_tree overflow accounting, and the counting
+fast-path dedup vs the general dedup — including packets whose key equals
+SENTINEL (255.255.255.255 is a legal address, padding is positional)."""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.build import (
+    build_windows_batched,
+    count_dedup_sorted,
+    dedup_sorted,
+    lex_sort,
+    matrix_build,
+)
+from repro.core.hypersparse import SENTINEL
+from repro.core.window import WindowConfig, merge_tree
+
+SENT = int(np.uint32(SENTINEL))
+
+
+def _disjoint_windows(n_windows: int, window: int) -> np.ndarray:
+    """[W, n, 2] batches where every (src, dst) key is globally unique."""
+    base = np.arange(n_windows * window, dtype=np.uint32)
+    pkts = np.stack([base, base + np.uint32(1 << 20)], axis=1)
+    return pkts.reshape(n_windows, window, 2)
+
+
+# -- merge_tree overflow accounting ----------------------------------------
+def test_merge_tree_no_overflow_when_capacity_suffices():
+    cfg = WindowConfig(window_log2=4, windows_per_batch=4, cap_max_log2=10)
+    stack = build_windows_batched(jnp.asarray(_disjoint_windows(4, 16)))
+    merged, overflow = merge_tree(stack, cfg)
+    assert int(overflow) == 0
+    assert int(merged.nnz) == 4 * 16
+
+
+def test_merge_tree_overflow_is_counted_exactly_two_windows():
+    # cap_max = 16: merging two all-unique 16-entry windows (union 32)
+    # must keep 16 and report exactly 16 dropped.
+    cfg = WindowConfig(window_log2=4, windows_per_batch=2, cap_max_log2=4)
+    stack = build_windows_batched(jnp.asarray(_disjoint_windows(2, 16)))
+    merged, overflow = merge_tree(stack, cfg)
+    assert int(merged.nnz) == 16
+    assert int(overflow) == 16
+
+
+def test_merge_tree_overflow_accumulates_across_levels():
+    # W=4, cap 16 at every level:
+    #   level 1: two merges of 32-unique -> 16 kept, 16 dropped each (32)
+    #   level 2: union of two disjoint 16-sets = 32 -> 16 kept, 16 dropped
+    cfg = WindowConfig(window_log2=4, windows_per_batch=4, cap_max_log2=4)
+    stack = build_windows_batched(jnp.asarray(_disjoint_windows(4, 16)))
+    merged, overflow = merge_tree(stack, cfg)
+    assert int(merged.nnz) == 16
+    assert int(overflow) == 2 * 16 + 16
+
+
+def test_merge_tree_rejects_non_power_of_two():
+    cfg = WindowConfig(window_log2=4, windows_per_batch=3)
+    stack = build_windows_batched(jnp.asarray(_disjoint_windows(3, 16)))
+    with pytest.raises(AssertionError, match="power of two"):
+        merge_tree(stack, cfg)
+
+
+# -- counting fast path vs general dedup, sentinel-keyed packets -----------
+def _sorted_streams(rows, cols, n_valid):
+    """matrix_build's pre-dedup contract: padding keys forced to SENTINEL,
+    then lexicographic sort (stability keeps real entries ahead of padding
+    within an equal-key run)."""
+    n = rows.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    valid = iota < n_valid
+    rows = jnp.where(valid, rows, SENTINEL)
+    cols = jnp.where(valid, cols, SENTINEL)
+    return lex_sort(rows, cols)
+
+
+def _packets_with_sentinels(rng, n_valid):
+    rows = rng.integers(0, 8, n_valid).astype(np.uint32)
+    cols = rng.integers(0, 8, n_valid).astype(np.uint32)
+    # legal 255.255.255.255 traffic, duplicated, in the middle of the data
+    rows[5:9] = SENT
+    cols[5:7] = SENT
+    cols[7:9] = 3
+    rows[0] = SENT  # (SENT, small): sorts between real keys and (SENT, SENT)
+    cols[0] = 0
+    return rows, cols
+
+
+@pytest.mark.parametrize("n_pad", [0, 7])
+def test_count_dedup_equals_general_dedup(rng, n_pad):
+    n_valid = 40
+    rows_np, cols_np = _packets_with_sentinels(rng, n_valid)
+    rows = jnp.concatenate([
+        jnp.asarray(rows_np), jnp.zeros((n_pad,), jnp.uint32)
+    ])
+    cols = jnp.concatenate([
+        jnp.asarray(cols_np), jnp.zeros((n_pad,), jnp.uint32)
+    ])
+    srows, scols = _sorted_streams(rows, cols, n_valid)
+
+    r1, c1, v1, nnz1 = count_dedup_sorted(srows, scols, jnp.int32(n_valid))
+    ones = jnp.ones_like(srows, dtype=jnp.int32)
+    r2, c2, v2, nnz2 = dedup_sorted(srows, scols, ones, jnp.int32(n_valid))
+
+    assert int(nnz1) == int(nnz2)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+    # both match the host oracle over the valid prefix
+    oracle = Counter(zip(rows_np.tolist(), cols_np.tolist()))
+    assert int(nnz1) == len(oracle)
+    got = {
+        (int(r), int(c)): int(v)
+        for r, c, v in zip(
+            np.asarray(r1)[: int(nnz1)],
+            np.asarray(c1)[: int(nnz1)],
+            np.asarray(v1)[: int(nnz1)],
+        )
+    }
+    assert got == dict(oracle)
+
+
+def test_matrix_build_fast_path_matches_general_with_sentinel_keys(rng):
+    n_valid = 32
+    rows_np, cols_np = _packets_with_sentinels(rng, n_valid)
+    rows, cols = jnp.asarray(rows_np), jnp.asarray(cols_np)
+    A_fast = matrix_build(rows, cols, count_fast_path=True)
+    A_gen = matrix_build(rows, cols, count_fast_path=False)
+    assert int(A_fast.nnz) == int(A_gen.nnz)
+    np.testing.assert_array_equal(np.asarray(A_fast.rows),
+                                  np.asarray(A_gen.rows))
+    np.testing.assert_array_equal(np.asarray(A_fast.cols),
+                                  np.asarray(A_gen.cols))
+    np.testing.assert_array_equal(np.asarray(A_fast.vals),
+                                  np.asarray(A_gen.vals))
+    # the all-sentinel key is real data here, not padding
+    oracle = Counter(zip(rows_np.tolist(), cols_np.tolist()))
+    assert oracle[(SENT, SENT)] >= 2
+    r, c, v = A_fast.entries()
+    got = {(int(a), int(b)): int(x) for a, b, x in zip(r, c, v)}
+    assert got[(SENT, SENT)] == oracle[(SENT, SENT)]

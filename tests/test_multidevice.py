@@ -29,16 +29,16 @@ def test_moe_ep_matches_baseline_8dev():
         import dataclasses, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.models.moe import MoEConfig, init_moe, moe_apply, moe_apply_ep
+        from repro.launch.mesh import ambient_mesh, make_mesh_from_plan
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh_from_plan((2, 4), ("data", "model"))
         cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, d_ff_shared=64,
                         capacity_factor=8.0, n_experts_padded=8)
         cfg_ep = dataclasses.replace(cfg, expert_shard_map=True,
                                      dp_axes=("data",))
         params = init_moe(jax.random.PRNGKey(0), 48, cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 48), jnp.float32)
-        with jax.set_mesh(mesh):
+        with ambient_mesh(mesh):
             specs = {"router": P(), "w_gate": P("model", None, None),
                      "w_up": P("model", None, None),
                      "w_down": P("model", None, None),
@@ -66,16 +66,16 @@ def test_exact_ingest_8dev():
         from repro.core.build import matrix_build
         from repro.core.window import WindowConfig
         from repro.launch.ingest import make_exact_ingest_step
+        from repro.launch.mesh import ambient_mesh, make_mesh_from_plan
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh_from_plan((2, 4), ("data", "model"))
         cfg = WindowConfig(window_log2=7, windows_per_batch=1,
                            cap_max_log2=9, anonymization="none")
         step = jax.jit(make_exact_ingest_step(mesh, cfg))
         rng = np.random.default_rng(0)
         w = rng.integers(0, 1 << 32, (8, cfg.window_size, 2),
                          dtype=np.uint32)
-        with jax.set_mesh(mesh):
+        with ambient_mesh(mesh):
             out = jax.block_until_ready(step(jnp.asarray(w)))
         flat = w.reshape(-1, 2)
         A = matrix_build(jnp.asarray(flat[:, 0]), jnp.asarray(flat[:, 1]))

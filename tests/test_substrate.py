@@ -227,9 +227,8 @@ def test_elastic_plans():
 
 
 def test_sharding_batch_axes():
-    import jax as j
     from repro.distributed.sharding import batch_axes_for
+    from repro.launch.mesh import make_mesh_from_plan
 
-    mesh = j.make_mesh((1, 1), ("data", "model"),
-                       axis_types=(j.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_from_plan((1, 1), ("data", "model"))
     assert batch_axes_for(7, mesh) == "data"  # size-1 axis divides anything
