@@ -42,6 +42,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        fig2_flow,
         fig2_graphblas_io,
         fig2_graphblas_only,
         kernels_bench,
@@ -58,6 +59,9 @@ def main(argv=None) -> int:
             **(dict(quick, thread_pairs=(1, 2)) if args.quick else {})
         ),
         "engine_sharded": lambda: _engine_sharded(
+            **(quick if args.quick else {})
+        ),
+        "fig2_flow": lambda: fig2_flow.run(
             **(quick if args.quick else {})
         ),
         "window_size_sweep": lambda: window_size_sweep.run(

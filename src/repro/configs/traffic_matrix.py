@@ -27,7 +27,7 @@ from repro.distributed import sharding as shrules
 
 ARCH_ID = "traffic-matrix"
 FAMILY = "traffic"
-SHAPES = ("ingest_512w", "ingest_analytics", "ingest_exact")
+SHAPES = ("ingest_512w", "ingest_analytics", "ingest_exact", "ingest_flow")
 
 PAPER_WINDOW = 1 << 17
 
@@ -35,6 +35,21 @@ PAPER_WINDOW = 1 << 17
 def window_config(window_log2: int = 17) -> WindowConfig:
     return WindowConfig(window_log2=window_log2, windows_per_batch=64,
                         anonymization="feistel")
+
+
+def flow_window_config(window_log2: int | None = None) -> WindowConfig:
+    """Geometry for the Suricata-flow workload (records, not packets) —
+    flow feeds are pre-aggregated ~100x below the packet rate.  The
+    canonical defaults live with the CLI (launch.ingest.GEOMETRY_DEFAULTS)
+    so the dry-run cell and the launcher cannot drift apart."""
+    from repro.launch.ingest import GEOMETRY_DEFAULTS
+
+    geom = GEOMETRY_DEFAULTS["flow"]
+    return WindowConfig(
+        window_log2=window_log2 or geom["window_log2"],
+        windows_per_batch=geom["windows_per_batch"],
+        anonymization="feistel",
+    )
 
 
 _SUM_KEYS = ("valid_packets", "unique_links", "unique_sources",
@@ -87,30 +102,41 @@ def make_ingest_step(mesh, cfg: WindowConfig, *, windows_per_device: int = 1,
 
 def build_cell(shape_name, mesh, costing=False):
     del costing  # no scans (merge tree is a python loop)
-    cfg = window_config()
+    flow = shape_name == "ingest_flow"
+    cfg = flow_window_config() if flow else window_config()
     n_dev = mesh.size
     wpd = 1
-    if shape_name == "ingest_exact":
-        # beyond-baseline: exact global merge via row-block all_to_all
+    record_width = 2
+    if shape_name in ("ingest_exact", "ingest_flow"):
+        # beyond-baseline: exact global merge via row-block all_to_all;
+        # the flow shape routes value payloads through the same exchange
         from repro.launch.ingest import make_exact_ingest_step
 
-        step = make_exact_ingest_step(mesh, cfg)
+        step = make_exact_ingest_step(
+            mesh, cfg, workload="flow" if flow else "packets"
+        )
+        if flow:
+            record_width = 5
     else:
         with_analytics = shape_name == "ingest_analytics"
         step = make_ingest_step(mesh, cfg, windows_per_device=wpd,
                                 with_analytics=with_analytics)
-    windows = base.sds((n_dev * wpd, cfg.window_size, 2), jnp.uint32)
+    windows = base.sds((n_dev * wpd, cfg.window_size, record_width),
+                       jnp.uint32)
     axes = shrules.all_axes(mesh)
     flat = axes if len(axes) > 1 else axes[0]
     # flops: sort is compare-bound; count the useful arithmetic: anonymize
     # (~40 int ops/addr) + segment ops ~ O(n log n) compares
     n_pkts = n_dev * wpd * cfg.window_size
-    flops = n_pkts * (2 * 40 + 2 * 17)
+    flops = n_pkts * (2 * 40 + 2 * cfg.window_log2)
+    note = ("one 2^13-flow window per device (value-payload build)"
+            if flow else
+            "one 2^17-packet window per device (paper's per-core unit)")
     return base.Cell(
         arch_id=ARCH_ID, shape_name=shape_name, fn=step,
         args=(windows,), in_specs=(P(flat),), out_specs=None,
         kind="serve", model_flops_per_step=flops,
-        note="one 2^17-packet window per device (paper's per-core unit)",
+        note=note,
     )
 
 

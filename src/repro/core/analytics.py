@@ -86,3 +86,18 @@ def top_k_sources(A: HypersparseMatrix, k: int):
 
 
 window_stats_batched = jax.vmap(window_stats)
+
+
+def src_fanout_hist(A: HypersparseMatrix) -> jax.Array:
+    """Log2-binned source fan-out (out-degree) histogram of one matrix.
+
+    The per-window feature the streaming anomaly detectors key on (Jones et
+    al., "GraphBLAS on the Edge"): scans and sweeps shift mass into high
+    fan-out bins that benign windows never populate.
+    """
+    ones = ops.apply(A, types.ONE)
+    return _log2_hist(ops.reduce_rows(ones, types.PLUS_MONOID))
+
+
+# [W, ...] window-matrix stack -> [W, HIST_BINS] per-window histograms.
+src_fanout_hist_batched = jax.vmap(src_fanout_hist)

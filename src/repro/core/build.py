@@ -239,6 +239,31 @@ build_windows_batched = jax.vmap(
 )
 
 
+def build_flow_window(
+    flows,
+    *,
+    value_col: int = 3,
+    n_valid=None,
+    dtype=jnp.int32,
+    use_kernel: bool = False,
+) -> HypersparseMatrix:
+    """Build one traffic matrix from flow records [(n, >=4) uint32].
+
+    The Suricata-flow variant of ``build_window`` (Houle et al.): columns 0/1
+    are (src, dst) and ``value_col`` selects the payload (3 = packet counts,
+    2 = byte counts), accumulated per link with the ``plus`` dup monoid:
+    A(src, dst) += payload for every flow record.
+    """
+    return matrix_build(
+        flows[:, 0],
+        flows[:, 1],
+        flows[:, value_col].astype(dtype),
+        dtype=dtype,
+        n_valid=n_valid,
+        use_kernel=use_kernel,
+    )
+
+
 def vector_build(
     idx,
     vals,

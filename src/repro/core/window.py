@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import anonymize as anon
 from repro.core import ops, types
-from repro.core.build import build_window
+from repro.core.build import build_flow_window, build_window
 from repro.core.hypersparse import HypersparseMatrix
 
 PAPER_WINDOW_LOG2 = 17  # 2^17 packets per window
@@ -63,6 +63,35 @@ def process_windows_batched(packets: jax.Array,
                             cfg: WindowConfig) -> HypersparseMatrix:
     """vmap of ``process_window`` over a [W, n, 2] window batch."""
     return jax.vmap(lambda p: process_window(p, cfg))(packets)
+
+
+def anonymize_flows(flows: jax.Array, cfg: WindowConfig) -> jax.Array:
+    """Anonymize the address columns of flow records [..., (src, dst,
+    *payloads)]; payload columns ride along untouched."""
+    addrs = anon.anonymize_packets(flows[..., :2], cfg.anonymization_key,
+                                   cfg.anonymization)
+    return jnp.concatenate([addrs, flows[..., 2:]], axis=-1)
+
+
+def build_flow_windows(flows: jax.Array, cfg: WindowConfig,
+                       value_col: int = 3) -> HypersparseMatrix:
+    """vmap of the value-carrying build over a [W, n, >=4] flow batch
+    (``value_col`` 3 = packet counts, 2 = byte counts)."""
+    dtype = jnp.dtype(cfg.val_dtype)
+    return jax.vmap(
+        lambda f: build_flow_window(f, value_col=value_col, dtype=dtype)
+    )(flows)
+
+
+def process_flow_batch(flows: jax.Array, cfg: WindowConfig):
+    """Anonymize + build-with-values + merge one flow batch: the flow
+    analogue of ``process_batch``, shared by the stage graph and the
+    sharded policy's per-device step so the two paths cannot diverge.
+    Returns (batch_matrix, merge_overflow); values are packet counts.
+    """
+    anonymized = anonymize_flows(flows, cfg)
+    windows = build_flow_windows(anonymized, cfg)
+    return merge_tree(windows, cfg)
 
 
 def merge_tree(

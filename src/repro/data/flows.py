@@ -1,0 +1,175 @@
+"""Flow records: Suricata-style network flows as fixed-width uint32 arrays.
+
+The flow-analytics papers (Houle et al., "Hypersparse Traffic Matrices from
+Suricata Network Flows using GraphBLAS") build the same traffic matrices this
+repo builds from packets, but from *flow records*: one record per observed
+flow carrying (src, dst) plus value payloads (byte and packet totals, state
+flags).  The matrix entry A(src, dst) then accumulates the payload with the
+``plus`` monoid instead of counting packets.
+
+Host-side representation: ``uint32[n, 5]`` with columns
+
+  0  src   — source address
+  1  dst   — destination address
+  2  bytes — bytes transferred (both directions)
+  3  pkts  — packets transferred (both directions)
+  4  flags — flow-state code (see FLOW_STATES)
+
+Two interchange formats:
+
+* synthetic generators (``synthetic_flows`` / ``flow_batches``) mirroring the
+  packet generators in ``data.packets``;
+* EVE-JSON-lite (``eve_write`` / ``eve_read``): one JSON object per line in
+  the shape Suricata's eve.json uses for ``event_type: "flow"`` records —
+  dotted-quad addresses, ``flow.bytes_toserver``/``flow.pkts_toserver`` etc.
+  Only the fields the matrix pipeline needs are read; unknown lines and
+  non-flow events are skipped, like a log tailer would.
+"""
+
+from __future__ import annotations
+
+import ipaddress
+import json
+from pathlib import Path
+from typing import Iterator
+
+import numpy as np
+
+FLOW_SRC, FLOW_DST, FLOW_BYTES, FLOW_PKTS, FLOW_FLAGS = range(5)
+FLOW_WIDTH = 5
+
+# Matrix values are int32 on device (x64 stays disabled), so per-record
+# payloads are clamped to this at ingest; per-link *accumulation* beyond
+# int32 still wraps — conservation is exact only within int32 range.
+_VAL_MAX = 0x7FFFFFFF
+
+# Suricata flow.state strings -> compact codes (column 4).
+FLOW_STATES = {"new": 1, "established": 2, "closed": 3}
+_STATE_NAMES = {v: k for k, v in FLOW_STATES.items()}
+
+
+def ip_to_u32(s: str) -> int:
+    """Dotted-quad (or integer string) -> uint32 host value."""
+    return int(ipaddress.IPv4Address(s))
+
+
+def u32_to_ip(v: int) -> str:
+    return str(ipaddress.IPv4Address(int(v)))
+
+
+def synthetic_flows(
+    rng: np.random.Generator,
+    n: int,
+    *,
+    kind: str = "uniform",
+    n_hosts: int = 100_000,
+    max_pkts: int = 64,
+) -> np.ndarray:
+    """[n, 5] uint32 flow records with byte/packet payloads.
+
+    Addresses follow the packet generators (uniform over 2^32, or zipf over a
+    host pool); packet counts are uniform in [1, max_pkts]; bytes are packets
+    times a uniform per-packet size in [40, 1500] (min/max ethernet frame).
+    """
+    from repro.data.packets import uniform_traffic, zipf_traffic
+
+    if kind == "uniform":
+        addrs = uniform_traffic(rng, n)
+    elif kind == "zipf":
+        addrs = zipf_traffic(rng, n, n_hosts=n_hosts)
+    else:
+        raise ValueError(f"unknown flow kind: {kind!r}")
+    pkts = rng.integers(1, max_pkts + 1, size=n, dtype=np.uint32)
+    frame = rng.integers(40, 1501, size=n, dtype=np.uint32)
+    flags = rng.integers(1, 4, size=n, dtype=np.uint32)
+    out = np.empty((n, FLOW_WIDTH), dtype=np.uint32)
+    out[:, FLOW_SRC] = addrs[:, 0]
+    out[:, FLOW_DST] = addrs[:, 1]
+    out[:, FLOW_BYTES] = pkts * frame
+    out[:, FLOW_PKTS] = pkts
+    out[:, FLOW_FLAGS] = flags
+    return out
+
+
+def flow_batches(
+    seed: int,
+    *,
+    n_batches: int,
+    windows_per_batch: int,
+    window_size: int,
+    kind: str = "uniform",
+) -> Iterator[np.ndarray]:
+    """Batches of [W, window, 5] flow records (the flow-path workload)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        n = windows_per_batch * window_size
+        flows = synthetic_flows(rng, n, kind=kind)
+        yield flows.reshape(windows_per_batch, window_size, FLOW_WIDTH)
+
+
+# -- EVE-JSON-lite ----------------------------------------------------------
+
+def eve_write(path: str | Path, flows: np.ndarray) -> None:
+    """Write [n, 5] flow records as EVE-JSON flow events (one per line)."""
+    flows = np.asarray(flows, dtype=np.uint32).reshape(-1, FLOW_WIDTH)
+    with open(path, "w") as f:
+        for src, dst, nbytes, npkts, flags in flows.tolist():
+            rec = {
+                "event_type": "flow",
+                "src_ip": u32_to_ip(src),
+                "dest_ip": u32_to_ip(dst),
+                "flow": {
+                    # split like Suricata reports directions; the reader
+                    # sums both, so any split round-trips the totals
+                    "bytes_toserver": nbytes,
+                    "bytes_toclient": 0,
+                    "pkts_toserver": npkts,
+                    "pkts_toclient": 0,
+                    "state": _STATE_NAMES.get(flags, "new"),
+                },
+            }
+            f.write(json.dumps(rec) + "\n")
+
+
+def eve_read(path: str | Path) -> np.ndarray:
+    """Parse EVE-JSON(-lite) flow events -> [n, 5] uint32 records.
+
+    Non-flow events, blank lines, and malformed lines are skipped (an eve.json
+    stream interleaves alerts/dns/etc. with flow records).
+    """
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if obj.get("event_type") != "flow":
+                continue
+            flow = obj.get("flow", {})
+            try:
+                src = ip_to_u32(obj["src_ip"])
+                dst = ip_to_u32(obj["dest_ip"])
+            except (KeyError, ipaddress.AddressValueError, ValueError):
+                continue
+            nbytes = int(flow.get("bytes_toserver", 0)) + int(
+                flow.get("bytes_toclient", 0)
+            )
+            npkts = int(flow.get("pkts_toserver", 0)) + int(
+                flow.get("pkts_toclient", 0)
+            )
+            flags = FLOW_STATES.get(flow.get("state", ""), 0)
+            # Clamp payloads to the device value width (int32, x64 stays
+            # disabled): a >2 GiB elephant flow saturates instead of
+            # wrapping negative through the build's int32 values, and a
+            # corrupt negative count floors at 0 instead of crashing the
+            # uint32 conversion.
+            nbytes = min(max(nbytes, 0), _VAL_MAX)
+            npkts = min(max(npkts, 0), _VAL_MAX)
+            out.append((src, dst, nbytes, npkts, flags))
+    if not out:
+        return np.zeros((0, FLOW_WIDTH), dtype=np.uint32)
+    return np.asarray(out, dtype=np.uint32)

@@ -3,14 +3,18 @@
 Source -> Stage graph -> Sink, under a pluggable execution policy:
 
 * Sources (``engine.source``): ``uniform``/``zipf`` synthetic traffic,
-  pcap-lite replay, or any iterable of window batches.
+  pcap-lite replay, Suricata-style flow records (synthetic or EVE-JSON),
+  or any iterable of window batches.
 * Stages (``engine.stages``): declarative, validated, jitted
-  anonymize -> build -> merge -> analytics graph.
+  anonymize -> build -> merge -> analytics graph, plus the value-carrying
+  flow path (anonymize_flows -> build_flow -> merge_flow) and per-window
+  ``fanout`` histograms.
 * Sinks (``engine.sinks``): stats accumulation, top-k heavy hitters,
-  matrix retention.
+  matrix retention, streaming anomaly flagging (z-scored fan-out
+  histograms), anonymized pcap-lite replay capture.
 * Policies (``engine.policies``): ``blocking`` (GraphBLAS-only),
-  ``double_buffered`` (GraphBLAS+IO), ``sharded`` (mesh-parallel with the
-  exact all_to_all row-block merge).
+  ``double_buffered`` (GraphBLAS+IO), ``triple_buffered`` (3-deep queue),
+  ``sharded`` (mesh-parallel with the exact all_to_all row-block merge).
 
 See DESIGN.md at the repo root for the architecture; ``core.stream`` and
 ``data.pipeline`` are compatibility shims over this package.
@@ -22,11 +26,14 @@ from repro.engine.policies import (  # noqa: F401
     DoubleBufferedPolicy,
     ExecutionPolicy,
     ShardedPolicy,
+    TripleBufferedPolicy,
     make_policy,
 )
 from repro.engine.prefetch import BoundedPrefetcher  # noqa: F401
 from repro.engine.sinks import (  # noqa: F401
+    AnomalySink,
     MatrixRetention,
+    PcapLiteWriterSink,
     Sink,
     StatsAccumulator,
     TopKHeavyHitters,
@@ -35,11 +42,14 @@ from repro.engine.source import (  # noqa: F401
     IterableSource,
     PcapLiteSource,
     Source,
+    SuricataFlowSource,
+    SyntheticFlowSource,
     SyntheticSource,
     as_source,
 )
 from repro.engine.stages import (  # noqa: F401
     DEFAULT_STAGES,
+    FLOW_STAGES,
     Stage,
     StageGraph,
     register_stage,

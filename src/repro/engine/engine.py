@@ -22,18 +22,34 @@ from repro.core.window import WindowConfig
 from repro.engine.policies import ExecutionPolicy, ShardedPolicy, make_policy
 from repro.engine.sinks import Sink
 from repro.engine.source import Source, as_source
-from repro.engine.stages import DEFAULT_OUTPUTS, DEFAULT_STAGES, StageGraph
+from repro.engine.stages import (
+    DEFAULT_OUTPUTS,
+    WORKLOAD_INPUT_KEY,
+    WORKLOAD_STAGES,
+    StageGraph,
+    extend_stages_for,
+)
 from repro.engine.telemetry import EngineReport
 
 
 class TrafficEngine:
-    """The paper's pipeline, assembled from pluggable parts."""
+    """The paper's pipeline, assembled from pluggable parts.
+
+    ``workload`` selects the input record type and default stage graph:
+    ``"packets"`` (the paper's (src, dst) pairs, anonymize -> build -> merge
+    -> analytics) or ``"flow"`` (Suricata-style flow records with
+    byte/packet value payloads, anonymize_flows -> build_flow -> merge_flow
+    -> analytics).  Either way the engine derives the graph's outputs from
+    what the attached sinks require, auto-appending registered stages able
+    to provide them (e.g. an AnomalySink pulls in the ``fanout`` stage).
+    """
 
     def __init__(
         self,
         cfg: WindowConfig,
         *,
-        stages: Sequence[str] = DEFAULT_STAGES,
+        workload: str = "packets",
+        stages: Sequence[str] | None = None,
         outputs: Sequence[str] | None = None,
         sinks: Sequence[Sink] = (),
         policy: str | ExecutionPolicy = "blocking",
@@ -41,6 +57,13 @@ class TrafficEngine:
         self.cfg = cfg
         self.sinks = list(sinks)
         self.policy = make_policy(policy)
+        if workload not in WORKLOAD_STAGES:
+            raise ValueError(
+                f"unknown workload {workload!r}; choose from "
+                f"{sorted(WORKLOAD_STAGES)}"
+            )
+        self.workload = workload
+        input_key = WORKLOAD_INPUT_KEY[workload]
 
         required = list(outputs if outputs is not None else DEFAULT_OUTPUTS)
         for sink in self.sinks:
@@ -59,18 +82,22 @@ class TrafficEngine:
                 )
             self.graph = None
         else:
-            self.graph = StageGraph(cfg, stages=stages, outputs=required)
+            selected = (stages if stages is not None
+                        else WORKLOAD_STAGES[workload])
+            selected = extend_stages_for(selected, required, input_key)
+            self.graph = StageGraph(cfg, stages=selected, outputs=required,
+                                    input_key=input_key)
         self._process_fn = None
         self._overflow = 0
 
     def make_source(self, spec="uniform", *, n_batches: int = 8,
                     seed: int = 0) -> Source:
-        """Build a Source with this engine's window geometry."""
+        """Build a Source with this engine's window geometry + workload."""
         return as_source(
             spec,
             window_size=self.cfg.window_size,
             windows_per_batch=self.cfg.windows_per_batch,
-            n_batches=n_batches, seed=seed,
+            n_batches=n_batches, seed=seed, workload=self.workload,
         )
 
     def run(self, source="uniform", *, n_batches: int = 8, seed: int = 0,
@@ -88,7 +115,7 @@ class TrafficEngine:
         src = self.make_source(source, n_batches=n_batches, seed=seed)
         if self._process_fn is None:
             self._process_fn = self.policy.build_process_fn(
-                self.graph, self.cfg
+                self.graph, self.cfg, workload=self.workload
             )
         self._overflow = 0
         report = self.policy.run(

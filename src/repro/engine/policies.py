@@ -93,8 +93,11 @@ class ExecutionPolicy:
 
     name = "base"
 
-    def build_process_fn(self, graph: StageGraph | None, cfg) -> Callable:
-        """Device function for this policy; default is the stage graph."""
+    def build_process_fn(self, graph: StageGraph | None, cfg,
+                         workload: str = "packets") -> Callable:
+        """Device function for this policy; default is the stage graph
+        (which already encodes the workload — ``workload`` only matters to
+        policies that build their own fused step, i.e. ``sharded``)."""
         if graph is None:
             raise ValueError(f"policy {self.name!r} needs a stage graph")
         return graph
@@ -144,6 +147,19 @@ class DoubleBufferedPolicy(ExecutionPolicy):
         )
 
 
+class TripleBufferedPolicy(DoubleBufferedPolicy):
+    """``double_buffered`` with a 3-deep queue: the host generator may run a
+    full batch ahead, absorbing produce-time jitter once host generation —
+    not the device — is the bottleneck (the ROADMAP's triple-buffering
+    preset).  Scheduling only: stats are bit-identical to every other
+    policy, which the equivalence suite asserts."""
+
+    name = "triple_buffered"
+
+    def __init__(self, queue_depth: int = 3):
+        super().__init__(queue_depth=queue_depth)
+
+
 class ShardedPolicy(ExecutionPolicy):
     """Mesh-parallel windows + exact all_to_all row-block merge.
 
@@ -159,14 +175,16 @@ class ShardedPolicy(ExecutionPolicy):
         self.mesh = mesh
         self.route_capacity_factor = route_capacity_factor
 
-    def build_process_fn(self, graph, cfg) -> Callable:
+    def build_process_fn(self, graph, cfg,
+                         workload: str = "packets") -> Callable:
         mesh = self.mesh
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
 
             mesh = self.mesh = make_local_mesh()
         step = jax.jit(make_exact_ingest_step(
-            mesh, cfg, route_capacity_factor=self.route_capacity_factor
+            mesh, cfg, route_capacity_factor=self.route_capacity_factor,
+            workload=workload,
         ))
         n_dev = mesh.size
 
@@ -196,6 +214,7 @@ _POLICIES = {
     "blocking": BlockingPolicy,
     "double_buffered": DoubleBufferedPolicy,
     "stream": DoubleBufferedPolicy,  # the paper's name for it
+    "triple_buffered": TripleBufferedPolicy,
     "sharded": ShardedPolicy,
     "distributed": ShardedPolicy,  # launcher-CLI name
 }

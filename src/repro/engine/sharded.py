@@ -20,7 +20,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import analytics
 from repro.core.build import matrix_build
 from repro.core.hypersparse import SENTINEL
-from repro.core.window import WindowConfig, process_batch
+from repro.core.window import WindowConfig, process_batch, process_flow_batch
 from repro.distributed import sharding as shrules
 
 
@@ -60,15 +60,27 @@ def route_entries(rows, cols, vals, valid, n_dev: int, cap_out: int):
 
 
 def make_exact_ingest_step(mesh, cfg: WindowConfig, *,
-                           route_capacity_factor: float = 2.0):
+                           route_capacity_factor: float = 2.0,
+                           workload: str = "packets"):
     """shard_map step: local builds -> all_to_all row-block exchange ->
-    owner-local dedup -> exact global analytics."""
+    owner-local dedup -> exact global analytics.
+
+    ``workload="flow"`` takes [w_local, n, 5] flow records instead of
+    [w_local, n, 2] packets: addresses anonymize, packet-count payloads
+    accumulate with ``plus``, and the routed entries carry the values —
+    everything downstream of the local merge is payload-agnostic, so the
+    same exchange/dedup/psum machinery stays exact.
+    """
     axes = shrules.all_axes(mesh)
     flat = axes if len(axes) > 1 else axes[0]
     n_dev = mesh.size
 
     def shard_fn(windows_local):
-        merged, ovf = process_batch(windows_local, cfg)[0::2]
+        if workload == "flow":
+            # same anonymize+build+merge as the stage graph's flow path
+            merged, ovf = process_flow_batch(windows_local, cfg)
+        else:
+            merged, ovf = process_batch(windows_local, cfg)[0::2]
         cap = merged.capacity
         cap_out = int(cap * route_capacity_factor / n_dev) + 8
         r, c, v, route_ovf = route_entries(

@@ -11,12 +11,14 @@ host work belongs in ``finalize``.
 from __future__ import annotations
 
 import dataclasses
+from pathlib import Path
 from typing import Any
 
 import jax
 import numpy as np
 
 from repro.core import analytics
+from repro.data.packets import PcapLite
 
 # Stats keys that add across batches; the rest are running maxima except the
 # histograms, which also add.
@@ -113,19 +115,28 @@ class TopKHeavyHitters(Sink):
 
 @dataclasses.dataclass
 class MatrixRetention(Sink):
-    """Keep the last ``max_keep`` merged batch matrices (on host)."""
+    """Keep the last ``max_keep`` merged batch matrices (on host).
+
+    ``key`` selects which stage output to retain — ``"matrix"`` (default) or
+    ``"byte_matrix"`` for the flow path's byte-payload matrix.  Non-default
+    keys report under the key's own name so two retention sinks can coexist.
+    """
 
     max_keep: int = 8
     device: bool = False  # True: keep device arrays (no transfer)
+    key: str = "matrix"
 
     name = "matrices"
     requires = ("matrix",)
 
     def __post_init__(self):
         self.matrices: list = []
+        if self.key != "matrix":
+            self.requires = (self.key,)
+            self.name = self.key
 
     def consume(self, index: int, outputs: dict) -> None:
-        m = outputs["matrix"]
+        m = outputs[self.key]
         if not self.device:
             m = jax.device_get(m)
         self.matrices.append(m)
@@ -134,3 +145,88 @@ class MatrixRetention(Sink):
 
     def finalize(self) -> list:
         return self.matrices
+
+
+@dataclasses.dataclass
+class AnomalySink(Sink):
+    """Flag anomalous windows by z-scoring per-window fan-out histograms.
+
+    Consumes the ``fanout_hist`` output ([W, HIST_BINS] per batch — the
+    engine auto-appends the ``fanout`` stage when this sink is attached) and
+    accumulates one histogram row per window across the whole run.  Finalize
+    z-scores each histogram bin against its across-window mean/std; a
+    window's score is its largest absolute bin z-score, and windows at or
+    above ``threshold`` are flagged.  Scans/sweeps concentrate mass in high
+    fan-out bins that benign windows never populate, which is exactly the
+    deviation this measures (per-window streaming detection in the style of
+    Jones et al., "GraphBLAS on the Edge").
+
+    Note the population z-score over N windows is bounded by sqrt(N-1):
+    with fewer than ~11 windows the default threshold of 3.0 is
+    unreachable — lower it (or ingest more windows) accordingly.
+    """
+
+    threshold: float = 3.0
+
+    name = "anomaly"
+    requires = ("fanout_hist",)
+
+    def __post_init__(self):
+        self._hists: list = []
+
+    def consume(self, index: int, outputs: dict) -> None:
+        self._hists.append(outputs["fanout_hist"])
+
+    def finalize(self) -> dict:
+        if not self._hists:
+            return {"windows": 0, "scores": np.zeros((0,)), "flagged": [],
+                    "threshold": self.threshold}
+        hists = np.concatenate(
+            [np.asarray(jax.device_get(h)) for h in self._hists], axis=0
+        ).astype(np.float64)
+        mean = hists.mean(axis=0)
+        std = hists.std(axis=0)
+        z = np.where(std > 0, (hists - mean) / np.where(std > 0, std, 1.0),
+                     0.0)
+        scores = np.abs(z).max(axis=1)
+        flagged = [int(i) for i in np.nonzero(scores >= self.threshold)[0]]
+        return {
+            "windows": int(hists.shape[0]),
+            "scores": scores,
+            "flagged": flagged,
+            "threshold": self.threshold,
+        }
+
+
+@dataclasses.dataclass
+class PcapLiteWriterSink(Sink):
+    """Write the anonymized stream back out as a replayable pcap-lite file.
+
+    ``key="packets"`` (default) captures the post-anonymization packet
+    buffers; ``key="flows"`` captures the flow path's anonymized records,
+    keeping only the (src, dst) columns — one pair per flow.  Either way the
+    output re-ingests through ``PcapLiteSource`` (with anonymization "none")
+    to the same matrices the producing run built, which is the
+    writer/reader round-trip contract the sink tests pin down.
+    """
+
+    path: str | Path = "anonymized.pcl"
+    key: str = "packets"
+    compress: bool = False
+
+    name = "pcap"
+
+    def __post_init__(self):
+        self.requires = (self.key,)
+        self._chunks: list[np.ndarray] = []
+
+    def consume(self, index: int, outputs: dict) -> None:
+        buf = np.asarray(jax.device_get(outputs[self.key]))
+        pairs = buf.reshape(-1, buf.shape[-1])[:, :2]
+        self._chunks.append(np.ascontiguousarray(pairs, dtype=np.uint32))
+
+    def finalize(self) -> dict:
+        pkts = (np.concatenate(self._chunks)
+                if self._chunks else np.zeros((0, 2), np.uint32))
+        PcapLite.write(self.path, pkts, compress=self.compress)
+        return {"path": str(self.path), "packets": int(pkts.shape[0])}

@@ -22,7 +22,16 @@ from typing import Iterable, Iterator
 
 import numpy as np
 
+from repro.data.flows import FLOW_WIDTH, eve_read, flow_batches
 from repro.data.packets import PcapLite, traffic_batches
+
+
+# Spec strings that resolve to synthetic generators (everything else that is
+# a str/Path is treated as a file to replay).  The single authority for
+# "is this spec synthetic?" — callers deciding e.g. whether a warmup batch
+# can be added must consult this, not restate the list.
+SYNTHETIC_SPECS = {"uniform": "uniform", "zipf": "zipf",
+                   "flow": "uniform", "flow-zipf": "zipf"}
 
 
 class Source:
@@ -79,6 +88,54 @@ class PcapLiteSource(Source):
 
 
 @dataclasses.dataclass
+class SyntheticFlowSource(Source):
+    """Synthetic Suricata-style flow records ([W, n, 5] uint32 batches:
+    src, dst, bytes, packets, flags — see ``data.flows``).  For flow
+    workloads ``packets_per_item`` counts *records*, so EngineReport rates
+    read as flows/s."""
+
+    kind: str = "uniform"  # uniform | zipf
+    seed: int = 0
+    n_batches: int = 8
+    windows_per_batch: int = 64
+    window_size: int = 1 << 17  # flow records per window
+
+    def __post_init__(self):
+        self.packets_per_item = self.windows_per_batch * self.window_size
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        return flow_batches(
+            seed=self.seed,
+            n_batches=self.n_batches,
+            windows_per_batch=self.windows_per_batch,
+            window_size=self.window_size,
+            kind=self.kind,
+        )
+
+
+@dataclasses.dataclass
+class SuricataFlowSource(Source):
+    """Replay flow records from an EVE-JSON(-lite) file as window batches
+    (non-flow events are skipped; the trailing partial batch is dropped,
+    mirroring ``PcapLiteSource``)."""
+
+    path: str | Path = ""
+    windows_per_batch: int = 64
+    window_size: int = 1 << 17
+
+    def __post_init__(self):
+        self.packets_per_item = self.windows_per_batch * self.window_size
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        flows = eve_read(self.path)
+        per_batch = self.packets_per_item
+        for i in range(0, len(flows) - per_batch + 1, per_batch):
+            yield flows[i : i + per_batch].reshape(
+                self.windows_per_batch, self.window_size, FLOW_WIDTH
+            )
+
+
+@dataclasses.dataclass
 class IterableSource(Source):
     """Adapter for a plain iterable of buffers (rate inferred per item)."""
 
@@ -96,13 +153,27 @@ def as_source(
     windows_per_batch: int,
     n_batches: int = 8,
     seed: int = 0,
+    workload: str = "packets",
 ) -> Source:
     """Resolve a source spec: a Source passes through; ``"uniform"``/
-    ``"zipf"`` build a SyntheticSource; a path builds a PcapLiteSource;
-    any other iterable is wrapped."""
+    ``"zipf"`` build a SyntheticSource (or SyntheticFlowSource under the
+    ``"flow"`` workload); a path builds a PcapLiteSource (packets) or a
+    SuricataFlowSource (flows); any other iterable is wrapped."""
     if isinstance(spec, Source):
         return spec
     if isinstance(spec, (str, Path)):
+        if workload == "flow":
+            if spec in SYNTHETIC_SPECS:
+                return SyntheticFlowSource(
+                    kind=SYNTHETIC_SPECS[str(spec)], seed=seed,
+                    n_batches=n_batches,
+                    windows_per_batch=windows_per_batch,
+                    window_size=window_size,
+                )
+            return SuricataFlowSource(
+                path=spec, windows_per_batch=windows_per_batch,
+                window_size=window_size,
+            )
         if spec in ("uniform", "zipf"):
             return SyntheticSource(
                 kind=str(spec), seed=seed, n_batches=n_batches,

@@ -1,15 +1,19 @@
 """Declarative stage graph: anonymize -> build -> merge -> analytics.
 
 A Stage is a named, pure function over a context dict of named arrays
-(``packets``, ``windows``, ``matrix``, ...).  A StageGraph is an ordered
-selection of stages, validated at construction (every stage's ``requires``
-must be provided upstream, every requested output must exist) and compiled
-to a single jitted device function ``[W, n, 2] packets -> outputs dict``.
+(``packets``, ``flows``, ``windows``, ``matrix``, ...).  A StageGraph is an
+ordered selection of stages, validated at construction (every stage's
+``requires`` must be provided upstream, every requested output must exist)
+and compiled to a single jitted device function ``input batch -> outputs
+dict`` (``input_key`` names what the batch is: ``packets`` for [W, n, 2]
+pairs, ``flows`` for [W, n, 5] Suricata-style records).
 
-This replaces the per-pipeline hand-wired ``process_batch`` closures: the
-same graph runs under every execution policy, and new stages (e.g. a flow
-aggregator, a second anonymization pass) register once and become available
-to every source/sink/policy combination.
+Two built-in paths share the registry: the paper's packet path
+(``DEFAULT_STAGES``) and the value-carrying flow path (``FLOW_STAGES``:
+anonymize_flows -> build_flow -> merge_flow -> analytics, where byte and
+packet payloads accumulate under the ``plus`` semiring).  New stages
+register once and become available to every source/sink/policy
+combination.
 """
 
 from __future__ import annotations
@@ -23,7 +27,13 @@ import jax.numpy as jnp
 from repro.core import analytics
 from repro.core import anonymize as anon
 from repro.core.build import build_window
-from repro.core.window import WindowConfig, merge_tree
+from repro.core.window import (
+    WindowConfig,
+    anonymize_flows,
+    build_flow_windows,
+    merge_tree,
+)
+from repro.data.flows import FLOW_BYTES, FLOW_PKTS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,8 +99,83 @@ def _window_analytics(ctx, cfg):
     return {"window_stats": analytics.window_stats_batched(ctx["windows"])}
 
 
+@register_stage("fanout", requires=("windows",), provides=("fanout_hist",))
+def _fanout(ctx, cfg):
+    # Per-window [W, HIST_BINS] source fan-out histograms — the feature the
+    # AnomalySink z-scores.  Works for both workloads: "windows" is the
+    # pre-merge window-matrix stack whether built from packets or flows.
+    return {"fanout_hist": analytics.src_fanout_hist_batched(ctx["windows"])}
+
+
+# -- the value-carrying flow path (Suricata flow records) -------------------
+
+@register_stage("anonymize_flows", requires=("flows",), provides=("flows",))
+def _anonymize_flows(ctx, cfg):
+    # Only the address columns are anonymized; byte/packet/flag payloads
+    # ride along untouched (anonymization must preserve the values whose
+    # conservation the flow tests assert).
+    return {"flows": anonymize_flows(ctx["flows"], cfg)}
+
+
+@register_stage("build_flow", requires=("flows",),
+                provides=("windows", "byte_windows"))
+def _build_flow(ctx, cfg):
+    flows = ctx["flows"]
+    return {
+        "windows": build_flow_windows(flows, cfg, value_col=FLOW_PKTS),
+        "byte_windows": build_flow_windows(flows, cfg,
+                                           value_col=FLOW_BYTES),
+    }
+
+
+@register_stage("merge_flow", requires=("windows", "byte_windows"),
+                provides=("matrix", "byte_matrix", "merge_overflow",
+                          "byte_merge_overflow"))
+def _merge_flow(ctx, cfg):
+    # Byte overflow is reported separately so that when no sink asks for the
+    # byte matrix, XLA dead-code-eliminates the whole byte build+merge.
+    merged, overflow = merge_tree(ctx["windows"], cfg)
+    byte_merged, byte_overflow = merge_tree(ctx["byte_windows"], cfg)
+    return {"matrix": merged, "merge_overflow": overflow,
+            "byte_matrix": byte_merged,
+            "byte_merge_overflow": byte_overflow}
+
+
+@register_stage("byte_analytics", requires=("byte_matrix",),
+                provides=("byte_stats",))
+def _byte_analytics(ctx, cfg):
+    return {"byte_stats": analytics.window_stats(ctx["byte_matrix"])}
+
+
 DEFAULT_STAGES = ("anonymize", "build", "merge", "analytics")
+FLOW_STAGES = ("anonymize_flows", "build_flow", "merge_flow", "analytics")
 DEFAULT_OUTPUTS = ("stats", "merge_overflow")
+WORKLOAD_STAGES = {"packets": DEFAULT_STAGES, "flow": FLOW_STAGES}
+WORKLOAD_INPUT_KEY = {"packets": "packets", "flow": "flows"}
+
+
+def extend_stages_for(stages, required, input_key: str = "packets"):
+    """Append registered stages able to provide missing required outputs.
+
+    This is how the engine derives the graph from what the sinks need: e.g.
+    attaching an ``AnomalySink`` (requires ``fanout_hist``) auto-appends the
+    ``fanout`` stage.  Resolution is greedy over the registry; anything
+    still unprovided is left for StageGraph construction to reject with its
+    usual diagnostic.
+    """
+    names = list(stages)
+    available = {input_key}
+    for s in names:
+        available |= set(StageGraph._resolve(s).provides)
+    for key in required:
+        if key in available:
+            continue
+        for cand in STAGE_REGISTRY.values():
+            if key in cand.provides and set(cand.requires) <= available:
+                names.append(cand.name)
+                available |= set(cand.provides)
+                break
+    return tuple(names)
 
 
 class StageGraph:
@@ -101,14 +186,16 @@ class StageGraph:
         cfg: WindowConfig,
         stages: Sequence[str] = DEFAULT_STAGES,
         outputs: Sequence[str] = DEFAULT_OUTPUTS,
+        input_key: str = "packets",
     ):
         self.cfg = cfg
         self.stages: tuple[Stage, ...] = tuple(
             self._resolve(name) for name in stages
         )
         self.outputs = tuple(outputs)
+        self.input_key = input_key
 
-        available = {"packets"}
+        available = {input_key}
         for s in self.stages:
             missing = set(s.requires) - available
             if missing:
@@ -138,7 +225,7 @@ class StageGraph:
             ) from None
 
     def _forward(self, batch: jax.Array) -> dict:
-        ctx = {"packets": batch}
+        ctx = {self.input_key: batch}
         for s in self.stages:
             ctx.update(s.fn(ctx, self.cfg))
         return {k: ctx[k] for k in self.outputs}

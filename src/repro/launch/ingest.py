@@ -15,6 +15,15 @@ modes, mapping 1:1 onto engine policies:
   space — the 2D decomposition from DESIGN.md). Exact distinct-source /
   distinct-link counts fall out because every (row) lives on exactly one
   owner.
+
+Workloads and sinks are independent axes:
+
+* ``--source uniform|zipf|<capture.pcl>`` — the packet workload;
+  ``--source flow|flow-zipf|<eve.json>`` — the Suricata-flow workload
+  (value payloads accumulated with ``plus``; rates read as flows/s).
+* ``--sink stats,anomaly,topk,pcap`` — comma list of streaming sinks;
+  ``anomaly`` z-scores per-window fan-out histograms and reports flagged
+  windows, ``pcap`` writes the anonymized stream back out for replay.
 """
 
 from __future__ import annotations
@@ -22,10 +31,60 @@ from __future__ import annotations
 import argparse
 
 from repro.core.window import WindowConfig
-from repro.engine import ShardedPolicy, StatsAccumulator, TrafficEngine
+from repro.engine import (
+    AnomalySink,
+    PcapLiteWriterSink,
+    ShardedPolicy,
+    StatsAccumulator,
+    TopKHeavyHitters,
+    TrafficEngine,
+)
+from repro.engine.source import SYNTHETIC_SPECS
 
 # Re-exported for existing callers/tests; implementation lives in the engine.
 from repro.engine.sharded import make_exact_ingest_step  # noqa: F401
+
+# The paper's geometry for the packet workload; the flow workload defaults
+# smaller (flow records are pre-aggregated, so real feeds are ~100x sparser
+# than the packet stream — and the CLI must finish promptly on one core).
+# Canonical home for per-workload defaults: configs/traffic_matrix.py's
+# flow_window_config reads from here.
+GEOMETRY_DEFAULTS = {
+    "packets": dict(window_log2=17, windows_per_batch=64, n_batches=8),
+    "flow": dict(window_log2=13, windows_per_batch=8, n_batches=4),
+}
+
+
+def infer_workload(source: str) -> str:
+    s = str(source)
+    if s in ("flow", "flow-zipf") or s.endswith((".json", ".jsonl", ".eve")):
+        return "flow"
+    return "packets"
+
+
+def make_sinks(names, *, workload: str = "packets",
+               pcap_out: str = "anonymized.pcl",
+               anomaly_threshold: float = 3.0):
+    """Resolve a comma list / sequence of sink names into Sink instances."""
+    if isinstance(names, str):
+        names = [n for n in names.split(",") if n]
+    factories = {
+        "stats": StatsAccumulator,
+        "anomaly": lambda: AnomalySink(threshold=anomaly_threshold),
+        "topk": lambda: TopKHeavyHitters(k=10),
+        "pcap": lambda: PcapLiteWriterSink(
+            path=pcap_out, key="flows" if workload == "flow" else "packets"
+        ),
+    }
+    sinks = []
+    for name in names:
+        try:
+            sinks.append(factories[name]())
+        except KeyError:
+            raise ValueError(
+                f"unknown sink {name!r}; choose from {sorted(factories)}"
+            ) from None
+    return sinks
 
 
 def run_paper_mode(mode: str, *, window_log2: int = 17,
@@ -36,7 +95,9 @@ def run_paper_mode(mode: str, *, window_log2: int = 17,
     cfg = WindowConfig(window_log2=window_log2,
                        windows_per_batch=windows_per_batch,
                        anonymization=anonymization)
-    policy = "double_buffered" if mode == "stream" else "blocking"
+    policy = {"stream": "double_buffered", "blocking": "blocking"}.get(
+        mode, mode
+    )
     # Fig.-2 comparability: time build+merge only, like the paper.
     engine = TrafficEngine(cfg, policy=policy,
                            stages=("anonymize", "build", "merge"),
@@ -60,25 +121,118 @@ def run_distributed(mesh, *, window_log2: int = 17,
     return report, engine.finalize()["stats"]
 
 
+def run_sinks(source: str, sink_names, *, mode: str = "blocking",
+              window_log2: int | None = None,
+              windows_per_batch: int | None = None,
+              n_batches: int | None = None,
+              anonymization: str = "feistel",
+              pcap_out: str = "anonymized.pcl",
+              anomaly_threshold: float = 3.0, seed: int = 0):
+    """Generic engine run: any source spec x sink list x policy.
+
+    Geometry arguments left as None take the workload's defaults.  Returns
+    (EngineReport, finalized sink results keyed by sink name).
+    """
+    workload = infer_workload(source)
+    geom = GEOMETRY_DEFAULTS[workload]
+    cfg = WindowConfig(
+        window_log2=window_log2 or geom["window_log2"],
+        windows_per_batch=windows_per_batch or geom["windows_per_batch"],
+        anonymization=anonymization,
+    )
+    policy = {"stream": "double_buffered", "distributed": "sharded"}.get(
+        mode, mode
+    )
+    engine = TrafficEngine(
+        cfg, workload=workload, policy=policy,
+        sinks=make_sinks(sink_names, workload=workload, pcap_out=pcap_out,
+                         anomaly_threshold=anomaly_threshold),
+    )
+    # For synthetic sources one extra leading batch absorbs jit compile
+    # (excluded from timing and sinks); file replays must not lose their
+    # first batch, so they just eat the compile in their timing.
+    synthetic = str(source) in SYNTHETIC_SPECS
+    report = engine.run(
+        source,
+        n_batches=(n_batches or geom["n_batches"]) + (1 if synthetic else 0),
+        seed=seed, warmup_items=1 if synthetic else 0,
+    )
+    return report, engine.finalize()
+
+
+def _print_sink_results(results: dict) -> None:
+    for name, res in results.items():
+        if name == "stats":
+            scalars = {k: int(v) for k, v in res.items()
+                       if getattr(v, "ndim", None) == 0 or
+                       isinstance(v, int)}
+            print(f"  stats: {scalars}")
+        elif name == "anomaly":
+            print(f"  anomaly: flagged windows {res['flagged']} of "
+                  f"{res['windows']} (|z| >= {res['threshold']})")
+        elif name == "pcap":
+            print(f"  pcap: wrote {res['packets']:,} anonymized pairs -> "
+                  f"{res['path']}")
+        elif name == "top_k":
+            print(f"  top_k: {res[:3]}")
+        else:
+            print(f"  {name}: {res}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="blocking",
-                    choices=["blocking", "stream", "distributed"])
-    ap.add_argument("--window-log2", type=int, default=17)
-    ap.add_argument("--windows-per-batch", type=int, default=64)
-    ap.add_argument("--batches", type=int, default=8)
+                    choices=["blocking", "stream", "double_buffered",
+                             "triple_buffered", "distributed", "sharded"])
+    ap.add_argument("--window-log2", type=int, default=None)
+    ap.add_argument("--windows-per-batch", type=int, default=None)
+    ap.add_argument("--batches", type=int, default=None)
     ap.add_argument("--traffic", default="uniform",
                     choices=["uniform", "zipf"])
+    ap.add_argument("--source", default=None,
+                    help="uniform | zipf | flow | flow-zipf | capture.pcl "
+                         "| eve.json (defaults to --traffic)")
+    ap.add_argument("--sink", default=None,
+                    help="comma list: stats,anomaly,topk,pcap "
+                         "(default stats)")
+    ap.add_argument("--pcap-out", default="anonymized.pcl")
+    ap.add_argument("--anomaly-threshold", type=float, default=3.0,
+                    help="|z| flag threshold; the max reachable |z| over N "
+                         "windows is sqrt(N-1), so lower this for short "
+                         "runs (e.g. 2.5 for 8 windows)")
     ap.add_argument("--anonymization", default="feistel",
                     choices=["feistel", "cryptopan", "none"])
     args = ap.parse_args(argv)
 
-    if args.mode == "distributed":
+    source = args.source if args.source is not None else args.traffic
+    workload = infer_workload(source)
+
+    if args.sink is not None or args.source is not None:
+        # the generic Source x Sink path: an explicit --source must never
+        # fall through to the synthetic-only legacy paths (which would
+        # silently replay uniform traffic instead of the requested source)
+        rep, results = run_sinks(
+            source, args.sink or "stats", mode=args.mode,
+            window_log2=args.window_log2,
+            windows_per_batch=args.windows_per_batch,
+            n_batches=args.batches, anonymization=args.anonymization,
+            pcap_out=args.pcap_out,
+            anomaly_threshold=args.anomaly_threshold,
+        )
+        unit = "flows" if workload == "flow" else "pkts"
+        print(f"[ingest/{workload}/{rep.policy}] {rep.packets:,} {unit}, "
+              f"{rep.elapsed_s:.2f}s -> {rep.packets_per_second:,.0f} "
+              f"{unit[:-1]}/s (overflow {rep.merge_overflow})")
+        _print_sink_results(results)
+        return rep
+
+    if args.mode in ("distributed", "sharded"):
         from repro.launch.mesh import make_local_mesh
 
         mesh = make_local_mesh()
         rep, totals = run_distributed(
-            mesh, window_log2=args.window_log2, n_batches=args.batches,
+            mesh, window_log2=args.window_log2 or 17,
+            n_batches=args.batches or 8,
             anonymization=args.anonymization, kind=args.traffic,
         )
         print(f"[ingest/distributed] {rep.summary()} (incl. compile)")
@@ -87,11 +241,12 @@ def main(argv=None):
         return rep
 
     rep = run_paper_mode(
-        args.mode, window_log2=args.window_log2,
-        windows_per_batch=args.windows_per_batch, n_batches=args.batches,
+        args.mode, window_log2=args.window_log2 or 17,
+        windows_per_batch=args.windows_per_batch or 64,
+        n_batches=args.batches or 8,
         anonymization=args.anonymization, kind=args.traffic,
     )
-    label = "GraphBLAS+IO" if args.mode == "stream" else "GraphBLAS only"
+    label = "GraphBLAS+IO" if args.mode != "blocking" else "GraphBLAS only"
     print(f"[ingest/{label}] {rep.packets:,} packets, "
           f"{rep.elapsed_s:.2f}s -> {rep.packets_per_second:,.0f} pkt/s")
     return rep

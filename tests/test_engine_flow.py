@@ -1,0 +1,224 @@
+"""The Suricata-flow workload: value-carrying build/merge conservation,
+EVE-JSON-lite round-trips, flow sources, and the sharded flow path."""
+
+import numpy as np
+import pytest
+
+from repro.core.window import WindowConfig
+from repro.data.flows import (
+    FLOW_BYTES,
+    FLOW_PKTS,
+    FLOW_WIDTH,
+    eve_read,
+    eve_write,
+    flow_batches,
+    ip_to_u32,
+    synthetic_flows,
+    u32_to_ip,
+)
+from repro.engine import (
+    IterableSource,
+    MatrixRetention,
+    StatsAccumulator,
+    SuricataFlowSource,
+    TrafficEngine,
+)
+
+
+def _cfg(**kw):
+    kw.setdefault("window_log2", 5)
+    kw.setdefault("windows_per_batch", 4)
+    kw.setdefault("cap_max_log2", 9)
+    return WindowConfig(**kw)
+
+
+def _matrix_sum(m) -> int:
+    valid = np.arange(m.rows.shape[0]) < int(m.nnz)
+    return int(np.asarray(m.vals)[valid].astype(np.int64).sum())
+
+
+# -- round-trip conservation: sum(matrix values) == sum(input payloads) -----
+@pytest.mark.parametrize("anonymization", ["none", "feistel"])
+def test_flow_payload_conservation_exact(anonymization):
+    cfg = _cfg(anonymization=anonymization)
+    eng = TrafficEngine(
+        cfg, workload="flow",
+        sinks=[StatsAccumulator(), MatrixRetention(max_keep=8),
+               MatrixRetention(key="byte_matrix", max_keep=8)],
+    )
+    rep = eng.run("uniform", n_batches=3, seed=11)
+    assert rep.merge_overflow == 0
+    res = eng.finalize()
+
+    batches = list(flow_batches(11, n_batches=3,
+                                windows_per_batch=cfg.windows_per_batch,
+                                window_size=cfg.window_size))
+    for i, batch in enumerate(batches):
+        in_pkts = int(batch[..., FLOW_PKTS].astype(np.int64).sum())
+        in_bytes = int(batch[..., FLOW_BYTES].astype(np.int64).sum())
+        assert _matrix_sum(res["matrices"][i]) == in_pkts
+        assert _matrix_sum(res["byte_matrix"][i]) == in_bytes
+
+    # and the stats trace agrees: valid_packets of the flow matrix is the
+    # true packet total, not the record count
+    total_pkts = sum(int(b[..., FLOW_PKTS].astype(np.int64).sum())
+                     for b in batches)
+    assert int(res["stats"]["valid_packets"]) == total_pkts
+
+
+def test_flow_merge_overflow_reported_not_silent():
+    # 4 windows x 32 all-unique links = 128 unique into a 64-entry cap:
+    # conservation must break by exactly the audited amount (dropped
+    # entries are counted, never silently truncated)
+    cfg = _cfg(cap_max_log2=6, anonymization="none")
+    n = cfg.windows_per_batch * cfg.window_size
+    flows = np.zeros((cfg.windows_per_batch, cfg.window_size, FLOW_WIDTH),
+                     np.uint32)
+    coords = np.arange(2 * n, dtype=np.uint32).reshape(n, 2)
+    flows[..., :2] = coords.reshape(cfg.windows_per_batch, cfg.window_size, 2)
+    flows[..., FLOW_PKTS] = 3
+    flows[..., FLOW_BYTES] = 120
+
+    eng = TrafficEngine(cfg, workload="flow",
+                        sinks=[MatrixRetention(max_keep=1)])
+    rep = eng.run(IterableSource(it=[flows]))
+    assert rep.merge_overflow == 64  # 128 unique into cap 64
+    kept = _matrix_sum(eng.finalize()["matrices"][0])
+    # every link carries exactly 3 packets, so the dropped mass is exactly
+    # 3 * overflow
+    assert kept == 3 * n - 3 * rep.merge_overflow
+
+
+def test_flow_source_records_and_rate_accounting():
+    cfg = _cfg()
+    eng = TrafficEngine(cfg, workload="flow", sinks=[StatsAccumulator()])
+    rep = eng.run("uniform", n_batches=2, seed=0)
+    assert rep.batches == 2
+    # flow workloads count records: W * n per batch
+    assert rep.packets == 2 * cfg.windows_per_batch * cfg.window_size
+    totals = eng.finalize()["stats"]
+    assert totals["batches"] == 2
+
+
+def test_flow_zipf_source_accumulates_duplicates():
+    cfg = _cfg(anonymization="none")
+    eng = TrafficEngine(cfg, workload="flow",
+                        sinks=[StatsAccumulator(), MatrixRetention()])
+    eng.run("zipf", n_batches=1, seed=5)
+    res = eng.finalize()
+    m = res["matrices"][0]
+    n_records = cfg.windows_per_batch * cfg.window_size
+    # heavy-tailed addresses repeat links; values still conserve
+    assert int(res["stats"]["unique_links"]) <= n_records
+    batch = next(flow_batches(5, n_batches=1,
+                              windows_per_batch=cfg.windows_per_batch,
+                              window_size=cfg.window_size, kind="zipf"))
+    assert _matrix_sum(m) == int(batch[..., FLOW_PKTS].astype(np.int64).sum())
+
+
+# -- EVE-JSON-lite ----------------------------------------------------------
+def test_eve_json_round_trip(rng, tmp_path):
+    flows = synthetic_flows(rng, 64, kind="uniform")
+    path = tmp_path / "eve.json"
+    eve_write(path, flows)
+    back = eve_read(path)
+    np.testing.assert_array_equal(back, flows)
+
+
+def test_eve_read_skips_non_flow_events(rng, tmp_path):
+    flows = synthetic_flows(rng, 8)
+    path = tmp_path / "eve.json"
+    eve_write(path, flows)
+    text = path.read_text()
+    path.write_text(
+        '{"event_type": "alert", "src_ip": "10.0.0.1"}\n'
+        + "not json at all\n\n" + text
+    )
+    np.testing.assert_array_equal(eve_read(path), flows)
+
+
+def test_eve_read_clamps_payloads_to_int32_range(tmp_path):
+    """Payloads beyond int32 saturate at ingest instead of wrapping
+    negative through the device's int32 matrix values, and corrupt
+    negative counts floor at 0 instead of crashing the uint32 cast."""
+    import json
+
+    path = tmp_path / "eve.json"
+    path.write_text(
+        json.dumps({
+            "event_type": "flow", "src_ip": "10.0.0.1",
+            "dest_ip": "10.0.0.2",
+            "flow": {"bytes_toserver": 3_000_000_000, "pkts_toserver": 12,
+                     "state": "closed"},
+        }) + "\n" + json.dumps({
+            "event_type": "flow", "src_ip": "10.0.0.3",
+            "dest_ip": "10.0.0.4",
+            "flow": {"bytes_toserver": -5, "pkts_toserver": -1,
+                     "state": "new"},
+        }) + "\n")
+    rec = eve_read(path)
+    assert rec[0, FLOW_BYTES] == 0x7FFFFFFF
+    assert rec[0, FLOW_PKTS] == 12
+    assert rec[1, FLOW_BYTES] == 0
+    assert rec[1, FLOW_PKTS] == 0
+
+
+def test_ip_conversion_round_trip():
+    for v in (0, 1, 0xC0A80101, 0xFFFFFFFF):
+        assert ip_to_u32(u32_to_ip(v)) == v
+    assert ip_to_u32("192.168.1.1") == 0xC0A80101
+
+
+def test_suricata_flow_source_replay_matches_synthetic(rng, tmp_path):
+    """EVE file -> SuricataFlowSource == the same records via IterableSource
+    (trailing partial batch dropped, like the pcap replayer)."""
+    cfg = _cfg(anonymization="none")
+    per_batch = cfg.windows_per_batch * cfg.window_size
+    flows = synthetic_flows(rng, 2 * per_batch + 7)
+    path = tmp_path / "eve.json"
+    eve_write(path, flows)
+
+    eng_file = TrafficEngine(cfg, workload="flow",
+                             sinks=[StatsAccumulator(), MatrixRetention()])
+    rep = eng_file.run(str(path))
+    assert rep.batches == 2
+    assert isinstance(eng_file.make_source(str(path)), SuricataFlowSource)
+
+    whole = flows[: 2 * per_batch].reshape(
+        2, cfg.windows_per_batch, cfg.window_size, FLOW_WIDTH
+    )
+    eng_mem = TrafficEngine(cfg, workload="flow",
+                            sinks=[StatsAccumulator(), MatrixRetention()])
+    eng_mem.run(IterableSource(it=list(whole)))
+
+    for a, b in zip(eng_file.finalize()["matrices"],
+                    eng_mem.finalize()["matrices"]):
+        np.testing.assert_array_equal(np.asarray(a.rows), np.asarray(b.rows))
+        np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
+
+
+# -- sharded flow path ------------------------------------------------------
+def test_sharded_flow_matches_blocking_exactly():
+    cfg = _cfg(windows_per_batch=2, anonymization="none")
+    eb = TrafficEngine(cfg, workload="flow", policy="blocking",
+                       sinks=[StatsAccumulator()])
+    eb.run("uniform", n_batches=2, seed=3)
+    es = TrafficEngine(cfg, workload="flow", policy="sharded",
+                       sinks=[StatsAccumulator()])
+    rep = es.run("uniform", n_batches=2, seed=3)
+    assert rep.policy == "sharded"
+
+    shared = ("valid_packets", "unique_links", "unique_sources",
+              "max_packets_per_link", "max_source_packets",
+              "max_source_fanout", "src_packet_hist", "src_fanout_hist")
+    tb = eb.finalize()["stats"]["per_batch"]
+    ts = es.finalize()["stats"]["per_batch"]
+    for a, b in zip(tb, ts):
+        for k in shared:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                          err_msg=k)
+
+
+def test_unknown_workload_rejected():
+    with pytest.raises(ValueError, match="workload"):
+        TrafficEngine(_cfg(), workload="quantum")

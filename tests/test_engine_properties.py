@@ -1,0 +1,149 @@
+"""Property-based engine equivalence: the core invariant every execution
+policy must hold — for the same source, ``blocking``, ``double_buffered``
+(any queue depth), and ``sharded`` produce identical analytics; policies
+are pure scheduling.
+
+Hypothesis drives (workload, source kind, seed, window_size,
+windows_per_batch, queue_depth); a deterministic grid repeats the key
+cases so the invariant stays exercised even where hypothesis is absent
+(the conftest stub auto-skips ``@given`` tests).  Engines are cached per
+geometry so examples reuse jitted stage graphs instead of recompiling.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.window import WindowConfig
+from repro.engine import (
+    DoubleBufferedPolicy,
+    MatrixRetention,
+    StatsAccumulator,
+    TrafficEngine,
+)
+
+# Stats the sharded policy emits (exact under row ownership); blocking /
+# buffered traces are compared on ALL keys, sharded on these.
+SHARDED_KEYS = ("valid_packets", "unique_links", "unique_sources",
+                "max_packets_per_link", "max_source_packets",
+                "max_source_fanout", "src_packet_hist", "src_fanout_hist")
+
+_ENGINES: dict = {}
+
+
+def _cfg(window_log2, windows_per_batch):
+    # anonymization "none" so every policy (incl. sharded) is comparable on
+    # raw addresses; anonymized equivalence is covered by the engine tests
+    return WindowConfig(window_log2=window_log2,
+                        windows_per_batch=windows_per_batch,
+                        cap_max_log2=window_log2 + 4,
+                        anonymization="none")
+
+
+def _run(policy_key, cfg, workload, kind, seed, *, depth=None,
+         matrices=False):
+    """Run a cached engine; returns (report, per-batch stats, matrices)."""
+    cache_key = (policy_key, depth, matrices, workload, cfg)
+    if cache_key not in _ENGINES:
+        policy = (DoubleBufferedPolicy(queue_depth=depth)
+                  if policy_key == "double_buffered" and depth
+                  else policy_key)
+        sinks = [StatsAccumulator()]
+        if matrices:
+            sinks.append(MatrixRetention(max_keep=8))
+        _ENGINES[cache_key] = TrafficEngine(
+            cfg, workload=workload, policy=policy, sinks=sinks
+        )
+    eng = _ENGINES[cache_key]
+    eng.sinks[0] = StatsAccumulator()
+    if matrices:
+        eng.sinks[1] = MatrixRetention(max_keep=8)
+    rep = eng.run(kind, n_batches=2, seed=seed)
+    res = eng.finalize()
+    return rep, res["stats"]["per_batch"], res.get("matrices")
+
+
+def _assert_policy_equivalence(workload, kind, seed, window_log2,
+                               windows_per_batch, depth):
+    cfg = _cfg(window_log2, windows_per_batch)
+    rb, tb, mb = _run("blocking", cfg, workload, kind, seed, matrices=True)
+    rd, td, md = _run("double_buffered", cfg, workload, kind, seed,
+                      depth=depth, matrices=True)
+    rs, ts, _ = _run("sharded", cfg, workload, kind, seed)
+
+    # identical EngineReport accounting (timings legitimately differ)
+    assert rb.batches == rd.batches == rs.batches == 2
+    assert rb.packets == rd.packets == rs.packets
+    assert rb.merge_overflow == rd.merge_overflow
+
+    # blocking vs double_buffered: every stat, bit-identical
+    for a, b in zip(tb, td):
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+    # ... and identical retained matrices
+    for a, b in zip(mb, md):
+        np.testing.assert_array_equal(np.asarray(a.rows), np.asarray(b.rows))
+        np.testing.assert_array_equal(np.asarray(a.cols), np.asarray(b.cols))
+        np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
+        assert int(a.nnz) == int(b.nnz)
+
+    # sharded: exact on its emitted stats subset
+    for a, b in zip(tb, ts):
+        for k in SHARDED_KEYS:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                          err_msg=k)
+
+
+workloads = st.sampled_from(["packets", "flow"])
+kinds = st.sampled_from(["uniform", "zipf"])
+seeds = st.integers(0, 2 ** 31 - 1)
+window_log2s = st.sampled_from([4, 5])
+wpbs = st.sampled_from([2, 4])
+depths = st.integers(1, 4)
+
+
+@given(kinds, seeds, window_log2s, wpbs, depths)
+@settings(max_examples=10, deadline=None)
+def test_policies_equivalent_packet_source(kind, seed, window_log2, wpb,
+                                           depth):
+    _assert_policy_equivalence("packets", kind, seed, window_log2, wpb,
+                               depth)
+
+
+@given(kinds, seeds, window_log2s, wpbs, depths)
+@settings(max_examples=10, deadline=None)
+def test_policies_equivalent_flow_source(kind, seed, window_log2, wpb,
+                                         depth):
+    _assert_policy_equivalence("flow", kind, seed, window_log2, wpb, depth)
+
+
+@given(workloads, seeds, depths)
+@settings(max_examples=10, deadline=None)
+def test_queue_depth_never_changes_stats(workload, seed, depth):
+    """Deeper queues change scheduling only: double_buffered at any depth
+    matches blocking bit-for-bit."""
+    cfg = _cfg(4, 2)
+    _, tb, mb = _run("blocking", cfg, workload, "uniform", seed,
+                     matrices=True)
+    _, td, md = _run("double_buffered", cfg, workload, "uniform", seed,
+                     depth=depth, matrices=True)
+    for a, b in zip(tb, td):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    for a, b in zip(mb, md):
+        np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
+
+
+# -- deterministic floor: the same invariant without hypothesis -------------
+@pytest.mark.parametrize("workload,kind,seed,window_log2,wpb,depth", [
+    ("packets", "uniform", 7, 4, 2, 2),
+    ("packets", "zipf", 13, 5, 4, 3),
+    ("flow", "uniform", 7, 4, 2, 3),
+    ("flow", "zipf", 29, 5, 4, 2),
+])
+def test_policy_equivalence_grid(workload, kind, seed, window_log2, wpb,
+                                 depth):
+    _assert_policy_equivalence(workload, kind, seed, window_log2, wpb,
+                               depth)

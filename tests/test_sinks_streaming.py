@@ -1,0 +1,175 @@
+"""Streaming sinks: anomaly flagging (planted heavy-hitter window) and the
+pcap-lite writer/reader round-trip, plus the triple-buffered preset."""
+
+import numpy as np
+
+from repro.core.build import matrix_build
+from repro.core.window import WindowConfig
+from repro.data.flows import FLOW_BYTES, FLOW_PKTS, FLOW_WIDTH
+from repro.data.packets import PcapLite
+from repro.engine import (
+    AnomalySink,
+    IterableSource,
+    MatrixRetention,
+    PcapLiteWriterSink,
+    StatsAccumulator,
+    TrafficEngine,
+    TripleBufferedPolicy,
+    make_policy,
+)
+
+
+def _cfg(**kw):
+    kw.setdefault("window_log2", 5)
+    kw.setdefault("windows_per_batch", 4)
+    kw.setdefault("cap_max_log2", 9)
+    return WindowConfig(**kw)
+
+
+def _benign_flow_batches(cfg, n_batches):
+    """Every window identical: one flow per distinct source (fan-out 1), so
+    all across-window variance comes from whatever a test plants."""
+    n = cfg.window_size
+    window = np.zeros((n, FLOW_WIDTH), np.uint32)
+    window[:, 0] = np.arange(n, dtype=np.uint32) + 1000  # distinct sources
+    window[:, 1] = 7
+    window[:, FLOW_BYTES] = 120
+    window[:, FLOW_PKTS] = 2
+    batch = np.broadcast_to(
+        window, (cfg.windows_per_batch, n, FLOW_WIDTH)
+    ).copy()
+    return [batch.copy() for _ in range(n_batches)]
+
+
+# -- AnomalySink ------------------------------------------------------------
+def test_anomaly_sink_flags_exactly_the_planted_window():
+    cfg = _cfg(anonymization="none")
+    batches = _benign_flow_batches(cfg, n_batches=2)
+    planted = cfg.windows_per_batch + 1  # batch 1, window 1 (global index 5)
+    scan = batches[1][1]
+    scan[:, 0] = 0xC0FFEE  # one source sweeping every destination
+    scan[:, 1] = np.arange(cfg.window_size, dtype=np.uint32)
+
+    eng = TrafficEngine(cfg, workload="flow",
+                        sinks=[AnomalySink(threshold=2.5)])
+    eng.run(IterableSource(it=batches))
+    res = eng.finalize()["anomaly"]
+    assert res["windows"] == 2 * cfg.windows_per_batch
+    assert res["flagged"] == [planted]
+    assert res["scores"][planted] >= 2.5
+    benign = np.delete(res["scores"], planted)
+    assert (benign < 2.5).all()
+
+
+def test_anomaly_sink_all_benign_flags_nothing():
+    cfg = _cfg(anonymization="none")
+    eng = TrafficEngine(cfg, workload="flow",
+                        sinks=[AnomalySink(threshold=2.5)])
+    eng.run(IterableSource(it=_benign_flow_batches(cfg, 2)))
+    res = eng.finalize()["anomaly"]
+    # identical windows => zero variance => zero z-scores everywhere
+    assert res["flagged"] == []
+    assert (res["scores"] == 0).all()
+
+
+def test_anomaly_sink_empty_run():
+    sink = AnomalySink()
+    res = sink.finalize()
+    assert res["windows"] == 0
+    assert res["flagged"] == []
+    assert res["scores"].shape == (0,)  # uniform result shape when empty
+
+
+def test_anomaly_sink_works_on_packet_workload(rng):
+    """The fanout stage is workload-agnostic: the engine auto-appends it to
+    the packet graph too."""
+    cfg = _cfg(anonymization="none")
+    eng = TrafficEngine(cfg, sinks=[AnomalySink(threshold=2.5)])
+    eng.run("uniform", n_batches=2, seed=0)
+    res = eng.finalize()["anomaly"]
+    assert res["windows"] == 2 * cfg.windows_per_batch
+
+
+# -- PcapLiteWriterSink -----------------------------------------------------
+def test_pcap_writer_reader_round_trip(tmp_path, rng):
+    """The written anonymized capture re-ingests (anonymization none) to
+    bit-identical matrices — the sink's replay contract."""
+    cfg = _cfg(anonymization="feistel")
+    path = tmp_path / "anon.pcl"
+    eng = TrafficEngine(
+        cfg, sinks=[PcapLiteWriterSink(path=path),
+                    MatrixRetention(max_keep=8)],
+    )
+    rep = eng.run("uniform", n_batches=2, seed=9)
+    res = eng.finalize()
+    assert res["pcap"]["packets"] == rep.packets
+
+    cfg_replay = _cfg(anonymization="none")
+    replay = TrafficEngine(cfg_replay, sinks=[MatrixRetention(max_keep=8)])
+    rep2 = replay.run(str(path))
+    assert rep2.batches == rep.batches
+    for a, b in zip(res["matrices"], replay.finalize()["matrices"]):
+        np.testing.assert_array_equal(np.asarray(a.rows), np.asarray(b.rows))
+        np.testing.assert_array_equal(np.asarray(a.cols), np.asarray(b.cols))
+        np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
+        assert int(a.nnz) == int(b.nnz)
+
+
+def test_pcap_writer_flow_key_writes_flow_links(tmp_path):
+    """For the flow workload the capture holds one anonymized (src, dst)
+    pair per record; re-building counts records per link."""
+    cfg = _cfg(anonymization="none")
+    n = cfg.windows_per_batch * cfg.window_size
+    flows = np.zeros((cfg.windows_per_batch, cfg.window_size, FLOW_WIDTH),
+                     np.uint32)
+    flows[..., 0] = 3
+    flows[..., 1] = 4
+    flows[..., FLOW_PKTS] = 10
+    path = tmp_path / "flows.pcl"
+    eng = TrafficEngine(cfg, workload="flow",
+                        sinks=[PcapLiteWriterSink(path=path, key="flows")])
+    eng.run(IterableSource(it=[flows]))
+    assert eng.finalize()["pcap"]["packets"] == n
+
+    pairs = PcapLite.read(path)
+    A = matrix_build(np.asarray(pairs[:, 0]), np.asarray(pairs[:, 1]))
+    assert int(A.nnz) == 1  # single link...
+    r, c, v = A.entries()
+    assert (r[0], c[0], v[0]) == (3, 4, n)  # ...seen once per record
+
+
+# -- triple buffering -------------------------------------------------------
+def test_triple_buffered_preset_depth_and_name():
+    pol = make_policy("triple_buffered")
+    assert isinstance(pol, TripleBufferedPolicy)
+    assert pol.queue_depth == 3
+    assert pol.name == "triple_buffered"
+
+
+def test_deeper_queues_change_timing_never_stats():
+    """blocking / double(2) / triple(3) / deep(7): identical per-batch stats
+    and matrices; only the schedule (timing) may differ."""
+    cfg = _cfg()
+    traces, retained = [], []
+    for policy in ("blocking", "double_buffered", "triple_buffered",
+                   TripleBufferedPolicy(queue_depth=7)):
+        eng = TrafficEngine(cfg, policy=policy,
+                            sinks=[StatsAccumulator(),
+                                   MatrixRetention(max_keep=8)])
+        rep = eng.run("uniform", n_batches=3, seed=2, warmup_items=1)
+        assert rep.batches == 2
+        res = eng.finalize()
+        traces.append(res["stats"]["per_batch"])
+        retained.append(res["matrices"])
+
+    base_trace, base_mats = traces[0], retained[0]
+    for trace, mats in zip(traces[1:], retained[1:]):
+        for a, b in zip(base_trace, trace):
+            assert a.keys() == b.keys()
+            for k in a:
+                np.testing.assert_array_equal(a[k], b[k])
+        for a, b in zip(base_mats, mats):
+            np.testing.assert_array_equal(np.asarray(a.rows),
+                                          np.asarray(b.rows))
+            np.testing.assert_array_equal(np.asarray(a.vals),
+                                          np.asarray(b.vals))
