@@ -1,0 +1,114 @@
+"""Queue-depth vs pkt/s sweep: how deep should the pipeline be?
+
+The ROADMAP's open question after the ``triple_buffered`` preset landed:
+sweep in-flight depth {1, 2, 3, 4, 8} across the pipelined policies —
+
+* ``double_buffered``   — depth = producer queue depth (host IO overlap
+  only; the device loop still blocks per batch);
+* ``async_pipelined``   — depth = both the producer queue and the ring of
+  async-dispatched batches (IO *and* readback overlap);
+* ``sharded_pipelined`` — the same ring in front of the mesh-parallel
+  exact-merge step.
+
+Depth 1 is the degenerate "no lookahead" point for each policy, so each
+curve's own depth-1 row is its serialization baseline.  Rows print in the
+harness CSV format; ``run(json_path=...)`` (and the CLI) also record a
+JSON artifact that ``render_experiments.py``'s depth-sweep section renders
+into EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.core.window import WindowConfig
+from repro.engine import (
+    AsyncPipelinedPolicy,
+    DoubleBufferedPolicy,
+    ShardedPipelinedPolicy,
+    TrafficEngine,
+)
+
+DEPTHS = (1, 2, 3, 4, 8)
+POLICIES = ("double_buffered", "async_pipelined", "sharded_pipelined")
+DEFAULT_JSON = Path(__file__).parent / "results_depth" / "depth_sweep.json"
+
+
+def policy_at_depth(name: str, depth: int):
+    """Instantiate ``name`` with ``depth`` applied to its lookahead knob."""
+    if name == "double_buffered":
+        return DoubleBufferedPolicy(queue_depth=depth)
+    if name == "async_pipelined":
+        return AsyncPipelinedPolicy(max_in_flight=depth, queue_depth=depth)
+    if name == "sharded_pipelined":
+        return ShardedPipelinedPolicy(max_in_flight=depth,
+                                      queue_depth=depth)
+    raise ValueError(f"no depth knob defined for policy {name!r}")
+
+
+def run(window_log2: int = 15, windows_per_batch: int = 8,
+        n_batches: int = 4, depths=DEPTHS, policies=POLICIES,
+        anonymization: str = "feistel", json_path=DEFAULT_JSON):
+    cfg = WindowConfig(window_log2=window_log2,
+                       windows_per_batch=windows_per_batch,
+                       anonymization=anonymization)
+    rows, records = [], []
+    for name in policies:
+        for depth in depths:
+            engine = TrafficEngine(cfg, policy=policy_at_depth(name, depth))
+            rep = engine.run("uniform", n_batches=n_batches + 1, seed=0,
+                             warmup_items=1, keep_results=False)
+            rows.append((
+                f"depth_sweep_{name}_d{depth}",
+                rep.elapsed_s / max(rep.batches, 1) * 1e6,
+                f"{rep.packets_per_second:,.0f}_pkt_per_s",
+            ))
+            records.append({
+                "policy": name,
+                "depth": depth,
+                "us_per_batch": rep.elapsed_s / max(rep.batches, 1) * 1e6,
+                "pkt_per_s": rep.packets_per_second,
+                "process_s": rep.process_s,
+                "overlap_s": rep.overlap_s,
+                "max_in_flight": rep.max_in_flight,
+            })
+    if json_path is not None:
+        json_path = Path(json_path)
+        json_path.parent.mkdir(parents=True, exist_ok=True)
+        json_path.write_text(json.dumps({
+            "suite": "depth_sweep",
+            "window_log2": window_log2,
+            "windows_per_batch": windows_per_batch,
+            "n_batches": n_batches,
+            "rows": records,
+        }, indent=2) + "\n")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small windows + depths (1, 2, 4): CI-sized run")
+    ap.add_argument("--json-out", default=None,
+                    help="default benchmarks/results_depth/depth_sweep"
+                         ".json (quick runs go to ..._quick.json so they "
+                         "never clobber a recorded full sweep)")
+    args = ap.parse_args(argv)
+    if args.json_out is None:
+        args.json_out = str(
+            DEFAULT_JSON.with_name("depth_sweep_quick.json")
+            if args.quick else DEFAULT_JSON
+        )
+    kw = (dict(window_log2=12, windows_per_batch=4, n_batches=2,
+               depths=(1, 2, 4)) if args.quick else {})
+    print("name,us_per_call,derived")
+    for name, us, derived in run(json_path=args.json_out, **kw):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"wrote {args.json_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,17 +11,20 @@ split stays comparable with the packet Fig. 2 suites.
 
 from __future__ import annotations
 
+import argparse
+
 from repro.core.window import WindowConfig
 from repro.engine import TrafficEngine
 
 
 def run(window_log2: int = 15, windows_per_batch: int = 16,
-        n_batches: int = 4, anonymization: str = "feistel"):
+        n_batches: int = 4, anonymization: str = "feistel",
+        policies=("blocking", "double_buffered")):
     cfg = WindowConfig(window_log2=window_log2,
                        windows_per_batch=windows_per_batch,
                        anonymization=anonymization)
     rows = []
-    for policy in ("blocking", "double_buffered"):
+    for policy in policies:
         # Build+merge only in the timed step, like the packet suites; the
         # packet-count payload path is what the merge semiring exercises.
         engine = TrafficEngine(
@@ -37,3 +40,24 @@ def run(window_log2: int = 15, windows_per_batch: int = 16,
             f"{rep.packets_per_second:,.0f}_flow_per_s",
         ))
     return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", action="append", default=None,
+                    help="repeatable; any registered engine policy "
+                         "(default: blocking + double_buffered)")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    kw = dict(window_log2=12, windows_per_batch=8,
+              n_batches=2) if args.quick else {}
+    if args.policy:
+        kw["policies"] = tuple(args.policy)
+    print("name,us_per_call,derived")
+    for name, us, derived in run(**kw):
+        print(f"{name},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

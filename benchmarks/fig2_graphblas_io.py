@@ -3,38 +3,136 @@ generation + device transfer = the NIC stand-in), the other builds the
 hypersparse matrices — the unified engine's ``double_buffered`` policy
 (bounded-queue backpressure), matching the paper's 2-thread pipeline.
 Peak there: 8M pkt/s on 8 ARM cores.
+
+``--policy`` swaps the execution policy under the same workload, so the
+async-dispatch variants can be compared head to head on one host
+(``async_pipelined`` must meet or beat ``double_buffered`` — the overlap
+acceptance check).  ``--json-out`` records the rows for
+``render_experiments.py`` and the acceptance audit.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+from pathlib import Path
+
 from repro.core.window import WindowConfig
 from repro.engine import SyntheticSource, TrafficEngine
 
+RESULTS_DIR = Path(__file__).parent / "results_fig2"
 
-def run(window_log2: int = 17, windows_per_batch: int = 64,
-        n_batches: int = 4, thread_pairs=(1, 2, 4),
-        anonymization: str = "feistel"):
+
+def measure(window_log2: int = 17, windows_per_batch: int = 64,
+            n_batches: int = 4, thread_pairs=(1, 2, 4),
+            anonymization: str = "feistel", policy: str = "double_buffered",
+            reps: int = 1) -> list[dict]:
+    """The raw per-row measurements; ``run``/``run_json`` format these."""
     cfg = WindowConfig(window_log2=window_log2,
                        windows_per_batch=windows_per_batch,
                        anonymization=anonymization)
     # Build+merge only in the timed step, like the paper (no analytics).
-    engine = TrafficEngine(cfg, policy="double_buffered",
+    engine = TrafficEngine(cfg, policy=policy,
                            stages=("anonymize", "build", "merge"),
                            outputs=("merge_overflow",))
 
-    rows = []
+    # default-policy rows keep their historical names so EXPERIMENTS.md
+    # renders stay comparable release to release
+    tag = "" if policy == "double_buffered" else f"_{policy}"
+    records = []
     for pairs in thread_pairs:
         # `pairs` producer/consumer pairs: workload scales with pairs; on
-        # this 1-core host they serialize (see EXPERIMENTS.md)
-        src = SyntheticSource(
-            seed=0, n_batches=pairs * n_batches + 1,
-            windows_per_batch=windows_per_batch,
-            window_size=cfg.window_size,
-        )
-        rep = engine.run(src, warmup_items=1)
-        rows.append((
-            f"fig2_graphblas_io_x{pairs}",
-            rep.elapsed_s / max(rep.batches, 1) * 1e6,
-            f"{rep.packets_per_second:,.0f}_pkt_per_s",
-        ))
-    return rows
+        # this 1-core host they serialize (see EXPERIMENTS.md).  ``reps``
+        # repeats the row and keeps the best rate — the usual guard
+        # against scheduler noise on a shared host.
+        best = None
+        for _ in range(max(reps, 1)):
+            src = SyntheticSource(
+                seed=0, n_batches=pairs * n_batches + 1,
+                windows_per_batch=windows_per_batch,
+                window_size=cfg.window_size,
+            )
+            rep = engine.run(src, warmup_items=1, keep_results=False)
+            if best is None or rep.packets_per_second > best.packets_per_second:
+                best = rep
+        records.append({
+            "name": f"fig2_graphblas_io{tag}_x{pairs}",
+            "us_per_batch": best.elapsed_s / max(best.batches, 1) * 1e6,
+            "pkt_per_s": best.packets_per_second,
+        })
+    return records
+
+
+def run(**kw):
+    """Harness rows (name, us_per_call, derived-CSV cell)."""
+    return [
+        (r["name"], r["us_per_batch"], f"{r['pkt_per_s']:,.0f}_pkt_per_s")
+        for r in measure(**kw)
+    ]
+
+
+def run_json(policy: str, **kw) -> dict:
+    """One policy's curve as a self-describing JSON record (the geometry
+    rides along so readers can tell a quick run from a recorded sweep)."""
+    return {
+        "suite": "fig2_graphblas_io",
+        "policy": policy,
+        "geometry": {
+            "window_log2": kw.get("window_log2", 17),
+            "windows_per_batch": kw.get("windows_per_batch", 64),
+            "n_batches": kw.get("n_batches", 4),
+            "reps": kw.get("reps", 1),
+        },
+        "rows": measure(policy=policy, **kw),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="double_buffered",
+                    help="any registered engine policy, e.g. "
+                         "double_buffered | async_pipelined")
+    ap.add_argument("--quick", action="store_true",
+                    help="small windows: fast CI-sized run")
+    ap.add_argument("--window-log2", type=int, default=None)
+    ap.add_argument("--windows-per-batch", type=int, default=None)
+    ap.add_argument("--batches", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=1,
+                    help="repeat each row, keep the best rate "
+                         "(noise guard on shared hosts)")
+    ap.add_argument("--json-out", default=None,
+                    help="write the record here (default "
+                         "benchmarks/results_fig2/fig2_graphblas_io_"
+                         "<policy>.json)")
+    args = ap.parse_args(argv)
+
+    kw = (dict(window_log2=12, windows_per_batch=8, n_batches=2,
+               thread_pairs=(1, 2)) if args.quick else {})
+    if args.window_log2 is not None:
+        kw["window_log2"] = args.window_log2
+    if args.windows_per_batch is not None:
+        kw["windows_per_batch"] = args.windows_per_batch
+    if args.batches is not None:
+        kw["n_batches"] = args.batches
+    kw["reps"] = args.reps
+    record = run_json(args.policy, **kw)
+    # --quick defaults to a _quick artifact so a CI-sized run never
+    # clobbers a recorded sweep; an explicit --json-out always wins
+    default_name = (f"fig2_graphblas_io_{args.policy}_quick.json"
+                    if args.quick else
+                    f"fig2_graphblas_io_{args.policy}.json")
+    out = (Path(args.json_out) if args.json_out
+           else RESULTS_DIR / default_name)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(record, indent=2) + "\n")
+
+    print("name,us_per_call,derived")
+    for r in record["rows"]:
+        print(f"{r['name']},{r['us_per_batch']:.1f},"
+              f"{r['pkt_per_s']:,.0f}_pkt_per_s")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

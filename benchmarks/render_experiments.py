@@ -33,6 +33,23 @@ def fig2_section() -> str:
     return "\n".join(out)
 
 
+def depth_sweep_section() -> str:
+    """Render the depth-vs-pkt/s sweep (benchmarks.depth_sweep JSON)."""
+    path = Path(__file__).parent / "results_depth" / "depth_sweep.json"
+    if not path.exists():
+        return "*(run `python -m benchmarks.depth_sweep` to populate)*"
+    rec = json.loads(path.read_text())
+    out = ["| policy | depth | us/batch | packets/s | exposed wait s | "
+           "overlap s |", "|---|---|---|---|---|---|"]
+    for r in rec.get("rows", []):
+        out.append(
+            f"| {r['policy']} | {r['depth']} | {r['us_per_batch']:,.0f} | "
+            f"{r['pkt_per_s']:,.0f} | {r['process_s']:.3f} | "
+            f"{r['overlap_s']:.3f} |"
+        )
+    return "\n".join(out)
+
+
 def roofline_section() -> str:
     from benchmarks import roofline
 
@@ -194,10 +211,14 @@ def perf_section() -> str:
 
 def main():
     path = ROOT / "EXPERIMENTS.md"
+    if not path.exists():
+        print("EXPERIMENTS.md not found; nothing to render")
+        return
     text = path.read_text()
     text = text.replace("<!-- FIG2_RESULTS -->", fig2_section())
     text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_section())
     text = text.replace("<!-- PERF_LOG -->", perf_section())
+    text = text.replace("<!-- DEPTH_SWEEP -->", depth_sweep_section())
     path.write_text(text)
     print("EXPERIMENTS.md rendered")
 

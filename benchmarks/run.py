@@ -42,6 +42,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        depth_sweep,
         fig2_flow,
         fig2_graphblas_io,
         fig2_graphblas_only,
@@ -66,6 +67,11 @@ def main(argv=None) -> int:
         ),
         "window_size_sweep": lambda: window_size_sweep.run(
             **(dict(window_log2s=(10, 12), n_batches=2) if args.quick else {})
+        ),
+        "depth_sweep": lambda: depth_sweep.run(
+            # quick harness runs never clobber the recorded full sweep
+            **(dict(window_log2=12, windows_per_batch=4, n_batches=2,
+                    depths=(1, 2, 4), json_path=None) if args.quick else {})
         ),
         "kernels": kernels_bench.run,
         "roofline": roofline.run,

@@ -14,7 +14,9 @@ Source -> Stage graph -> Sink, under a pluggable execution policy:
   histograms), anonymized pcap-lite replay capture.
 * Policies (``engine.policies``): ``blocking`` (GraphBLAS-only),
   ``double_buffered`` (GraphBLAS+IO), ``triple_buffered`` (3-deep queue),
-  ``sharded`` (mesh-parallel with the exact all_to_all row-block merge).
+  ``async_pipelined`` (async dispatch + donated buffers, ring of in-flight
+  batches), ``sharded`` (mesh-parallel with the exact all_to_all row-block
+  merge), ``sharded_pipelined`` (sharded + prefetch + async ring).
 
 See DESIGN.md at the repo root for the architecture; ``core.stream`` and
 ``data.pipeline`` are compatibility shims over this package.
@@ -22,11 +24,14 @@ See DESIGN.md at the repo root for the architecture; ``core.stream`` and
 
 from repro.engine.engine import TrafficEngine  # noqa: F401
 from repro.engine.policies import (  # noqa: F401
+    AsyncPipelinedPolicy,
     BlockingPolicy,
     DoubleBufferedPolicy,
     ExecutionPolicy,
+    ShardedPipelinedPolicy,
     ShardedPolicy,
     TripleBufferedPolicy,
+    canonical_policies,
     make_policy,
 )
 from repro.engine.prefetch import BoundedPrefetcher  # noqa: F401

@@ -72,12 +72,14 @@ class TrafficEngine:
                     required.append(key)
 
         if isinstance(self.policy, ShardedPolicy):
-            # The sharded step fuses the graph per shard and only emits the
-            # exact global stats — matrix-hungry sinks can't be fed.
+            # The sharded step (pipelined or not) fuses the graph per shard
+            # and only emits the exact global stats — matrix-hungry sinks
+            # can't be fed.
             unsupported = sorted(set(required) - {"stats", "merge_overflow"})
             if unsupported:
                 raise ValueError(
-                    f"sharded policy cannot produce outputs {unsupported} "
+                    f"sharded policy {self.policy.name!r} cannot produce "
+                    f"outputs {unsupported} "
                     f"(sinks: {[s.name for s in self.sinks]})"
                 )
             self.graph = None

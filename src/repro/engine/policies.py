@@ -5,16 +5,28 @@
 * ``double_buffered`` — GraphBLAS+IO (blue curve): a producer thread
   device_puts the next batch behind a bounded queue while the device builds
   the current one.  Generalizes the old ``core.stream`` loop.
+* ``async_pipelined`` — GraphBLAS+IO plus async dispatch: a ring of up to
+  ``max_in_flight`` submitted batches; ``block_until_ready`` only runs when
+  the ring is full or at drain, and the stage graph is jitted with
+  ``donate_argnums`` so consumed input buffers recycle into outputs.
 * ``sharded``         — mesh-parallel windows with the exact row-block
   all_to_all merge (``engine.sharded``); per-batch output is the exact
   global stats dict.
+* ``sharded_pipelined`` — ``sharded`` composed with the bounded-queue
+  producer and the async ring, so mesh-parallel windows also overlap IO
+  with the device build.
 
-All three share one consumption loop and return the same ``EngineReport``,
-so per-policy pkt/s numbers are directly comparable.
+Every policy shares a consumption loop and returns the same
+``EngineReport``, so per-policy pkt/s numbers are directly comparable.
+Policies are pure scheduling: per-batch stats and matrices are identical
+across all of them, which ``tests/test_engine_properties.py`` derives from
+``canonical_policies()`` — registering a policy here automatically puts it
+under that invariant.
 """
 
 from __future__ import annotations
 
+import collections
 import time
 from typing import Callable, Iterable
 
@@ -58,15 +70,20 @@ def _run_loop(
         if device_put_inline:
             t0 = time.perf_counter()
             dev = jax.device_put(item)
-            produce_inline += time.perf_counter() - t0
+            if n_items >= warmup_items:
+                produce_inline += time.perf_counter() - t0
         else:
             dev = item
         if n_items == warmup_items:
             start = time.perf_counter()
         t0 = time.perf_counter()
         out = jax.block_until_ready(process_fn(dev))
-        process_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
         if n_items >= warmup_items:
+            # warmup (jit compile / first transfer) is excluded from ALL
+            # timing — elapsed, process AND produce — so the produce/
+            # process split always describes the measured window only
+            process_s += dt
             n_packets += packets_in_item(item, packets_per_item)
             if keep_results:
                 results.append(out)
@@ -85,6 +102,132 @@ def _run_loop(
         process_s=process_s,
         results=results,
         policy=policy_name,
+    )
+
+
+def _validate_in_flight(max_in_flight: int) -> int:
+    if max_in_flight < 1:
+        raise ValueError(
+            f"max_in_flight must be >= 1, got {max_in_flight}"
+        )
+    return max_in_flight
+
+
+def _run_async_loop(
+    items: Iterable,
+    process_fn: Callable,
+    *,
+    policy_name: str,
+    max_in_flight: int,
+    packets_per_item: int | None = None,
+    warmup_items: int = 0,
+    consume: Callable | None = None,
+    produce_time: Callable[[], float] | None = None,
+    keep_results: bool = True,
+    sync_timing: bool = False,
+    inflight: collections.deque | None = None,
+) -> EngineReport:
+    """Async-dispatch variant of the pipeline loop: submit without blocking,
+    retire FIFO.
+
+    Up to ``max_in_flight`` submitted batches await device completion at
+    once; the oldest is retired (``block_until_ready`` -> results -> sinks)
+    before a new one is submitted when the ring is full, and everything
+    drains at end of stream.  Sinks therefore always observe results in
+    submission order.  Warmup batches retire immediately so compile time
+    never leaks into the measured window.
+
+    Timing semantics (DESIGN.md "Async dispatch & donation"): ``process_s``
+    is the *exposed* wait — wall-clock spent blocked on results, including
+    the final drain; ``overlap_s`` is head-of-line in-flight time hidden
+    behind host work, accounted over disjoint wall-clock segments so that
+    ``process_s + overlap_s <= elapsed_s`` by construction.
+    ``sync_timing=True`` retires every batch right after submission,
+    restoring the per-batch blocking measurement (Fig. 2 comparability) at
+    the cost of the overlap.
+
+    A mid-stream failure (source, transform, or dispatch) quiesces every
+    already-submitted batch before re-raising, so no in-flight device work
+    outlives the loop; ``inflight`` may be passed in by the policy so its
+    post-mortem emptiness is observable.
+    """
+    _validate_in_flight(max_in_flight)
+    if inflight is None:
+        inflight = collections.deque()
+    results: list = []
+    n_items = 0
+    n_measured = 0  # measured batches submitted
+    n_packets = 0
+    wait_s = 0.0
+    overlap_s = 0.0
+    max_depth = 0
+    start = None
+    last_retire_end = None
+
+    def retire_one():
+        nonlocal wait_s, overlap_s, last_retire_end
+        idx, submit_t, out = inflight.popleft()
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(out)
+        t1 = time.perf_counter()
+        # head-of-line overlap: time this batch was in flight before we
+        # blocked on it, clipped to start after the previous retirement so
+        # segments never double count
+        lo = submit_t if last_retire_end is None else max(submit_t,
+                                                          last_retire_end)
+        overlap_s += max(t0 - lo, 0.0)
+        wait_s += t1 - t0
+        last_retire_end = t1
+        if keep_results:
+            results.append(out)
+        if consume is not None:
+            consume(idx, out)
+
+    try:
+        for dev in items:  # the producer thread already device_put them
+            if n_items == warmup_items:
+                start = time.perf_counter()
+            if n_items < warmup_items:
+                # warmup (jit compile): retire immediately, deliver nowhere
+                jax.block_until_ready(process_fn(dev))
+            else:
+                while len(inflight) >= max_in_flight:
+                    retire_one()
+                # count packets before dispatch: donation may invalidate
+                # the buffer the moment it is submitted
+                n_packets += packets_in_item(dev, packets_per_item)
+                submit_t = time.perf_counter()
+                out = process_fn(dev)  # async dispatch: no block here
+                inflight.append((n_measured, submit_t, out))
+                max_depth = max(max_depth, len(inflight))
+                n_measured += 1
+                if sync_timing:
+                    retire_one()
+            n_items += 1
+        while inflight:
+            retire_one()
+    except BaseException:
+        # never leak in-flight device work past a failure: quiesce every
+        # submitted batch (results are discarded), then re-raise
+        while inflight:
+            _, _, out = inflight.popleft()
+            try:
+                jax.block_until_ready(out)
+            except Exception:
+                pass
+        raise
+
+    elapsed = (time.perf_counter() - start) if start is not None else 0.0
+    return EngineReport(
+        batches=n_measured,
+        packets=n_packets,
+        elapsed_s=elapsed,
+        produce_s=0.0 if produce_time is None else produce_time(),
+        process_s=wait_s,
+        results=results,
+        policy=policy_name,
+        overlap_s=overlap_s,
+        max_in_flight=max(max_depth, 1),
     )
 
 
@@ -136,15 +279,19 @@ class DoubleBufferedPolicy(ExecutionPolicy):
             warmup_items=0, consume=None,
             keep_results=True) -> EngineReport:
         pf = BoundedPrefetcher(
-            iter(source), depth=self.queue_depth, transform=jax.device_put
+            iter(source), depth=self.queue_depth,
+            transform=jax.device_put, untimed_items=warmup_items,
         )
-        return _run_loop(
-            pf, process_fn,
-            policy_name=self.name, device_put_inline=False,
-            packets_per_item=packets_per_item, warmup_items=warmup_items,
-            consume=consume, produce_time=lambda: pf.produce_s,
-            keep_results=keep_results,
-        )
+        try:
+            return _run_loop(
+                pf, process_fn,
+                policy_name=self.name, device_put_inline=False,
+                packets_per_item=packets_per_item, warmup_items=warmup_items,
+                consume=consume, produce_time=lambda: pf.produce_s,
+                keep_results=keep_results,
+            )
+        finally:
+            pf.close()  # a failed run must not leak the producer thread
 
 
 class TripleBufferedPolicy(DoubleBufferedPolicy):
@@ -158,6 +305,77 @@ class TripleBufferedPolicy(DoubleBufferedPolicy):
 
     def __init__(self, queue_depth: int = 3):
         super().__init__(queue_depth=queue_depth)
+
+
+class _AsyncRingRunMixin:
+    """The shared run() of the async policies: a bounded-queue producer
+    thread feeding ``_run_async_loop``.  Hosts must set ``queue_depth``,
+    ``max_in_flight``, ``sync_timing``, and ``_inflight``."""
+
+    def run(self, source, process_fn, *, packets_per_item=None,
+            warmup_items=0, consume=None,
+            keep_results=True) -> EngineReport:
+        pf = BoundedPrefetcher(
+            iter(source), depth=self.queue_depth,
+            transform=jax.device_put, untimed_items=warmup_items,
+        )
+        # a FRESH ring per run — concurrent runs on one policy instance
+        # must not share in-flight state; the attribute only points at the
+        # latest run's ring for post-mortem emptiness checks
+        ring = self._inflight = collections.deque()
+        try:
+            return _run_async_loop(
+                pf, process_fn,
+                policy_name=self.name, max_in_flight=self.max_in_flight,
+                packets_per_item=packets_per_item,
+                warmup_items=warmup_items, consume=consume,
+                produce_time=lambda: pf.produce_s,
+                keep_results=keep_results, sync_timing=self.sync_timing,
+                inflight=ring,
+            )
+        finally:
+            pf.close()  # a failed run must not leak the producer thread
+
+
+class AsyncPipelinedPolicy(_AsyncRingRunMixin, ExecutionPolicy):
+    """``double_buffered`` plus async dispatch: a ring of in-flight batches.
+
+    The producer thread still device_puts behind a bounded queue; on top of
+    that, submissions exploit jax async dispatch — ``process_fn(dev)``
+    returns before the device finishes, and the loop only calls
+    ``block_until_ready`` when ``max_in_flight`` batches are outstanding or
+    at end-of-stream drain.  Device->host readback of batch *i* therefore
+    overlaps the build of batches *i+1 .. i+K-1*, which is where the
+    paper's pipeline rate comes from.
+
+    The stage graph is jitted with ``donate_argnums`` (``donate=True``) so
+    each consumed input buffer is recycled into its batch's outputs and
+    device memory stays O(max_in_flight), not O(stream).
+
+    Scheduling only: per-batch stats/matrices are bit-identical to
+    ``blocking`` (the equivalence suite enforces this), and sinks consume
+    results in submission order.  ``sync_timing=True`` is the Fig.-2
+    escape hatch: it restores per-batch blocking measurement so
+    ``process_s`` means the same thing as under the synchronous policies.
+    """
+
+    name = "async_pipelined"
+
+    def __init__(self, max_in_flight: int = 3, queue_depth: int = 2,
+                 *, donate: bool = True, sync_timing: bool = False):
+        self.max_in_flight = _validate_in_flight(max_in_flight)
+        self.queue_depth = queue_depth
+        self.donate = donate
+        self.sync_timing = sync_timing
+        # exposed so overlap tests (and post-mortems) can assert no batch
+        # is ever left in flight
+        self._inflight: collections.deque = collections.deque()
+
+    def build_process_fn(self, graph: StageGraph | None, cfg,
+                         workload: str = "packets") -> Callable:
+        if graph is None:
+            raise ValueError(f"policy {self.name!r} needs a stage graph")
+        return graph.jitted(donate=self.donate)
 
 
 class ShardedPolicy(ExecutionPolicy):
@@ -210,14 +428,53 @@ class ShardedPolicy(ExecutionPolicy):
         )
 
 
+class ShardedPipelinedPolicy(_AsyncRingRunMixin, ShardedPolicy):
+    """``sharded`` composed with the bounded-queue producer + async ring.
+
+    The plain ``sharded`` policy device_puts each batch inline, serializing
+    host transfer against the mesh step; here a ``BoundedPrefetcher``
+    thread pays the transfer while the mesh builds the previous batch, and
+    up to ``max_in_flight`` shard_map steps are dispatched before the loop
+    blocks (the multi-batch sharded pipelining from the ROADMAP).  Output
+    contract is inherited unchanged: the exact global stats subset, so
+    stats are identical to ``sharded``/``blocking`` per batch.
+    """
+
+    name = "sharded_pipelined"
+
+    def __init__(self, mesh=None, *, route_capacity_factor: float = 2.0,
+                 queue_depth: int = 2, max_in_flight: int = 2,
+                 sync_timing: bool = False):
+        super().__init__(mesh, route_capacity_factor=route_capacity_factor)
+        self.max_in_flight = _validate_in_flight(max_in_flight)
+        self.queue_depth = queue_depth
+        self.sync_timing = sync_timing
+        self._inflight: collections.deque = collections.deque()
+
+
 _POLICIES = {
     "blocking": BlockingPolicy,
     "double_buffered": DoubleBufferedPolicy,
     "stream": DoubleBufferedPolicy,  # the paper's name for it
     "triple_buffered": TripleBufferedPolicy,
+    "async_pipelined": AsyncPipelinedPolicy,
     "sharded": ShardedPolicy,
     "distributed": ShardedPolicy,  # launcher-CLI name
+    "sharded_pipelined": ShardedPipelinedPolicy,
 }
+
+
+def canonical_policies() -> dict[str, type]:
+    """Registered policies minus aliases (an alias is a registry name its
+    class does not claim as ``cls.name``, e.g. ``stream``/``distributed``).
+
+    The policy-equivalence suite derives its test matrix from this, so a
+    policy registered in ``_POLICIES`` is subject to the stats/matrix
+    identity invariant *by construction* — there is no second list to
+    forget to update.
+    """
+    return {name: cls for name, cls in _POLICIES.items()
+            if cls.name == name}
 
 
 def make_policy(spec) -> ExecutionPolicy:

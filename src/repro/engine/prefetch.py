@@ -10,6 +10,13 @@ behind, the producer blocks instead of buffering unboundedly.
 
 Exceptions raised by the source or the transform are re-raised in the
 consumer thread, after all successfully produced items are drained.
+
+Lifecycle: a consumer that stops early (breaks out of its loop, or a
+pipeline that dies mid-stream) calls ``close()`` — the worker is signalled
+to stop, queued items are dropped, and the thread is joined, so no producer
+thread outlives its pipeline.  ``BoundedPrefetcher`` is also a context
+manager (``__exit__`` closes); closing an exhausted or already-closed
+prefetcher is a no-op.
 """
 
 from __future__ import annotations
@@ -21,6 +28,11 @@ from typing import Callable, Iterable, Iterator
 
 _STOP = object()
 
+# How often a blocked worker re-checks the close signal.  Wakeups on a full
+# queue are condition-driven (put returns as soon as space frees); the
+# timeout only bounds how long a cancelled worker lingers.
+_POLL_S = 0.05
+
 
 class BoundedPrefetcher:
     """Background-thread prefetch of an iterable, depth-bounded.
@@ -31,34 +43,88 @@ class BoundedPrefetcher:
     """
 
     def __init__(self, it: Iterable, depth: int = 2,
-                 transform: Callable | None = None):
+                 transform: Callable | None = None,
+                 untimed_items: int = 0):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._err: BaseException | None = None
+        self._closed = threading.Event()
         self.produce_s = 0.0
+
+        def put_until_closed(item) -> bool:
+            while not self._closed.is_set():
+                try:
+                    self._q.put(item, timeout=_POLL_S)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def worker():
             try:
-                for item in it:
+                for i, item in enumerate(it):
+                    if self._closed.is_set():
+                        return
                     if transform is not None:
                         t0 = time.perf_counter()
                         item = transform(item)
-                        self.produce_s += time.perf_counter() - t0
-                    self._q.put(item)
+                        if i >= untimed_items:
+                            # warmup items are excluded from produce_s the
+                            # same way the consumer excludes them from
+                            # elapsed/process accounting
+                            self.produce_s += time.perf_counter() - t0
+                    if not put_until_closed(item):
+                        return
             except BaseException as e:  # surface in consumer
                 self._err = e
             finally:
-                self._q.put(_STOP)
+                put_until_closed(_STOP)
 
         self._thread = threading.Thread(target=worker, daemon=True)
         self._thread.start()
+
+    @property
+    def closed(self) -> bool:
+        """True once closed or exhausted; iteration yields nothing more."""
+        return self._closed.is_set()
+
+    def close(self) -> None:
+        """Cancel the prefetch: signal the worker, drop queued items, and
+        join the thread.  Idempotent; safe after normal exhaustion."""
+        already = self._closed.is_set()
+        self._closed.set()
+        if not already:
+            # unblock a worker stuck on a full queue
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "BoundedPrefetcher":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        item = self._q.get()
+        # timed get + closed recheck: close() may be called from another
+        # thread (a watchdog) while the consumer is parked on an empty
+        # queue, in which case no _STOP sentinel will ever arrive
+        while True:
+            if self._closed.is_set():
+                raise StopIteration
+            try:
+                item = self._q.get(timeout=_POLL_S)
+                break
+            except queue.Empty:
+                continue
         if item is _STOP:
             self._thread.join()
+            self._closed.set()  # exhausted: later close() is a no-op
             if self._err is not None:
                 raise self._err
             raise StopIteration

@@ -19,6 +19,7 @@ combination.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Sequence
 
 import jax
@@ -211,6 +212,37 @@ class StageGraph:
                 f"stages {[s.name for s in self.stages]}"
             )
         self._jitted = jax.jit(self._forward)
+        self._jitted_donated = None
+
+    def jitted(self, donate: bool = False) -> Callable:
+        """The compiled step function; ``donate=True`` returns a variant
+        compiled with ``donate_argnums=0``.
+
+        Donation lets XLA recycle the input batch buffer into the step's
+        outputs, which is what keeps device memory O(in-flight window)
+        under the async policies (many batches are submitted before the
+        first is retired).  Donation is *safe* for every registered stage
+        graph because stages are pure functions of the context dict — the
+        caller must simply not reuse the batch array after the call, which
+        the engine's loops never do.  When no output can alias the input
+        (e.g. a stats-only graph), XLA falls back to a copy and jax warns;
+        the semantics are unchanged, so that warning is suppressed here.
+        """
+        if not donate:
+            return self._jitted
+        if self._jitted_donated is None:
+            jfn = jax.jit(self._forward, donate_argnums=0)
+
+            def donated_step(batch):
+                with warnings.catch_warnings():
+                    warnings.filterwarnings(
+                        "ignore",
+                        message="Some donated buffers were not usable",
+                    )
+                    return jfn(batch)
+
+            self._jitted_donated = donated_step
+        return self._jitted_donated
 
     @staticmethod
     def _resolve(name: str) -> Stage:

@@ -41,6 +41,16 @@ class EngineReport:
     half: NIC DMA / host->device put); ``process_s`` is device build+merge+
     analytics time.  In ``double_buffered`` mode the two overlap, so their
     sum can exceed ``elapsed_s`` — that surplus *is* the overlap win.
+
+    Async-dispatch policies (``async_pipelined``, ``sharded_pipelined``)
+    change the ``process_s`` semantics: submissions do not block, so
+    ``process_s`` is only the *exposed* device wait (wall-clock spent in
+    ``block_until_ready``, including the end-of-stream drain), while
+    ``overlap_s`` is head-of-line in-flight time hidden behind host work.
+    By construction ``process_s + overlap_s <= elapsed_s``; their sum
+    approximates the synchronous policies' ``process_s``.  ``max_in_flight``
+    is the deepest ring of concurrently submitted batches observed (1 for
+    the synchronous policies).  See DESIGN.md "Async dispatch & donation".
     """
 
     batches: int = 0
@@ -51,17 +61,22 @@ class EngineReport:
     results: list = dataclasses.field(default_factory=list)
     policy: str = ""
     merge_overflow: int = 0
+    overlap_s: float = 0.0
+    max_in_flight: int = 1
 
     @property
     def packets_per_second(self) -> float:
         return self.packets / self.elapsed_s if self.elapsed_s > 0 else 0.0
 
     def summary(self) -> str:
-        """One-line report in the Fig.-2 style."""
+        """One-line report in the Fig.-2 style.  Depth and overlap always
+        print — an async run at depth 1 still has exposed-wait ``process_s``
+        semantics, and the line must carry the cue to read it that way."""
         return (
             f"[{self.policy or 'pipeline'}] {self.packets:,} packets, "
             f"{self.elapsed_s:.2f}s -> {self.packets_per_second:,.0f} pkt/s "
             f"(produce {self.produce_s:.2f}s / process {self.process_s:.2f}s, "
+            f"overlap {self.overlap_s:.2f}s @ depth {self.max_in_flight}, "
             f"overflow {self.merge_overflow})"
         )
 

@@ -15,6 +15,10 @@ modes, mapping 1:1 onto engine policies:
   space — the 2D decomposition from DESIGN.md). Exact distinct-source /
   distinct-link counts fall out because every (row) lives on exactly one
   owner.
+* ``--mode async_pipelined`` / ``--mode sharded_pipelined`` — the async
+  dispatch variants (DESIGN.md "Async dispatch & donation"): a ring of
+  in-flight batches overlaps device->host readback with the next build;
+  stats stay bit-identical to every other mode.
 
 Workloads and sinks are independent axes:
 
@@ -34,6 +38,7 @@ from repro.core.window import WindowConfig
 from repro.engine import (
     AnomalySink,
     PcapLiteWriterSink,
+    ShardedPipelinedPolicy,
     ShardedPolicy,
     StatsAccumulator,
     TopKHeavyHitters,
@@ -109,14 +114,17 @@ def run_paper_mode(mode: str, *, window_log2: int = 17,
 def run_distributed(mesh, *, window_log2: int = 17,
                     windows_per_batch: int | None = None,
                     n_batches: int = 1, anonymization: str = "feistel",
-                    kind: str = "uniform"):
+                    kind: str = "uniform", pipelined: bool = False):
     """The sharded policy on ``mesh``; windows_per_batch defaults to
-    2 windows per device."""
+    2 windows per device.  ``pipelined=True`` uses ``sharded_pipelined``
+    (bounded-queue transfer + async-dispatch ring) instead of the inline
+    transfer."""
     wpb = windows_per_batch or mesh.size * 2
     cfg = WindowConfig(window_log2=window_log2, windows_per_batch=wpb,
                        anonymization=anonymization)
-    engine = TrafficEngine(cfg, policy=ShardedPolicy(mesh),
-                           sinks=[StatsAccumulator()])
+    policy = (ShardedPipelinedPolicy(mesh) if pipelined
+              else ShardedPolicy(mesh))
+    engine = TrafficEngine(cfg, policy=policy, sinks=[StatsAccumulator()])
     report = engine.run(kind, n_batches=n_batches, seed=0)
     return report, engine.finalize()["stats"]
 
@@ -183,7 +191,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="blocking",
                     choices=["blocking", "stream", "double_buffered",
-                             "triple_buffered", "distributed", "sharded"])
+                             "triple_buffered", "async_pipelined",
+                             "distributed", "sharded",
+                             "sharded_pipelined"])
     ap.add_argument("--window-log2", type=int, default=None)
     ap.add_argument("--windows-per-batch", type=int, default=None)
     ap.add_argument("--batches", type=int, default=None)
@@ -226,7 +236,7 @@ def main(argv=None):
         _print_sink_results(results)
         return rep
 
-    if args.mode in ("distributed", "sharded"):
+    if args.mode in ("distributed", "sharded", "sharded_pipelined"):
         from repro.launch.mesh import make_local_mesh
 
         mesh = make_local_mesh()
@@ -234,6 +244,7 @@ def main(argv=None):
             mesh, window_log2=args.window_log2 or 17,
             n_batches=args.batches or 8,
             anonymization=args.anonymization, kind=args.traffic,
+            pipelined=args.mode == "sharded_pipelined",
         )
         print(f"[ingest/distributed] {rep.summary()} (incl. compile)")
         print({k: int(v) for k, v in totals.items()

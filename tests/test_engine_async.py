@@ -1,0 +1,239 @@
+"""Overlap-correctness for the async-dispatch policies: the properties that
+make ``async_pipelined``/``sharded_pipelined`` *safe*, beyond the
+stats-identity the equivalence suite already pins.
+
+* in-flight depth never exceeds ``max_in_flight`` (host-side outstanding
+  counter + the report's ``max_in_flight`` gauge);
+* sinks observe results in submission order (planted per-batch tags);
+* donated input buffers are unobservable after dispatch, yet every batch's
+  outputs still round-trip its planted values (donation recycles buffers,
+  never corrupts results);
+* a mid-stream source failure drains every submitted batch — no leaked
+  in-flight work;
+* ``sync_timing`` restores the Fig.-2 per-batch measurement semantics.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.window import WindowConfig
+from repro.engine import (
+    AsyncPipelinedPolicy,
+    IterableSource,
+    MatrixRetention,
+    ShardedPipelinedPolicy,
+    StageGraph,
+    StatsAccumulator,
+    TrafficEngine,
+)
+from repro.core.hypersparse import SENTINEL
+
+
+def _cfg(**kw):
+    kw.setdefault("window_log2", 4)
+    kw.setdefault("windows_per_batch", 2)
+    kw.setdefault("cap_max_log2", 8)
+    kw.setdefault("anonymization", "none")
+    return WindowConfig(**kw)
+
+
+def _batches(n, shape=(2, 16, 2), tag_fn=None):
+    out = []
+    for i in range(n):
+        b = np.zeros(shape, np.uint32)
+        b[:] = tag_fn(i) if tag_fn else i
+        out.append(b)
+    return out
+
+
+# -- in-flight depth bound --------------------------------------------------
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_in_flight_depth_never_exceeds_k(k):
+    n = 8
+    counts = {"submitted": 0, "retired": 0}
+    step = jax.jit(lambda x: x.astype(jnp.uint32).sum())
+
+    def process(x):
+        # called at submission: everything submitted-but-not-retired is in
+        # flight; with this one added, the ring must still be within k
+        counts["submitted"] += 1
+        assert counts["submitted"] - counts["retired"] <= k
+        return step(x)
+
+    def consume(idx, out):
+        counts["retired"] += 1
+
+    policy = AsyncPipelinedPolicy(max_in_flight=k, donate=False)
+    rep = policy.run(
+        IterableSource(it=_batches(n)), process,
+        packets_per_item=32, consume=consume,
+    )
+    assert counts["submitted"] == counts["retired"] == n
+    assert 1 <= rep.max_in_flight <= k
+    assert len(policy._inflight) == 0
+
+
+# -- submission-order delivery ----------------------------------------------
+def test_consume_observes_results_in_submission_order():
+    n = 9
+    step = jax.jit(lambda x: x[0, 0, 0])  # the planted per-batch tag
+    seen = []
+
+    policy = AsyncPipelinedPolicy(max_in_flight=3, donate=False)
+    rep = policy.run(
+        IterableSource(it=_batches(n)), step, packets_per_item=32,
+        consume=lambda idx, out: seen.append((idx, int(out))),
+    )
+    # every batch's result arrived, in submission order, tagged correctly
+    assert seen == [(i, i) for i in range(n)]
+    # report.results kept the same order
+    assert [int(r) for r in rep.results] == list(range(n))
+
+
+def test_consume_order_with_warmup_and_engine():
+    """Through the engine: warmup batches are invisible to sinks; measured
+    batches arrive in order under the async policy."""
+    cfg = _cfg()
+    eng = TrafficEngine(cfg, policy=AsyncPipelinedPolicy(max_in_flight=3),
+                        sinks=[StatsAccumulator()])
+    rep = eng.run("uniform", n_batches=5, seed=3, warmup_items=2)
+    trace = eng.finalize()["stats"]["per_batch"]
+    assert rep.batches == 3
+    assert len(trace) == 3
+
+
+# -- donation ---------------------------------------------------------------
+def test_donated_input_unobservable_but_results_round_trip():
+    """The stage graph's donated jit recycles the input buffer (it becomes
+    the anonymized-packets output), so the submitted array is deleted —
+    and the outputs still carry exactly the planted per-batch values."""
+    cfg = _cfg()
+    # "packets" output aliases the [W, n, 2] uint32 input, so donation is
+    # usable (not just a jax-level mark)
+    graph = StageGraph(cfg, outputs=("stats", "merge_overflow", "packets"))
+    step = graph.jitted(donate=True)
+
+    batch = np.full((2, 16, 2), 7, np.uint32)
+    dev = jax.device_put(batch)
+    out = jax.block_until_ready(step(dev))
+    assert dev.is_deleted()  # not observable after donation
+    with pytest.raises(RuntimeError):
+        np.asarray(dev)
+    # anonymization "none": packets pass through bit-identically
+    np.testing.assert_array_equal(np.asarray(out["packets"]), batch)
+    assert int(out["stats"]["valid_packets"]) == 32
+
+    # the undonated path must NOT delete its input
+    dev2 = jax.device_put(batch)
+    jax.block_until_ready(graph(dev2))
+    assert not dev2.is_deleted()
+
+
+def test_async_engine_planted_values_round_trip_per_batch():
+    """Each batch is one planted link (i, i+1); with donation + a 3-deep
+    ring, every retained matrix must still hold exactly its own batch's
+    link — donated buffers are recycled, never cross-contaminated."""
+    cfg = _cfg()
+    n = 6
+    per_batch = 2 * 16  # all packets in batch i hit link (i, i+1)
+    batches = []
+    for i in range(n):
+        b = np.zeros((2, 16, 2), np.uint32)
+        b[..., 0] = i
+        b[..., 1] = i + 1
+        batches.append(b)
+
+    eng = TrafficEngine(
+        cfg, policy=AsyncPipelinedPolicy(max_in_flight=3),
+        sinks=[MatrixRetention(max_keep=n)],
+    )
+    eng.run(IterableSource(it=batches))
+    kept = eng.finalize()["matrices"]
+    assert len(kept) == n
+    for i, m in enumerate(kept):
+        rows = np.asarray(m.rows)
+        live = rows != SENTINEL
+        assert int(m.nnz) == 1
+        assert rows[live][0] == i
+        assert np.asarray(m.cols)[live][0] == i + 1
+        assert np.asarray(m.vals)[live][0] == per_batch
+
+
+# -- failure drain ----------------------------------------------------------
+class _NicDied(Exception):
+    pass
+
+
+def test_mid_stream_source_exception_leaves_no_in_flight_work():
+    def dying_source():
+        yield from _batches(3)
+        raise _NicDied("receive queue reset")
+
+    policy = AsyncPipelinedPolicy(max_in_flight=4, donate=False)
+    step = jax.jit(lambda x: x.astype(jnp.uint32).sum())
+    with pytest.raises(_NicDied, match="receive queue reset"):
+        policy.run(IterableSource(it=dying_source()), step,
+                   packets_per_item=32)
+    assert len(policy._inflight) == 0  # everything submitted was drained
+
+
+def test_mid_stream_exception_through_engine():
+    cfg = _cfg()
+    policy = AsyncPipelinedPolicy(max_in_flight=4)
+
+    def dying_source():
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            yield rng.integers(0, 1 << 16, (2, 16, 2), dtype=np.uint32)
+        raise _NicDied("link flap")
+
+    eng = TrafficEngine(cfg, policy=policy, sinks=[StatsAccumulator()])
+    with pytest.raises(_NicDied):
+        eng.run(IterableSource(it=dying_source()))
+    assert len(policy._inflight) == 0
+
+
+# -- sharded_pipelined ------------------------------------------------------
+def test_sharded_pipelined_depth_and_order():
+    cfg = _cfg()
+    policy = ShardedPipelinedPolicy(max_in_flight=2, queue_depth=2)
+    seen = []
+    eng = TrafficEngine(cfg, policy=policy, sinks=[StatsAccumulator()])
+    orig_dispatch = eng._dispatch
+    eng._dispatch = lambda idx, out: (seen.append(idx),
+                                      orig_dispatch(idx, out))
+    rep = eng.run("uniform", n_batches=4, seed=1)
+    assert seen == [0, 1, 2, 3]
+    assert 1 <= rep.max_in_flight <= 2
+    assert len(policy._inflight) == 0
+    assert rep.process_s + rep.overlap_s <= rep.elapsed_s + 0.05
+
+
+# -- timing semantics -------------------------------------------------------
+def test_sync_timing_escape_hatch():
+    """sync_timing retires each batch at submission: depth collapses to 1
+    and stats stay identical — the Fig.-2 comparable measurement."""
+    cfg = _cfg()
+    traces = {}
+    for name, policy in (
+        ("async", AsyncPipelinedPolicy(max_in_flight=3)),
+        ("sync", AsyncPipelinedPolicy(max_in_flight=3, sync_timing=True)),
+    ):
+        eng = TrafficEngine(cfg, policy=policy, sinks=[StatsAccumulator()])
+        rep = eng.run("uniform", n_batches=3, seed=9)
+        traces[name] = eng.finalize()["stats"]["per_batch"]
+        if name == "sync":
+            assert rep.max_in_flight == 1
+    for a, b in zip(traces["async"], traces["sync"]):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_max_in_flight_must_be_positive():
+    with pytest.raises(ValueError, match="max_in_flight"):
+        AsyncPipelinedPolicy(max_in_flight=0)
+    with pytest.raises(ValueError, match="max_in_flight"):
+        ShardedPipelinedPolicy(max_in_flight=0)

@@ -1,12 +1,20 @@
 """Property-based engine equivalence: the core invariant every execution
-policy must hold — for the same source, ``blocking``, ``double_buffered``
-(any queue depth), and ``sharded`` produce identical analytics; policies
-are pure scheduling.
+policy must hold — for the same source, every policy produces identical
+analytics; policies are pure scheduling.
+
+The policy matrix is derived from the registry itself
+(``policies.canonical_policies()``, i.e. ``_POLICIES`` minus aliases), so a
+policy registered without passing the stats/matrix-identity invariant
+fails here by construction — there is no hand-maintained list for a new
+policy to dodge.  Sharded-family policies (``issubclass(..,
+ShardedPolicy)``) are compared on the exact stats subset their fused step
+emits; everything else is compared on ALL stats keys and on retained
+matrices, bit for bit.
 
 Hypothesis drives (workload, source kind, seed, window_size,
-windows_per_batch, queue_depth); a deterministic grid repeats the key
-cases so the invariant stays exercised even where hypothesis is absent
-(the conftest stub auto-skips ``@given`` tests).  Engines are cached per
+windows_per_batch, depth); a deterministic grid repeats the key cases so
+the invariant stays exercised even where hypothesis is absent (the
+conftest stub auto-skips ``@given`` tests).  Engines are cached per
 geometry so examples reuse jitted stage graphs instead of recompiling.
 """
 
@@ -16,14 +24,27 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.window import WindowConfig
 from repro.engine import (
+    AsyncPipelinedPolicy,
     DoubleBufferedPolicy,
     MatrixRetention,
+    ShardedPolicy,
     StatsAccumulator,
     TrafficEngine,
+    canonical_policies,
 )
+from repro.engine import policies as policies_mod
 
-# Stats the sharded policy emits (exact under row ownership); blocking /
-# buffered traces are compared on ALL keys, sharded on these.
+# -- the registry-derived policy matrix -------------------------------------
+POLICY_NAMES = sorted(canonical_policies())
+WORKLOADS = ("packets", "flow")
+
+
+def _is_sharded(policy_name: str) -> bool:
+    return issubclass(canonical_policies()[policy_name], ShardedPolicy)
+
+
+# Stats the sharded-family policies emit (exact under row ownership);
+# stage-graph policies are compared on ALL keys, sharded ones on these.
 SHARDED_KEYS = ("valid_packets", "unique_links", "unique_sources",
                 "max_packets_per_link", "max_source_packets",
                 "max_source_fanout", "src_packet_hist", "src_fanout_hist")
@@ -45,9 +66,12 @@ def _run(policy_key, cfg, workload, kind, seed, *, depth=None,
     """Run a cached engine; returns (report, per-batch stats, matrices)."""
     cache_key = (policy_key, depth, matrices, workload, cfg)
     if cache_key not in _ENGINES:
-        policy = (DoubleBufferedPolicy(queue_depth=depth)
-                  if policy_key == "double_buffered" and depth
-                  else policy_key)
+        if policy_key == "double_buffered" and depth:
+            policy = DoubleBufferedPolicy(queue_depth=depth)
+        elif policy_key == "async_pipelined" and depth:
+            policy = AsyncPipelinedPolicy(max_in_flight=depth)
+        else:
+            policy = policy_key
         sinks = [StatsAccumulator()]
         if matrices:
             sinks.append(MatrixRetention(max_keep=8))
@@ -63,39 +87,108 @@ def _run(policy_key, cfg, workload, kind, seed, *, depth=None,
     return rep, res["stats"]["per_batch"], res.get("matrices")
 
 
-def _assert_policy_equivalence(workload, kind, seed, window_log2,
-                               windows_per_batch, depth):
-    cfg = _cfg(window_log2, windows_per_batch)
+def _assert_matches_blocking(policy, cfg, workload, kind, seed, *,
+                             depth=None):
+    """The invariant, one policy vs the blocking reference."""
+    sharded = _is_sharded(policy)
     rb, tb, mb = _run("blocking", cfg, workload, kind, seed, matrices=True)
-    rd, td, md = _run("double_buffered", cfg, workload, kind, seed,
-                      depth=depth, matrices=True)
-    rs, ts, _ = _run("sharded", cfg, workload, kind, seed)
+    rp, tp, mp = _run(policy, cfg, workload, kind, seed, depth=depth,
+                      matrices=not sharded)
 
     # identical EngineReport accounting (timings legitimately differ)
-    assert rb.batches == rd.batches == rs.batches == 2
-    assert rb.packets == rd.packets == rs.packets
-    assert rb.merge_overflow == rd.merge_overflow
+    assert rb.batches == rp.batches == 2
+    assert rb.packets == rp.packets
+    if not sharded:
+        assert rb.merge_overflow == rp.merge_overflow
 
-    # blocking vs double_buffered: every stat, bit-identical
-    for a, b in zip(tb, td):
+    if sharded:
+        # exact on the emitted global-stats subset
+        for a, b in zip(tb, tp):
+            for k in SHARDED_KEYS:
+                np.testing.assert_array_equal(
+                    np.asarray(a[k]), np.asarray(b[k]),
+                    err_msg=f"{policy}:{k}",
+                )
+        return
+    # stage-graph policy: every stat, bit-identical ...
+    for a, b in zip(tb, tp):
         assert a.keys() == b.keys()
         for k in a:
-            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
-
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"{policy}:{k}")
     # ... and identical retained matrices
-    for a, b in zip(mb, md):
+    for a, b in zip(mb, mp):
         np.testing.assert_array_equal(np.asarray(a.rows), np.asarray(b.rows))
         np.testing.assert_array_equal(np.asarray(a.cols), np.asarray(b.cols))
         np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
         assert int(a.nnz) == int(b.nnz)
 
-    # sharded: exact on its emitted stats subset
-    for a, b in zip(tb, ts):
-        for k in SHARDED_KEYS:
-            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
-                                          err_msg=k)
+
+def _assert_policy_equivalence(workload, kind, seed, window_log2,
+                               windows_per_batch, depth):
+    cfg = _cfg(window_log2, windows_per_batch)
+    for policy in POLICY_NAMES:
+        if policy == "blocking":
+            continue
+        _assert_matches_blocking(
+            policy, cfg, workload, kind, seed,
+            depth=depth if policy in ("double_buffered",
+                                      "async_pipelined") else None,
+        )
 
 
+# -- registry integrity: the new policies cannot dodge this file ------------
+def test_registry_contains_the_async_policies():
+    assert "async_pipelined" in POLICY_NAMES
+    assert "sharded_pipelined" in POLICY_NAMES
+    assert _is_sharded("sharded_pipelined")
+    # aliases resolve to canonical classes and stay out of the matrix
+    assert "stream" not in POLICY_NAMES
+    assert "distributed" not in POLICY_NAMES
+    assert (policies_mod._POLICIES["stream"]
+            is canonical_policies()["double_buffered"])
+
+
+# -- the deterministic registry-driven matrix: every policy x workload ------
+@pytest.mark.parametrize("workload", WORKLOADS)
+@pytest.mark.parametrize("policy",
+                         [p for p in POLICY_NAMES if p != "blocking"])
+def test_registry_policy_matches_blocking(policy, workload):
+    cfg = _cfg(4, 2)
+    _assert_matches_blocking(policy, cfg, workload, "uniform", 7)
+    _assert_matches_blocking(policy, cfg, workload, "zipf", 13)
+
+
+# -- telemetry: one packet/warmup accounting rule across the registry -------
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_accounting_identical_across_registry(workload):
+    """packets_in_item + warmup accounting are the same single rule for
+    every registered policy (DESIGN.md), and the async overlap telemetry
+    sums sanely: process_s + overlap_s <= elapsed_s by construction."""
+    cfg = _cfg(4, 2)
+    reports = {}
+    for policy in POLICY_NAMES:
+        eng = TrafficEngine(cfg, workload=workload, policy=policy,
+                            sinks=[StatsAccumulator()])
+        rep = eng.run("uniform", n_batches=3, seed=5, warmup_items=1)
+        trace = eng.finalize()["stats"]["per_batch"]
+        assert len(trace) == rep.batches  # warmup excluded from sinks too
+        reports[policy] = rep
+
+    expected_packets = 2 * 2 * 16  # 2 measured batches x [2, 16, 2]
+    for policy, rep in reports.items():
+        assert rep.batches == 2, policy
+        assert rep.packets == expected_packets, policy
+        assert rep.overlap_s >= 0.0, policy
+        assert rep.max_in_flight >= 1, policy
+        assert (rep.process_s + rep.overlap_s
+                <= rep.elapsed_s + 0.05), policy
+        if not ("pipelined" in policy):
+            assert rep.overlap_s == 0.0, policy
+            assert rep.max_in_flight == 1, policy
+
+
+# -- hypothesis: the full invariant over random inputs ----------------------
 workloads = st.sampled_from(["packets", "flow"])
 kinds = st.sampled_from(["uniform", "zipf"])
 seeds = st.integers(0, 2 ** 31 - 1)
@@ -122,18 +215,21 @@ def test_policies_equivalent_flow_source(kind, seed, window_log2, wpb,
 @given(workloads, seeds, depths)
 @settings(max_examples=10, deadline=None)
 def test_queue_depth_never_changes_stats(workload, seed, depth):
-    """Deeper queues change scheduling only: double_buffered at any depth
-    matches blocking bit-for-bit."""
+    """Deeper queues/rings change scheduling only: double_buffered and
+    async_pipelined at any depth match blocking bit-for-bit."""
     cfg = _cfg(4, 2)
     _, tb, mb = _run("blocking", cfg, workload, "uniform", seed,
                      matrices=True)
-    _, td, md = _run("double_buffered", cfg, workload, "uniform", seed,
-                     depth=depth, matrices=True)
-    for a, b in zip(tb, td):
-        for k in a:
-            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
-    for a, b in zip(mb, md):
-        np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
+    for policy in ("double_buffered", "async_pipelined"):
+        _, td, md = _run(policy, cfg, workload, "uniform", seed,
+                         depth=depth, matrices=True)
+        for a, b in zip(tb, td):
+            for k in a:
+                np.testing.assert_array_equal(a[k], b[k],
+                                              err_msg=f"{policy}:{k}")
+        for a, b in zip(mb, md):
+            np.testing.assert_array_equal(np.asarray(a.vals),
+                                          np.asarray(b.vals))
 
 
 # -- deterministic floor: the same invariant without hypothesis -------------
