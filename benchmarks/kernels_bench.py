@@ -20,7 +20,6 @@ def _time(fn, *args, iters=3):
 
 def run():
     from repro.kernels.segsum import ops as segsum_ops
-    from repro.kernels.segsum import ref as segsum_ref
     from repro.kernels.spmm_coo import ops as spmm_ops
     from repro.kernels.spmm_coo.ref import spmm_coo_ref
 

@@ -7,7 +7,6 @@ Run after the dry-run sweep, perf iterations, and benchmarks.run.
 from __future__ import annotations
 
 import json
-import re
 from pathlib import Path
 
 ROOT = Path(__file__).parent.parent

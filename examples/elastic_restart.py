@@ -11,11 +11,8 @@ job restarts on 496 chips.
 
 import tempfile
 
-import jax
-import numpy as np
-
 from repro.checkpoint import CheckpointManager
-from repro.distributed.fault import elastic_transition, plan_mesh
+from repro.distributed.fault import elastic_transition
 from repro.launch.train import main as train_main
 
 ckpt_dir = tempfile.mkdtemp(prefix="elastic_demo_")

@@ -6,7 +6,6 @@ GraphBLAS segment substrate (message passing == SpMM over the adjacency).
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import gat_cora, gcn_cora
 from repro.configs.base import make_gnn_train_step

@@ -1,0 +1,42 @@
+"""Repo-aware static analysis: machine-checked engine invariants.
+
+The engine leans on contracts no generic linter understands — donated
+buffers are unobservable after async dispatch, uint32 packed-key arithmetic
+must never silently promote, every ``shard_map``/mesh construction must go
+through the compat helpers, and prefetcher/ring worker threads may only
+touch shared attributes under a lock.  ``repro.analysis`` encodes each
+contract as an AST rule over the repo's own source and fails CI on any
+non-baselined finding:
+
+    python -m repro.analysis src tests benchmarks
+
+See DESIGN.md "Static analysis & invariants" for the rule catalogue, the
+suppression syntax (``# repro-lint: disable=<rule>``), and the baseline
+workflow.
+"""
+
+from repro.analysis.framework import (
+    Finding,
+    Rule,
+    RULE_REGISTRY,
+    analyze_file,
+    analyze_source,
+    iter_python_files,
+    register_rule,
+    scan_paths,
+)
+from repro.analysis.baseline import load_baseline, write_baseline
+from repro.analysis import rules as _rules  # noqa: F401  (registers rules)
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "RULE_REGISTRY",
+    "analyze_file",
+    "analyze_source",
+    "iter_python_files",
+    "load_baseline",
+    "register_rule",
+    "scan_paths",
+    "write_baseline",
+]

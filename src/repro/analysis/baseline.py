@@ -1,0 +1,74 @@
+"""Checked-in baseline of grandfathered findings.
+
+The baseline is the escape hatch for findings that are known, justified,
+and tracked: a JSON file mapping each entry to the finding key
+``(path, line, rule)`` plus a mandatory ``justification``.  The CLI only
+fails on findings *not* in the baseline, and reports stale entries (in the
+baseline but no longer found) so the file can never rot — a fresh scan and
+the checked-in file must agree exactly, which ``tests/test_analysis.py``
+pins.
+
+The repo's own baseline lives at ``analysis-baseline.json`` in the repo
+root and is empty: every violation the pass surfaced was fixed, not
+grandfathered.  The machinery stays because the next rule added will need
+a migration path.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Iterable
+
+from repro.analysis.framework import Finding
+
+BASELINE_NAME = "analysis-baseline.json"
+
+
+def load_baseline(path: str | Path) -> dict[tuple[str, int, str], str]:
+    """-> {(path, line, rule): justification}; missing file = empty."""
+    path = Path(path)
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text(encoding="utf-8"))
+    entries = {}
+    for e in data.get("findings", []):
+        just = e.get("justification", "")
+        if not just:
+            raise ValueError(
+                f"baseline entry {e.get('path')}:{e.get('line')} "
+                f"[{e.get('rule')}] has no justification — baselined "
+                f"findings must say why they are allowed to stand"
+            )
+        entries[(e["path"], int(e["line"]), e["rule"])] = just
+    return entries
+
+
+def write_baseline(path: str | Path, findings: Iterable[Finding],
+                   justification: str = "grandfathered by --write-baseline"
+                   ) -> None:
+    path = Path(path)
+    payload = {
+        "comment": (
+            "Grandfathered repro.analysis findings. Every entry needs a "
+            "justification; prefer fixing over baselining. The suite "
+            "asserts this file matches a fresh scan (no stale entries)."
+        ),
+        "findings": [
+            {"path": f.path, "line": f.line, "rule": f.rule,
+             "message": f.message, "justification": justification}
+            for f in sorted(findings)
+        ],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+
+
+def split_by_baseline(findings: Iterable[Finding],
+                      baseline: dict[tuple[str, int, str], str]):
+    """-> (new_findings, baselined_findings, stale_keys)."""
+    findings = list(findings)
+    keys = {f.key() for f in findings}
+    new = [f for f in findings if f.key() not in baseline]
+    old = [f for f in findings if f.key() in baseline]
+    stale = sorted(k for k in baseline if k not in keys)
+    return new, old, stale

@@ -1,0 +1,94 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit status is the CI contract: 0 when every finding is baselined and no
+baseline entry is stale, 1 otherwise.  Stale entries fail too — the
+baseline must always match a fresh scan, so it can only shrink as findings
+are fixed, never rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import baseline as bl
+from repro.analysis.framework import RULE_REGISTRY, scan_paths
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-aware static analysis (engine-contract lints).",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to scan (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", default=".",
+                    help="repo root findings are reported relative to "
+                         "(default: cwd)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: "
+                         f"<root>/{bl.BASELINE_NAME})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report every finding")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather all current findings into the "
+                         "baseline and exit 0 (each entry still needs a "
+                         "real justification edited in before review)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings on stdout")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULE_REGISTRY):
+            rule = RULE_REGISTRY[rid]
+            where = ", ".join(rule.paths) if rule.paths else "all files"
+            print(f"{rid}  [{where}]")
+            print(f"    {rule.doc}")
+        return 0
+
+    root = Path(args.root).resolve()
+    paths = args.paths or list(DEFAULT_PATHS)
+    paths = [p for p in paths if (root / p).exists()
+             or Path(p).is_absolute()]
+    findings = scan_paths(paths, root)
+
+    baseline_path = Path(args.baseline) if args.baseline else (
+        root / bl.BASELINE_NAME)
+    if args.write_baseline:
+        bl.write_baseline(baseline_path, findings)
+        print(f"wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    baseline = {} if args.no_baseline else bl.load_baseline(baseline_path)
+    new, old, stale = bl.split_by_baseline(findings, baseline)
+
+    if args.as_json:
+        print(json.dumps({
+            "new": [f.__dict__ for f in new],
+            "baselined": [f.__dict__ for f in old],
+            "stale_baseline_entries": [list(k) for k in stale],
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        for k in stale:
+            print(f"{k[0]}:{k[1]}: [{k[2]}] STALE baseline entry — the "
+                  f"finding is gone; remove it from {baseline_path.name}")
+        print(
+            f"repro.analysis: {len(new)} new finding(s), "
+            f"{len(old)} baselined, {len(stale)} stale baseline "
+            f"entr{'y' if len(stale) == 1 else 'ies'} "
+            f"({len(RULE_REGISTRY)} rules)"
+        )
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

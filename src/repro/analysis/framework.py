@@ -1,0 +1,191 @@
+"""Rule registry, suppression comments, and the file/source analyzers.
+
+A Rule owns one machine-checked invariant: it gets the parsed AST plus the
+source text of a file and returns Findings.  Rules register themselves with
+``@register_rule`` so the CLI, the fixture tests, and the baseline check all
+see the same catalogue — there is no second list to forget to update.
+
+Suppression is per line and per rule: a trailing ``# repro-lint:
+disable=<rule>[,<rule>...]`` comment silences those rules on that line (or,
+on its own line, on the line below — for lines too long to carry a
+comment).  ``disable-file=<rule>`` anywhere in the first ten lines silences
+a rule for the whole file.  Suppressions are deliberate and visible in
+review, which is the point: violating an engine contract must leave a mark.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, Iterator
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable|disable-file)\s*=\s*"
+    r"([A-Za-z0-9_,\- ]+)"
+)
+_FILE_SCOPE_LINES = 10
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str  # repo-relative, '/'-separated
+    line: int  # 1-indexed
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def key(self) -> tuple[str, int, str]:
+        """Identity used for baseline matching (message text may evolve
+        without invalidating a grandfathered entry)."""
+        return (self.path, self.line, self.rule)
+
+
+class Rule:
+    """One invariant: subclass, set ``id``/``doc``, implement ``check``.
+
+    ``paths`` (optional tuple of repo-relative prefixes or exact paths)
+    restricts where the rule applies — e.g. dtype discipline only polices
+    the packed-key modules.  ``exempt_paths`` carves out the helper modules
+    a rule exists to protect (the compat shims themselves may touch the raw
+    jax API).
+    """
+
+    id: str = ""
+    doc: str = ""
+    paths: tuple[str, ...] = ()  # empty = everywhere
+    exempt_paths: tuple[str, ...] = ()
+
+    def applies_to(self, path: str) -> bool:
+        path = path.replace("\\", "/")
+        if any(_match(path, p) for p in self.exempt_paths):
+            return False
+        if not self.paths:
+            return True
+        return any(_match(path, p) for p in self.paths)
+
+    def check(self, tree: ast.AST, source: str, path: str) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, path: str, node_or_line, message: str) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(path=path, line=int(line), rule=self.id,
+                       message=message)
+
+
+def _match(path: str, pattern: str) -> bool:
+    """Prefix match on path components ('src/repro/core' matches the dir,
+    'src/repro/engine/stages.py' matches exactly that file)."""
+    return path == pattern or path.startswith(pattern.rstrip("/") + "/")
+
+
+RULE_REGISTRY: dict[str, Rule] = {}
+
+
+def register_rule(cls: type[Rule]) -> type[Rule]:
+    """Class decorator: instantiate and register a Rule by its id."""
+    if not cls.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if cls.id in RULE_REGISTRY:
+        raise ValueError(f"duplicate rule id {cls.id!r}")
+    RULE_REGISTRY[cls.id] = cls()
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+def parse_suppressions(source: str) -> tuple[dict[int, set[str]], set[str]]:
+    """-> ({line: {rule, ...}}, {file-wide rule, ...}).
+
+    A ``disable`` comment on a line with code suppresses that line; on a
+    line of its own it also suppresses the next line.
+    """
+    by_line: dict[int, set[str]] = {}
+    file_wide: set[str] = set()
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        kind = m.group(1)
+        rules = {r.strip() for r in m.group(2).split(",") if r.strip()}
+        if kind == "disable-file":
+            if lineno <= _FILE_SCOPE_LINES:
+                file_wide |= rules
+            continue
+        by_line.setdefault(lineno, set()).update(rules)
+        if text[: m.start()].strip() == "":  # comment-only line
+            by_line.setdefault(lineno + 1, set()).update(rules)
+    return by_line, file_wide
+
+
+def _suppressed(f: Finding, by_line: dict[int, set[str]],
+                file_wide: set[str]) -> bool:
+    if f.rule in file_wide or "all" in file_wide:
+        return True
+    rules = by_line.get(f.line, ())
+    return f.rule in rules or "all" in rules
+
+
+# ---------------------------------------------------------------------------
+# analyzers
+# ---------------------------------------------------------------------------
+def analyze_source(source: str, path: str = "<string>",
+                   rules: Iterable[Rule] | None = None,
+                   respect_suppressions: bool = True) -> list[Finding]:
+    """Run rules over one source string; ``path`` routes path-scoped rules
+    (pass the repo-relative path the snippet pretends to live at)."""
+    path = path.replace("\\", "/")
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(path=path, line=e.lineno or 1, rule="syntax-error",
+                        message=f"file does not parse: {e.msg}")]
+    if rules is None:
+        rules = RULE_REGISTRY.values()
+    findings: list[Finding] = []
+    for rule in rules:
+        if rule.applies_to(path):
+            findings.extend(rule.check(tree, source, path))
+    if respect_suppressions:
+        by_line, file_wide = parse_suppressions(source)
+        findings = [f for f in findings
+                    if not _suppressed(f, by_line, file_wide)]
+    return sorted(findings)
+
+
+def analyze_file(file_path: Path, root: Path,
+                 rules: Iterable[Rule] | None = None) -> list[Finding]:
+    rel = file_path.resolve().relative_to(root.resolve()).as_posix()
+    return analyze_source(file_path.read_text(encoding="utf-8"), rel, rules)
+
+
+_SKIP_DIRS = {".git", "__pycache__", ".ruff_cache", ".pytest_cache",
+              "node_modules", ".hypothesis"}
+
+
+def iter_python_files(paths: Iterable[str | Path],
+                      root: Path) -> Iterator[Path]:
+    for p in paths:
+        p = (root / p) if not Path(p).is_absolute() else Path(p)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not _SKIP_DIRS.intersection(f.parts):
+                    yield f
+
+
+def scan_paths(paths: Iterable[str | Path], root: str | Path,
+               rules: Iterable[Rule] | None = None) -> list[Finding]:
+    """Analyze every .py file under ``paths`` (relative to ``root``)."""
+    root = Path(root)
+    findings: list[Finding] = []
+    for f in iter_python_files(paths, root):
+        findings.extend(analyze_file(f, root, rules))
+    return sorted(findings)

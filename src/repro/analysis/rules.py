@@ -1,0 +1,630 @@
+"""The repo-specific rule catalogue.
+
+Each rule machine-checks one contract the engine's correctness rests on
+(DESIGN.md "Static analysis & invariants" documents the why per rule):
+
+* ``use-after-donate``    — donated buffers are unobservable after dispatch
+* ``tracer-leak``         — no host side effects inside traced functions
+* ``raw-shard-map``       — shard_map only via ``distributed.sharding``
+* ``raw-mesh``            — mesh construction only via ``launch.mesh``
+* ``dtype-discipline``    — packed-key integer math keeps explicit widths
+* ``thread-shared-state`` — worker threads mutate shared attrs under a lock
+
+Rules are best-effort AST analyses, not type checkers: they trade soundness
+for zero-dependency speed and zero false-negative cost on the patterns this
+repo actually writes.  Anything a rule cannot see (donation through a
+function parameter, dynamic stage registration) is covered by the runtime
+sanitizers and the equivalence suite instead.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.framework import Finding, Rule, register_rule
+
+
+# ---------------------------------------------------------------------------
+# shared AST utilities
+# ---------------------------------------------------------------------------
+class ImportMap(ast.NodeVisitor):
+    """Local alias -> fully dotted origin ("np" -> "numpy", "Mesh" ->
+    "jax.sharding.Mesh", "smap" -> "jax.experimental.shard_map.shard_map").
+    """
+
+    def __init__(self):
+        self.aliases: dict[str, str] = {}
+
+    @classmethod
+    def of(cls, tree: ast.AST) -> "ImportMap":
+        m = cls()
+        m.visit(tree)
+        return m
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            if a.asname:
+                self.aliases[a.asname] = a.name
+            else:
+                root = a.name.split(".")[0]
+                self.aliases[root] = root
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module is None or node.level:  # relative imports: unused here
+            return
+        for a in node.names:
+            self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def resolve(self, node: ast.AST) -> str | None:
+        """Dotted origin of a Name/Attribute chain, or None."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.aliases.get(node.id, node.id)
+        return ".".join([root, *reversed(parts)])
+
+
+def iter_scopes(tree: ast.AST) -> Iterator[tuple[ast.AST, list[ast.stmt]]]:
+    """(scope node, its body) for the module and every function."""
+    yield tree, list(tree.body)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, list(node.body)
+
+
+def walk_shallow(stmts: list[ast.stmt]) -> Iterator[ast.AST]:
+    """Walk statements without descending into nested function/class scopes
+    (those are separate scopes with their own bindings)."""
+    stack: list[ast.AST] = list(stmts)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue  # yielded as a statement, but its body is not ours
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# ---------------------------------------------------------------------------
+# use-after-donate
+# ---------------------------------------------------------------------------
+def _is_donating_factory(call: ast.Call) -> bool:
+    """A call whose *result* donates its inputs: any ``donate=...`` (not
+    literally False) or ``donate_argnums``/``donate_argnames`` keyword —
+    ``graph.jitted(donate=True)``, ``jax.jit(f, donate_argnums=0)``."""
+    for kw in call.keywords:
+        if kw.arg == "donate":
+            return not (isinstance(kw.value, ast.Constant)
+                        and kw.value.value is False)
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            return not (isinstance(kw.value, ast.Constant)
+                        and kw.value.value is None)
+    return False
+
+
+def _linear_statements(body: list[ast.stmt]) -> list[ast.stmt]:
+    """Statements in textual order, compound bodies flattened, nested
+    function/class scopes excluded (they are analyzed separately)."""
+    out: list[ast.stmt] = []
+    for stmt in body:
+        out.append(stmt)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, field, None)
+            if sub:
+                out.extend(_linear_statements(sub))
+        for handler in getattr(stmt, "handlers", ()):
+            out.extend(_linear_statements(handler.body))
+    return out
+
+
+def _header_walk(stmt: ast.stmt) -> Iterator[ast.AST]:
+    """Walk only the expressions evaluated *by this statement itself* —
+    for compound statements, the header (loop iter, if/while test, with
+    items), not the nested body statements already linearized."""
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        parts: list[ast.AST] = [stmt.target, stmt.iter]
+    elif isinstance(stmt, (ast.While, ast.If)):
+        parts = [stmt.test]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        parts = [i.context_expr for i in stmt.items]
+        parts += [i.optional_vars for i in stmt.items if i.optional_vars]
+    elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        parts = [*stmt.decorator_list, *stmt.args.defaults,
+                 *[d for d in stmt.args.kw_defaults if d is not None]]
+    elif isinstance(stmt, ast.ClassDef):
+        parts = [*stmt.decorator_list, *stmt.bases]
+    elif isinstance(stmt, ast.Try):
+        parts = []
+    else:
+        parts = [stmt]
+    for p in parts:
+        yield from ast.walk(p)
+
+
+@register_rule
+class UseAfterDonateRule(Rule):
+    id = "use-after-donate"
+    doc = (
+        "A variable passed to a donate=True / donate_argnums jitted "
+        "callable is read again in the same scope. Donated buffers are "
+        "recycled into the step's outputs the moment the call is "
+        "dispatched — a later read sees a deleted array (async policies) "
+        "or silently stale memory. Rebinding the name in the same "
+        "statement (`state, m = step(state, x)`) and `.is_deleted()` "
+        "probes are the sanctioned patterns and are not flagged."
+    )
+
+    def check(self, tree, source, path):
+        findings: list[Finding] = []
+        for _scope, body in iter_scopes(tree):
+            findings.extend(self._check_scope(body, path))
+        return findings
+
+    def _check_scope(self, body, path) -> list[Finding]:
+        stmts = _linear_statements(body)
+
+        # names bound to donating callables anywhere in this scope
+        donating_names: set[str] = set()
+        for stmt in stmts:
+            if (isinstance(stmt, ast.Assign)
+                    and isinstance(stmt.value, ast.Call)
+                    and _is_donating_factory(stmt.value)):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        donating_names.add(t.id)
+
+        # per-statement name usage: loads (first node kept for the line),
+        # stores, and donation events
+        loads: list[dict[str, ast.Name]] = []
+        stores: list[set[str]] = []
+        events: list[tuple[int, str, int]] = []  # (stmt idx, name, line)
+        for i, stmt in enumerate(stmts):
+            ld: dict[str, ast.Name] = {}
+            st: set[str] = set()
+            deleted_probes: set[int] = set()
+            nodes = list(_header_walk(stmt))
+            for n in nodes:
+                # dev.is_deleted() is how code *checks* donation happened
+                if (isinstance(n, ast.Attribute) and n.attr == "is_deleted"
+                        and isinstance(n.value, ast.Name)):
+                    deleted_probes.add(id(n.value))
+            for n in nodes:
+                if not isinstance(n, ast.Name):
+                    continue
+                if isinstance(n.ctx, ast.Load):
+                    if id(n) not in deleted_probes:
+                        ld.setdefault(n.id, n)
+                else:
+                    st.add(n.id)
+            loads.append(ld)
+            stores.append(st)
+            for n in nodes:
+                if not isinstance(n, ast.Call):
+                    continue
+                f = n.func
+                donating = (
+                    (isinstance(f, ast.Name) and f.id in donating_names)
+                    or (isinstance(f, ast.Call)
+                        and _is_donating_factory(f))
+                )
+                if not donating:
+                    continue
+                for arg in n.args:
+                    # a same-statement rebind (state, m = step(state, x))
+                    # replaces the donated buffer: the canonical pattern
+                    if isinstance(arg, ast.Name) and arg.id not in st:
+                        events.append((i, arg.id, n.lineno))
+
+        findings = []
+        for i, name, call_line in events:
+            for j in range(i + 1, len(stmts)):
+                if name in loads[j]:
+                    findings.append(self.finding(
+                        path, loads[j][name],
+                        f"'{name}' is read after being passed to a "
+                        f"donating call on line {call_line}; donated "
+                        f"buffers are unobservable after dispatch",
+                    ))
+                    break
+                if name in stores[j]:
+                    break
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# tracer-leak
+# ---------------------------------------------------------------------------
+_TRACING_WRAPPERS = {
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.pjit",
+    "jax.experimental.pjit.pjit",
+    "jax.experimental.pallas.pallas_call",
+}
+_PARTIAL = {"functools.partial", "partial"}
+_TIME_CALLS = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.process_time",
+}
+_NUMPY_OK = {"numpy.dtype", "numpy.iinfo", "numpy.finfo"}
+_MUTATORS = {"append", "extend", "insert", "add", "update", "setdefault",
+             "pop", "popleft", "appendleft", "clear"}
+
+
+@register_rule
+class TracerLeakRule(Rule):
+    id = "tracer-leak"
+    doc = (
+        "Python side effects inside a traced function (jax.jit / vmap / "
+        "pallas_call wrappers, @register_stage stage bodies): print, wall "
+        "clocks, numpy host ops on traced values, global/nonlocal, or "
+        "mutation of state defined outside the function. These run once "
+        "at trace time, not per step — silent wrong-answer territory."
+    )
+
+    def check(self, tree, source, path):
+        imap = ImportMap.of(tree)
+        traced = self._traced_functions(tree, imap)
+        findings: list[Finding] = []
+        for fn in traced:
+            findings.extend(self._check_traced(fn, imap, path))
+        return findings
+
+    def _is_tracing_wrapper(self, node, imap) -> bool:
+        res = imap.resolve(node)
+        if res in _TRACING_WRAPPERS:
+            return True
+        # partial(jax.jit, ...) / partial(pl.pallas_call, ...)
+        if isinstance(node, ast.Call) and imap.resolve(node.func) in _PARTIAL:
+            return bool(node.args) and self._is_tracing_wrapper(
+                node.args[0], imap)
+        return False
+
+    def _traced_functions(self, tree, imap) -> list[ast.FunctionDef]:
+        # names passed as a function argument to a tracing wrapper call
+        wrapped_names: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and (
+                    self._is_tracing_wrapper(node.func, imap)
+                    or self._is_tracing_wrapper(node, imap)):
+                for arg in node.args[:1]:
+                    if isinstance(arg, ast.Name):
+                        wrapped_names.add(arg.id)
+                    elif isinstance(arg, ast.Attribute):
+                        wrapped_names.add(arg.attr)
+
+        traced = []
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            is_traced = node.name in wrapped_names
+            for deco in node.decorator_list:
+                if self._is_tracing_wrapper(deco, imap):
+                    is_traced = True
+                res = imap.resolve(
+                    deco.func if isinstance(deco, ast.Call) else deco)
+                if res is not None and res.endswith("register_stage"):
+                    is_traced = True
+            if is_traced:
+                traced.append(node)
+        return traced
+
+    def _check_traced(self, fn, imap, path) -> list[Finding]:
+        local_names = {a.arg for a in [*fn.args.args, *fn.args.posonlyargs,
+                                       *fn.args.kwonlyargs]}
+        if fn.args.vararg:
+            local_names.add(fn.args.vararg.arg)
+        if fn.args.kwarg:
+            local_names.add(fn.args.kwarg.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                local_names.add(node.id)
+
+        findings = []
+        ctx = f"traced function '{fn.name}'"
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                kw = "global" if isinstance(node, ast.Global) else "nonlocal"
+                findings.append(self.finding(
+                    path, node,
+                    f"{kw} statement in {ctx}: rebinding outer state is a "
+                    f"trace-time side effect",
+                ))
+            if not isinstance(node, ast.Call):
+                continue
+            res = imap.resolve(node.func)
+            if res == "print":
+                findings.append(self.finding(
+                    path, node,
+                    f"print() in {ctx} runs at trace time only; use "
+                    f"jax.debug.print for per-step output",
+                ))
+            elif res in _TIME_CALLS:
+                findings.append(self.finding(
+                    path, node,
+                    f"{res}() in {ctx} is evaluated once at trace time, "
+                    f"not per step",
+                ))
+            elif res is not None and (
+                    res.endswith("datetime.now")
+                    or res.endswith("datetime.utcnow")
+                    or res.endswith("date.today")):
+                findings.append(self.finding(
+                    path, node,
+                    f"{res}() in {ctx} is evaluated once at trace time, "
+                    f"not per step",
+                ))
+            elif (res is not None and res.startswith("numpy.")
+                    and res not in _NUMPY_OK):
+                findings.append(self.finding(
+                    path, node,
+                    f"{res}() in {ctx}: numpy ops on traced values "
+                    f"force host sync or fail; use jnp",
+                ))
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _MUTATORS
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id not in local_names):
+                findings.append(self.finding(
+                    path, node,
+                    f"mutation of '{node.func.value.id}.{node.func.attr}' "
+                    f"in {ctx}: the target is defined outside the traced "
+                    f"function, so this mutates once at trace time",
+                ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# raw-shard-map / raw-mesh (the compat-shim hygiene rules)
+# ---------------------------------------------------------------------------
+@register_rule
+class RawShardMapRule(Rule):
+    id = "raw-shard-map"
+    doc = (
+        "Direct use of jax.shard_map / jax.experimental.shard_map outside "
+        "the compat helper. Route through distributed.sharding.shard_map, "
+        "which handles the check_rep/check_vma and ambient-mesh API drift "
+        "across jax versions in one place (ROADMAP hygiene item)."
+    )
+    exempt_paths = ("src/repro/distributed/sharding.py",)
+
+    _TARGETS = ("jax.shard_map", "jax.experimental.shard_map")
+
+    def check(self, tree, source, path):
+        imap = ImportMap.of(tree)
+        findings = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                hits = (
+                    node.module.startswith("jax.experimental.shard_map")
+                    or (node.module in ("jax", "jax.experimental")
+                        and any(a.name == "shard_map"
+                                for a in node.names))
+                )
+                if hits:
+                    findings.append(self.finding(
+                        path, node,
+                        "import of raw shard_map; use "
+                        "repro.distributed.sharding.shard_map",
+                    ))
+            elif isinstance(node, (ast.Attribute, ast.Name)):
+                res = imap.resolve(node)
+                if res is not None and (
+                        res in self._TARGETS
+                        or res.startswith("jax.experimental.shard_map.")):
+                    findings.append(self.finding(
+                        path, node,
+                        f"raw {res}; use "
+                        f"repro.distributed.sharding.shard_map",
+                    ))
+        # attribute chains nest (jax.experimental.shard_map resolves at
+        # several depths): dedup per line
+        seen: set[tuple[int, str]] = set()
+        out = []
+        for f in findings:
+            if (f.line, f.rule) not in seen:
+                seen.add((f.line, f.rule))
+                out.append(f)
+        return out
+
+
+@register_rule
+class RawMeshRule(Rule):
+    id = "raw-mesh"
+    doc = (
+        "Direct jax.sharding.Mesh(...) / jax.make_mesh(...) construction "
+        "outside launch.mesh. Use make_local_mesh / make_production_mesh / "
+        "make_mesh_from_plan + ambient_mesh, which pin AxisType and the "
+        "set_mesh-vs-context-manager drift across jax versions (ROADMAP "
+        "hygiene item). Importing Mesh for type annotations is fine; "
+        "calling it is not."
+    )
+    exempt_paths = ("src/repro/launch/mesh.py",)
+
+    _TARGETS = {"jax.sharding.Mesh", "jax.make_mesh",
+                "jax.experimental.mesh_utils.create_device_mesh",
+                "jax.interpreters.pxla.Mesh"}
+
+    def check(self, tree, source, path):
+        imap = ImportMap.of(tree)
+        findings = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            res = imap.resolve(node.func)
+            if res in self._TARGETS:
+                findings.append(self.finding(
+                    path, node,
+                    f"raw mesh construction {res}(...); use the "
+                    f"repro.launch.mesh helpers",
+                ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# dtype-discipline (packed-key uint32 math must keep explicit widths)
+# ---------------------------------------------------------------------------
+_ARRAY_CTORS = {"arange", "zeros", "ones", "full", "empty"}
+_NUMPY_MODULES = {"numpy", "jax.numpy"}
+_WIDTH_CASTS = {
+    "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64",
+}
+
+
+def _numpy_ctor(res: str | None) -> str | None:
+    """'jax.numpy.arange' -> 'arange' if it is an array constructor."""
+    if res is None or "." not in res:
+        return None
+    mod, name = res.rsplit(".", 1)
+    if mod in _NUMPY_MODULES and name in _ARRAY_CTORS:
+        return name
+    return None
+
+
+def _explicit_width(node: ast.AST, imap: ImportMap) -> str | None:
+    """The integer width an expression explicitly commits to, if any:
+    ``jnp.uint32(x)`` -> 'uint32', ``x.astype(jnp.int32)`` -> 'int32'."""
+    if not isinstance(node, ast.Call):
+        return None
+    res = imap.resolve(node.func)
+    if res is not None and "." in res:
+        mod, name = res.rsplit(".", 1)
+        if mod in _NUMPY_MODULES and name in _WIDTH_CASTS:
+            return name
+    if (isinstance(node.func, ast.Attribute)
+            and node.func.attr == "astype" and node.args):
+        res = imap.resolve(node.args[0])
+        if res is not None and "." in res:
+            mod, name = res.rsplit(".", 1)
+            if mod in _NUMPY_MODULES and name in _WIDTH_CASTS:
+                return name
+    return None
+
+
+@register_rule
+class DtypeDisciplineRule(Rule):
+    id = "dtype-discipline"
+    doc = (
+        "In the packed-key modules (core/, kernels/, engine/stages.py): "
+        "array constructors must pass an explicit dtype= (default widths "
+        "drift with x64 mode), and arithmetic must not mix two different "
+        "explicitly-cast integer widths without an astype — silent "
+        "promotion breaks uint32 packed-key math the fused build kernel "
+        "depends on."
+    )
+    paths = ("src/repro/core", "src/repro/kernels",
+             "src/repro/engine/stages.py")
+
+    def check(self, tree, source, path):
+        imap = ImportMap.of(tree)
+        findings = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                ctor = _numpy_ctor(imap.resolve(node.func))
+                if ctor is not None and not any(
+                        kw.arg == "dtype" for kw in node.keywords):
+                    # a positional dtype is legal for some ctors; accept a
+                    # trailing positional arg that names a dtype
+                    if not any(_is_dtype_expr(a, imap) for a in node.args):
+                        findings.append(self.finding(
+                            path, node,
+                            f"{ctor}() without explicit dtype= in "
+                            f"packed-key code; default integer widths "
+                            f"depend on x64 mode",
+                        ))
+            elif isinstance(node, ast.BinOp):
+                lw = _explicit_width(node.left, imap)
+                rw = _explicit_width(node.right, imap)
+                if lw and rw and lw != rw:
+                    findings.append(self.finding(
+                        path, node,
+                        f"arithmetic mixes explicit {lw} and {rw} "
+                        f"operands without astype; pick one width",
+                    ))
+        return findings
+
+
+def _is_dtype_expr(node: ast.AST, imap: ImportMap) -> bool:
+    """Does this argument expression explicitly name a dtype?  Covers
+    ``jnp.int32``, ``x.dtype`` / ``x.vals.dtype`` (inheriting a width is
+    explicit), a ``dtype``-named variable threading a parameter through,
+    and ``jnp.dtype(...)`` calls."""
+    if isinstance(node, ast.Attribute) and node.attr == "dtype":
+        return True
+    if isinstance(node, ast.Name) and "dtype" in node.id:
+        return True
+    if isinstance(node, ast.Call):
+        return _is_dtype_expr(node.func, imap)
+    res = imap.resolve(node)
+    if res is None or "." not in res:
+        return False
+    mod, name = res.rsplit(".", 1)
+    return mod in _NUMPY_MODULES and (
+        name in _WIDTH_CASTS or name in ("float32", "float64", "float16",
+                                         "bfloat16", "bool_", "dtype"))
+
+
+# ---------------------------------------------------------------------------
+# thread-shared-state
+# ---------------------------------------------------------------------------
+@register_rule
+class ThreadSharedStateRule(Rule):
+    id = "thread-shared-state"
+    doc = (
+        "In the threaded engine modules (engine/prefetch.py, "
+        "engine/policies.py): a closure that runs on a worker thread "
+        "mutates an attribute the consumer thread also reads, outside a "
+        "held lock. Wrap the write in `with <lock>:` — the GIL orders "
+        "single bytecodes, not read-modify-write sequences like `+=`."
+    )
+    paths = ("src/repro/engine/prefetch.py",
+             "src/repro/engine/policies.py")
+
+    def check(self, tree, source, path):
+        findings: list[Finding] = []
+        self._visit(tree, depth=0, under_lock=False, findings=findings,
+                    path=path)
+        return findings
+
+    def _visit(self, node, depth, under_lock, findings, path):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            depth += 1
+            under_lock = False  # a new thread entry point starts unlocked
+        elif isinstance(node, ast.With):
+            if any(self._is_lock(item.context_expr)
+                   for item in node.items):
+                under_lock = True
+        elif depth >= 2 and not under_lock and isinstance(
+                node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if isinstance(t, ast.Attribute):
+                    base = t.value
+                    base_name = (base.id if isinstance(base, ast.Name)
+                                 else "<expr>")
+                    findings.append(self.finding(
+                        path, node,
+                        f"'{base_name}.{t.attr}' is mutated from a "
+                        f"worker-thread closure outside a lock; wrap the "
+                        f"write in `with <lock>:`",
+                    ))
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, depth, under_lock, findings, path)
+
+    @staticmethod
+    def _is_lock(expr: ast.AST) -> bool:
+        name = None
+        if isinstance(expr, ast.Attribute):
+            name = expr.attr
+        elif isinstance(expr, ast.Name):
+            name = expr.id
+        elif isinstance(expr, ast.Call):
+            return ThreadSharedStateRule._is_lock(expr.func)
+        return name is not None and "lock" in name.lower()

@@ -8,7 +8,6 @@ cross-topology (elastic) restarts work: the checkpoint is topology-free.
 
 from __future__ import annotations
 
-import io
 from pathlib import Path
 from typing import Any
 

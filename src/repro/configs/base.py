@@ -378,7 +378,7 @@ def gnn_build_cell(make_cfg, arch_id: str, shape_name: str,
 
 
 def gnn_smoke(make_cfg, arch_id: str) -> SmokeCase:
-    from repro.data.graphs import molecule_batch, random_graph
+    from repro.data.graphs import random_graph
 
     shape = dict(n_nodes=64, n_edges=256, d_feat=16, n_classes=4,
                  task="node", pad_edges=512)

@@ -14,7 +14,6 @@ cell, see launch/ingest.py).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -153,8 +152,6 @@ def smoke():
         return stats
 
     def check(stats):
-        import numpy as np
-
         assert int(stats["valid_packets"]) == 4 * cfg.window_size
         assert int(stats["unique_links"]) > 0
         for k in _HIST_KEYS:

@@ -69,7 +69,7 @@ def _run_boundaries(rows, cols, valid):
     """flag[i] = 1 iff entry i starts a new (row, col) run among valid entries."""
     prev_r = jnp.concatenate([rows[:1], rows[:-1]])
     prev_c = jnp.concatenate([cols[:1], cols[:-1]])
-    first = jnp.arange(rows.shape[0]) == 0
+    first = jnp.arange(rows.shape[0], dtype=jnp.int32) == 0
     new_key = (rows != prev_r) | (cols != prev_c) | first
     return new_key & valid
 

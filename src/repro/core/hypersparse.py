@@ -128,9 +128,10 @@ def from_dense(dense, nrows=None, ncols=None) -> HypersparseMatrix:
     # stable partition: non-zeros first, preserving (row, col) order
     order = jnp.argsort(~present, stable=True)
     n = present.sum().astype(jnp.int32)
-    rows = jnp.where(jnp.arange(flat_r.size) < n, flat_r[order], SENTINEL)
-    cols = jnp.where(jnp.arange(flat_c.size) < n, flat_c[order], SENTINEL)
-    vals = jnp.where(jnp.arange(flat_v.size) < n, flat_v[order], 0)
+    slot = jnp.arange(flat_r.size, dtype=jnp.int32)
+    rows = jnp.where(slot < n, flat_r[order], SENTINEL)
+    cols = jnp.where(slot < n, flat_c[order], SENTINEL)
+    vals = jnp.where(slot < n, flat_v[order], 0)
     return HypersparseMatrix(
         rows=rows.astype(jnp.uint32),
         cols=cols.astype(jnp.uint32),

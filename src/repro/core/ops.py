@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import types
-from repro.core.build import dedup_sorted, lex_sort, matrix_build
+from repro.core.build import lex_sort, matrix_build
 from repro.core.hypersparse import (
     SENTINEL,
     HypersparseMatrix,
@@ -109,7 +109,7 @@ def ewise_add(
     merged = jnp.where(nxt_same, op(svals, jnp.roll(svals, -1)), svals)
 
     prev_same = jnp.concatenate(
-        [jnp.zeros((1,), bool), nxt_same[:-1]]
+        [jnp.zeros((1,), dtype=bool), nxt_same[:-1]]
     )
     heads = svalid & ~prev_same
     (r, c, v), nnz, ovf = _compact(
@@ -254,7 +254,7 @@ def reduce_rows(
     n = A.capacity
     valid = A.valid_mask()
     prev = jnp.concatenate([A.rows[:1], A.rows[:-1]])
-    first = jnp.arange(n) == 0
+    first = jnp.arange(n, dtype=jnp.int32) == 0
     heads = ((A.rows != prev) | first) & valid
 
     seg = jnp.cumsum(heads.astype(jnp.int32)) - 1
@@ -401,5 +401,7 @@ def sddmm(
     c = jnp.minimum(cols.astype(jnp.int32), V.shape[0] - 1)
     out = jnp.einsum("ed,ed->e", U[r], V[c])
     if n_valid is not None:
-        out = jnp.where(jnp.arange(out.shape[0]) < n_valid, out, 0)
+        out = jnp.where(
+            jnp.arange(out.shape[0], dtype=jnp.int32) < n_valid, out, 0
+        )
     return out

@@ -19,7 +19,6 @@ device pipeline's measured rate is pure GraphBLAS(+transfer) work.
 from __future__ import annotations
 
 import dataclasses
-import io
 import struct
 from pathlib import Path
 from typing import Iterator

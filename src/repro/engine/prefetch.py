@@ -48,6 +48,9 @@ class BoundedPrefetcher:
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._err: BaseException | None = None
         self._closed = threading.Event()
+        # orders worker-side writes of produce_s/_err against consumer
+        # reads: += is a read-modify-write the GIL does not make atomic
+        self._lock = threading.Lock()
         self.produce_s = 0.0
 
         def put_until_closed(item) -> bool:
@@ -71,15 +74,23 @@ class BoundedPrefetcher:
                             # warmup items are excluded from produce_s the
                             # same way the consumer excludes them from
                             # elapsed/process accounting
-                            self.produce_s += time.perf_counter() - t0
+                            dt = time.perf_counter() - t0
+                            with self._lock:
+                                self.produce_s += dt
                     if not put_until_closed(item):
                         return
             except BaseException as e:  # surface in consumer
-                self._err = e
+                with self._lock:
+                    self._err = e
             finally:
                 put_until_closed(_STOP)
 
-        self._thread = threading.Thread(target=worker, daemon=True)
+        # the name is load-bearing: the thread-leak fixture in
+        # tests/conftest.py fails any test that leaves a repro-* thread
+        # alive, which is what pins the close() discipline
+        self._thread = threading.Thread(
+            target=worker, daemon=True, name="repro-prefetch-worker"
+        )
         self._thread.start()
 
     @property

@@ -57,7 +57,7 @@ def bucket_coo_2d(
     order = jnp.argsort(cell, stable=True)
     sorted_cell = cell[order]
     first = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_cell[1:] != sorted_cell[:-1]]
+        [jnp.ones((1,), dtype=bool), sorted_cell[1:] != sorted_cell[:-1]]
     )
     run_start = jax.lax.cummax(
         jnp.where(first, jnp.arange(n, dtype=jnp.int32), 0), axis=0

@@ -23,7 +23,7 @@ def embedding_bag_ref(
     valid = (
         jnp.arange(n, dtype=jnp.int32) < n_valid
         if n_valid is not None
-        else jnp.ones((n,), bool)
+        else jnp.ones((n,), dtype=bool)
     )
     idx = jnp.minimum(indices.astype(jnp.int32), table.shape[0] - 1)
     w = jnp.ones((n,), table.dtype) if weights is None else weights

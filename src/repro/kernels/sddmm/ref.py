@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
-import jax
 
 
 def sddmm_ref(rows, cols, u, v, n_valid=None):

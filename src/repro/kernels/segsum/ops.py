@@ -20,7 +20,7 @@ def _pad(vals, seg, block_size):
         return vals, seg
     pad = m - n
     vals = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
-    seg = jnp.concatenate([seg, jnp.full((pad,), _PAD_SEG)])
+    seg = jnp.concatenate([seg, jnp.full((pad,), _PAD_SEG, seg.dtype)])
     return vals, seg
 
 

@@ -18,10 +18,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from pathlib import Path
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -120,29 +118,32 @@ def main(argv=None):
             }
 
         step_jit = jax.jit(step, donate_argnums=(0,))
-        it = Prefetcher(stream, depth=2, transform=place)
 
         t_start = time.time()
         losses = []
-        for i in range(start_step, args.steps):
-            batch = next(it)
-            t0 = time.time()
-            state, metrics = step_jit(state, batch)
-            metrics = jax.block_until_ready(metrics)
-            dt = time.time() - t0
-            monitor.beat(0, i, dt)
-            decision = policy.evaluate()
-            if decision.action != "proceed":  # pragma: no cover
-                print(f"[fault] {decision}")
-            losses.append(float(metrics["loss"]))
-            if (i + 1) % args.log_every == 0:
-                tps = args.global_batch * args.seq_len / dt
-                print(f"[train] step {i+1} loss {losses[-1]:.4f} "
-                      f"({dt*1e3:.0f} ms, {tps:,.0f} tok/s)")
-            if (i + 1) % args.ckpt_every == 0 or i + 1 == args.steps:
-                mgr.save_async(i + 1, state,
-                               meta={"stream": stream.state(),
-                                     "arch": args.arch})
+        # context manager: the token stream is infinite, so the loop never
+        # exhausts the prefetcher — without close() its worker thread
+        # outlives the run (the thread-leak fixture fails on exactly this)
+        with Prefetcher(stream, depth=2, transform=place) as it:
+            for i in range(start_step, args.steps):
+                batch = next(it)
+                t0 = time.time()
+                state, metrics = step_jit(state, batch)
+                metrics = jax.block_until_ready(metrics)
+                dt = time.time() - t0
+                monitor.beat(0, i, dt)
+                decision = policy.evaluate()
+                if decision.action != "proceed":  # pragma: no cover
+                    print(f"[fault] {decision}")
+                losses.append(float(metrics["loss"]))
+                if (i + 1) % args.log_every == 0:
+                    tps = args.global_batch * args.seq_len / dt
+                    print(f"[train] step {i+1} loss {losses[-1]:.4f} "
+                          f"({dt*1e3:.0f} ms, {tps:,.0f} tok/s)")
+                if (i + 1) % args.ckpt_every == 0 or i + 1 == args.steps:
+                    mgr.save_async(i + 1, state,
+                                   meta={"stream": stream.state(),
+                                         "arch": args.arch})
         mgr.wait()
         print(f"[train] done: {args.steps - start_step} steps in "
               f"{time.time()-t_start:.1f}s; loss {losses[0] if losses else 0:.3f}"

@@ -96,7 +96,7 @@ def gcn_apply(params, x, edge_src, edge_dst, n_nodes, n_edges,
             agg = jax.ops.segment_sum(
                 w_e[:, None] * hw[src], dst, num_segments=n
             )
-        h = agg + layer["b"]
+        h = agg + jnp.broadcast_to(layer["b"], agg.shape)
         if i < len(params["layers"]) - 1:
             h = jax.nn.relu(h)
     return h

@@ -41,7 +41,8 @@ def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     normed = xf * jax.lax.rsqrt(var + eps)
-    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    scale = jnp.broadcast_to(params["scale"].astype(jnp.float32), xf.shape)
+    return (normed * scale).astype(x.dtype)
 
 
 def init_layernorm(d: int, param_dtype=jnp.float32) -> Params:
@@ -54,9 +55,9 @@ def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
     normed = (xf - mu) * jax.lax.rsqrt(var + eps)
-    out = normed * params["scale"].astype(jnp.float32) + params["bias"].astype(
-        jnp.float32
-    )
+    scale = jnp.broadcast_to(params["scale"].astype(jnp.float32), xf.shape)
+    bias = jnp.broadcast_to(params["bias"].astype(jnp.float32), xf.shape)
+    out = normed * scale + bias
     return out.astype(x.dtype)
 
 
@@ -73,6 +74,7 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """x: [..., seq, heads, d_head]; positions: [..., seq] int32."""
     d_head = x.shape[-1]
     freqs = rope_frequencies(d_head, theta)  # [d_head/2]
+    freqs = freqs.reshape((1,) * positions.ndim + (-1,))  # [1..., 1, dh/2]
     angles = positions[..., None].astype(jnp.float32) * freqs  # [..., s, dh/2]
     cos = jnp.cos(angles)[..., None, :]  # [..., s, 1, dh/2]
     sin = jnp.sin(angles)[..., None, :]
@@ -110,9 +112,9 @@ def _qkv(params, x, cfg: AttentionConfig):
     k = x @ params["wk"].astype(x.dtype)
     v = x @ params["wv"].astype(x.dtype)
     if cfg.qkv_bias:
-        q = q + params["bq"].astype(x.dtype)
-        k = k + params["bk"].astype(x.dtype)
-        v = v + params["bv"].astype(x.dtype)
+        q = q + jnp.broadcast_to(params["bq"].astype(x.dtype), q.shape)
+        k = k + jnp.broadcast_to(params["bk"].astype(x.dtype), k.shape)
+        v = v + jnp.broadcast_to(params["bv"].astype(x.dtype), v.shape)
     return (
         q.reshape(b, s, nh, dh),
         k.reshape(b, s, nkv, dh),
@@ -300,7 +302,7 @@ def mlp_apply(params: Params, x: jax.Array, act=jax.nn.relu,
     for i, layer in enumerate(params["layers"]):
         x = x @ layer["w"].astype(x.dtype)
         if "b" in layer:
-            x = x + layer["b"].astype(x.dtype)
+            x = x + jnp.broadcast_to(layer["b"].astype(x.dtype), x.shape)
         if i < n - 1 or final_act:
             x = act(x)
     return x

@@ -1,8 +1,27 @@
+import os
 import sys
+import threading
+import time
 import types
 
 import numpy as np
 import pytest
+
+import jax
+
+# -- runtime sanitizers ------------------------------------------------------
+# The whole suite runs with JAX's strictest numerics modes, mirroring the CI
+# env (.github/workflows/ci.yml).  Rank promotion and implicit dtype
+# promotion are exactly the bug classes the uint32 packed-key math cannot
+# survive silently (a u32 column widening to i64 breaks the x64-disabled
+# build path), so any op relying on either fails loudly here.
+jax.config.update("jax_numpy_rank_promotion", "raise")
+jax.config.update("jax_numpy_dtype_promotion", "strict")
+# NaN-checking reruns every jitted computation un-jitted on NaN output,
+# which is far too slow to leave on by default — opt in per-run:
+#   REPRO_DEBUG_NANS=1 python -m pytest ...
+if os.environ.get("REPRO_DEBUG_NANS"):
+    jax.config.update("jax_debug_nans", True)
 
 try:
     from hypothesis import settings
@@ -64,3 +83,39 @@ except ImportError:  # pragma: no cover - exercised when hypothesis is absent
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# -- thread-leak sanitizer ---------------------------------------------------
+# Every repro-owned worker thread is named "repro-*" (see
+# engine/prefetch.py); the engine contract is that no such thread outlives
+# the pipeline that spawned it (BoundedPrefetcher.close() in the policies'
+# ``finally`` blocks).  This autouse fixture turns a violation into a test
+# failure at the offending test, instead of a flaky hang three tests later.
+
+
+def _leakable(t: threading.Thread) -> bool:
+    return t.is_alive() and (
+        not t.daemon or (t.name or "").startswith("repro-")
+    )
+
+
+@pytest.fixture(autouse=True)
+def _no_thread_leaks():
+    before = {id(t) for t in threading.enumerate()}
+    yield
+    leaked = [t for t in threading.enumerate()
+              if id(t) not in before and _leakable(t)]
+    if not leaked:
+        return
+    # a just-exhausted prefetcher's worker may still be inside its final
+    # put/return; give stragglers one grace interval before declaring a leak
+    deadline = time.monotonic() + 1.0
+    for t in leaked:
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+    leaked = [t for t in leaked if t.is_alive()]
+    if leaked:
+        names = ", ".join(f"{t.name} (daemon={t.daemon})" for t in leaked)
+        pytest.fail(
+            f"test leaked {len(leaked)} thread(s): {names} — pipelines "
+            f"must close their prefetchers (BoundedPrefetcher.close())"
+        )

@@ -1,0 +1,514 @@
+"""Fixture tests for the repro.analysis static-analysis pass.
+
+Every rule in the catalogue gets at least one *bad* snippet (the finding
+fires, with the right rule id on the right line, marked ``# BAD``) and a
+*good twin* (the sanctioned way to write the same thing — no finding).
+The good twins are the real spec: they pin exactly which patterns the
+rules must keep permitting as the repo evolves.
+
+The suite also pins the CI contract end to end: the suppression-comment
+grammar, the baseline file format (justifications mandatory, stale
+entries reported), the CLI exit codes, and — most importantly — that the
+repo's own checked-in baseline matches a fresh scan of the repo.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    RULE_REGISTRY,
+    analyze_source,
+    load_baseline,
+    scan_paths,
+    write_baseline,
+)
+from repro.analysis.baseline import split_by_baseline
+from repro.analysis.cli import main as cli_main
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _bad_line(src: str) -> int:
+    for i, line in enumerate(src.splitlines(), 1):
+        if "# BAD" in line:
+            return i
+    raise AssertionError("snippet has no '# BAD' marker")
+
+
+def _findings(src: str, path: str):
+    return analyze_source(src, path=path)
+
+
+# ---------------------------------------------------------------------------
+# per-rule bad snippets and good twins
+# ---------------------------------------------------------------------------
+# rule id -> list of (pretend-path, bad snippet); the '# BAD' marker sits on
+# the line the finding must anchor to.
+BAD = {
+    "use-after-donate": [
+        (
+            "src/repro/launch/train.py",
+            """\
+import numpy as np
+
+def run(graph, x):
+    step = graph.jitted(donate=True)
+    out = step(x)
+    return np.asarray(x)  # BAD
+""",
+        ),
+        (
+            "src/repro/launch/train.py",
+            """\
+import jax
+
+def run(step_fn, state, batch):
+    step = jax.jit(step_fn, donate_argnums=(0,))
+    metrics = step(state, batch)
+    return state.params  # BAD
+""",
+        ),
+    ],
+    "tracer-leak": [
+        (
+            "src/repro/engine/stages.py",
+            """\
+import jax
+
+@jax.jit
+def step(x):
+    print(x)  # BAD
+    return x
+""",
+        ),
+        (
+            "src/repro/engine/stages.py",
+            """\
+import time
+import jax
+
+def step(x):
+    t = time.perf_counter()  # BAD
+    return x, t
+
+step_jit = jax.jit(step)
+""",
+        ),
+        (
+            "src/repro/engine/stages.py",
+            """\
+import jax
+
+TRACE = []
+
+@jax.jit
+def step(x):
+    TRACE.append(x)  # BAD
+    return x
+""",
+        ),
+    ],
+    "raw-shard-map": [
+        (
+            "src/repro/engine/sharded.py",
+            """\
+from jax.experimental.shard_map import shard_map  # BAD
+
+def run(f, mesh):
+    return shard_map(f, mesh=mesh, in_specs=None, out_specs=None)
+""",
+        ),
+        (
+            "src/repro/engine/sharded.py",
+            """\
+import jax
+
+def run(f, mesh):
+    return jax.experimental.shard_map.shard_map(f, mesh=mesh)  # BAD
+""",
+        ),
+    ],
+    "raw-mesh": [
+        (
+            "src/repro/engine/sharded.py",
+            """\
+import jax
+
+def make(devs):
+    return jax.sharding.Mesh(devs, ("batch",))  # BAD
+""",
+        ),
+        (
+            "src/repro/engine/sharded.py",
+            """\
+from jax.experimental import mesh_utils
+
+def make(shape):
+    return mesh_utils.create_device_mesh(shape)  # BAD
+""",
+        ),
+    ],
+    "dtype-discipline": [
+        (
+            "src/repro/core/build.py",
+            """\
+import jax.numpy as jnp
+
+def iota(n):
+    return jnp.arange(n)  # BAD
+""",
+        ),
+        (
+            "src/repro/core/build.py",
+            """\
+import jax.numpy as jnp
+
+def mix(a, b):
+    return jnp.uint32(a) + jnp.int32(b)  # BAD
+""",
+        ),
+    ],
+    "thread-shared-state": [
+        (
+            "src/repro/engine/prefetch.py",
+            """\
+import threading
+
+class Prefetcher:
+    def __init__(self):
+        self.count = 0
+
+        def worker():
+            self.count += 1  # BAD
+
+        self.t = threading.Thread(target=worker)
+""",
+        ),
+    ],
+}
+
+# rule id -> (pretend-path, good twin): the sanctioned pattern, no finding.
+GOOD = {
+    "use-after-donate": [
+        (
+            "src/repro/launch/train.py",
+            """\
+def run(graph, state, batch):
+    step = graph.jitted(donate=True)
+    state, metrics = step(state, batch)
+    return state, metrics
+""",
+        ),
+        (
+            "src/repro/launch/train.py",
+            """\
+def run(graph, x):
+    step = graph.jitted(donate=True)
+    out = step(x)
+    assert x.is_deleted()
+    return out
+""",
+        ),
+        (
+            "src/repro/launch/train.py",
+            """\
+import numpy as np
+
+def run(graph, x):
+    step = graph.jitted(donate=False)
+    out = step(x)
+    return np.asarray(x)
+""",
+        ),
+    ],
+    "tracer-leak": [
+        (
+            "src/repro/engine/stages.py",
+            """\
+import jax
+
+@jax.jit
+def step(x):
+    jax.debug.print("x = {}", x)
+    return x
+""",
+        ),
+        (
+            "src/repro/engine/stages.py",
+            """\
+import jax
+
+def step(x):
+    acc = []
+    acc.append(x)
+    return acc
+
+step_jit = jax.jit(step)
+""",
+        ),
+        (
+            "src/repro/engine/stages.py",
+            """\
+import time
+
+def host_loop(x):
+    t = time.perf_counter()
+    print(x)
+    return t
+""",
+        ),
+    ],
+    "raw-shard-map": [
+        (
+            "src/repro/engine/sharded.py",
+            """\
+from repro.distributed.sharding import shard_map
+
+def run(f, mesh):
+    return shard_map(f, mesh=mesh, in_specs=None, out_specs=None)
+""",
+        ),
+    ],
+    "raw-mesh": [
+        (
+            "src/repro/engine/sharded.py",
+            """\
+from jax.sharding import Mesh
+
+from repro.launch.mesh import make_local_mesh
+
+def make(n: int) -> Mesh:
+    return make_local_mesh(n)
+""",
+        ),
+    ],
+    "dtype-discipline": [
+        (
+            "src/repro/core/build.py",
+            """\
+import jax.numpy as jnp
+
+def iota(n, vals):
+    a = jnp.arange(n, dtype=jnp.int32)
+    b = jnp.zeros((n,), vals.dtype)
+    c = jnp.uint32(n) + jnp.uint32(1)
+    d = jnp.uint32(n).astype(jnp.int32) + jnp.int32(1)
+    return a, b, c, d
+""",
+        ),
+    ],
+    "thread-shared-state": [
+        (
+            "src/repro/engine/prefetch.py",
+            """\
+import threading
+
+class Prefetcher:
+    def __init__(self):
+        self.count = 0
+        self._lock = threading.Lock()
+
+        def worker():
+            with self._lock:
+                self.count += 1
+
+        self.t = threading.Thread(target=worker)
+""",
+        ),
+    ],
+}
+
+
+def test_every_rule_has_fixtures():
+    """The fixture tables and the rule registry must not drift apart."""
+    assert set(BAD) == set(RULE_REGISTRY)
+    assert set(GOOD) == set(RULE_REGISTRY)
+
+
+@pytest.mark.parametrize(
+    "rule_id,path,src",
+    [(rid, p, s) for rid, cases in BAD.items() for p, s in cases],
+    ids=[f"{rid}-{i}" for rid, cases in BAD.items()
+         for i, _ in enumerate(cases)],
+)
+def test_bad_snippet_flagged(rule_id, path, src):
+    found = _findings(src, path)
+    hits = [f for f in found if f.rule == rule_id]
+    assert hits, f"{rule_id} did not fire; findings: {found}"
+    assert _bad_line(src) in {f.line for f in hits}, (
+        f"{rule_id} fired on {[f.line for f in hits]}, "
+        f"expected line {_bad_line(src)}"
+    )
+
+
+@pytest.mark.parametrize(
+    "rule_id,path,src",
+    [(rid, p, s) for rid, cases in GOOD.items() for p, s in cases],
+    ids=[f"{rid}-{i}" for rid, cases in GOOD.items()
+         for i, _ in enumerate(cases)],
+)
+def test_good_twin_clean(rule_id, path, src):
+    hits = [f for f in _findings(src, path) if f.rule == rule_id]
+    assert not hits, f"good twin flagged: {[f.render() for f in hits]}"
+
+
+# ---------------------------------------------------------------------------
+# path scoping and exemptions
+# ---------------------------------------------------------------------------
+def test_compat_shims_are_exempt_from_their_own_rules():
+    """The helper a rule protects may use the raw API it polices."""
+    shard_src = BAD["raw-shard-map"][0][1]
+    assert not [f for f in _findings(
+        shard_src, "src/repro/distributed/sharding.py")
+        if f.rule == "raw-shard-map"]
+    mesh_src = BAD["raw-mesh"][0][1]
+    assert not [f for f in _findings(mesh_src, "src/repro/launch/mesh.py")
+                if f.rule == "raw-mesh"]
+
+
+def test_dtype_rule_only_polices_packed_key_modules():
+    src = BAD["dtype-discipline"][0][1]
+    assert not [f for f in _findings(src, "src/repro/engine/policies.py")
+                if f.rule == "dtype-discipline"]
+    assert not [f for f in _findings(src, "tests/test_build.py")
+                if f.rule == "dtype-discipline"]
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+_SUPPRESSED = """\
+import jax
+
+@jax.jit
+def step(x):
+    print(x)  # repro-lint: disable=tracer-leak
+    return x
+"""
+
+_SUPPRESSED_NEXT_LINE = """\
+import jax
+
+@jax.jit
+def step(x):
+    # repro-lint: disable=tracer-leak
+    print(x)
+    return x
+"""
+
+_SUPPRESSED_FILE = """\
+# repro-lint: disable-file=tracer-leak
+import jax
+
+@jax.jit
+def step(x):
+    print(x)
+    return x
+"""
+
+
+@pytest.mark.parametrize("src", [_SUPPRESSED, _SUPPRESSED_NEXT_LINE,
+                                 _SUPPRESSED_FILE],
+                         ids=["trailing", "own-line", "file-wide"])
+def test_suppression_comment_silences(src):
+    assert not [f for f in _findings(src, "src/repro/engine/stages.py")
+                if f.rule == "tracer-leak"]
+
+
+def test_suppression_is_per_rule_and_optional():
+    # a different rule's suppression does not silence tracer-leak
+    src = _SUPPRESSED.replace("disable=tracer-leak", "disable=raw-mesh")
+    assert [f for f in _findings(src, "src/repro/engine/stages.py")
+            if f.rule == "tracer-leak"]
+    # and analyze_source can ignore suppressions outright
+    assert [f for f in analyze_source(
+        _SUPPRESSED, path="src/repro/engine/stages.py",
+        respect_suppressions=False) if f.rule == "tracer-leak"]
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    found = _findings("def broken(:\n", "src/repro/core/oops.py")
+    assert [f for f in found if f.rule == "syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# baseline + CLI contract
+# ---------------------------------------------------------------------------
+_VIOLATION = """\
+import jax
+
+@jax.jit
+def step(x):
+    print(x)
+    return x
+"""
+
+
+def _tmp_repo(tmp_path: Path) -> Path:
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "bad.py").write_text(_VIOLATION, encoding="utf-8")
+    return tmp_path
+
+
+def test_cli_exit_codes_and_baseline_lifecycle(tmp_path, capsys):
+    root = _tmp_repo(tmp_path)
+    argv = ["src", "--root", str(root)]
+
+    # fresh violation, no baseline -> fail
+    assert cli_main(argv) == 1
+    assert "[tracer-leak]" in capsys.readouterr().out
+
+    # grandfather it -> pass
+    assert cli_main([*argv, "--write-baseline"]) == 0
+    assert cli_main(argv) == 0
+    assert "1 baselined" in capsys.readouterr().out.splitlines()[-1]
+
+    # fix the violation -> the baseline entry is stale -> fail again
+    (root / "src" / "bad.py").write_text(
+        _VIOLATION.replace("print(x)", "pass"), encoding="utf-8")
+    assert cli_main(argv) == 1
+    assert "STALE" in capsys.readouterr().out
+
+
+def test_baseline_requires_justifications(tmp_path):
+    p = tmp_path / "analysis-baseline.json"
+    p.write_text(
+        '{"findings": [{"path": "a.py", "line": 1, "rule": "raw-mesh",'
+        ' "justification": ""}]}',
+        encoding="utf-8",
+    )
+    with pytest.raises(ValueError, match="justification"):
+        load_baseline(p)
+
+
+def test_baseline_round_trip(tmp_path):
+    root = _tmp_repo(tmp_path)
+    findings = scan_paths(["src"], root)
+    assert findings
+    p = tmp_path / "analysis-baseline.json"
+    write_baseline(p, findings, justification="test fixture")
+    loaded = load_baseline(p)
+    new, old, stale = split_by_baseline(findings, loaded)
+    assert not new and not stale
+    assert len(old) == len(findings)
+
+
+def test_repo_baseline_matches_fresh_scan():
+    """The CI gate itself: a fresh scan of the repo agrees exactly with the
+    checked-in baseline — no new findings, no stale entries."""
+    baseline = load_baseline(REPO_ROOT / "analysis-baseline.json")
+    findings = scan_paths(["src", "tests", "benchmarks"], REPO_ROOT)
+    new, _old, stale = split_by_baseline(findings, baseline)
+    assert not new, "unbaselined findings:\n" + "\n".join(
+        f.render() for f in new)
+    assert not stale, f"stale baseline entries: {stale}"
+
+
+def test_list_rules_covers_registry(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in RULE_REGISTRY:
+        assert rid in out

@@ -8,7 +8,7 @@ import pytest
 from hypothesis import given, strategies as st
 
 from repro.core import matrix_build, types
-from repro.core.build import build_window, dedup_sorted, lex_sort, vector_build
+from repro.core.build import build_window, lex_sort, vector_build
 
 
 def dense_ref(src, dst, n, vals=None):

@@ -1,9 +1,7 @@
 """GraphBLAS op set vs dense numpy oracles + semiring properties."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, strategies as st
 
 from repro.core import from_dense, ops, types

@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.core import analytics
 from repro.core.build import matrix_build
-from repro.core.window import WindowConfig, process_batch
+from repro.core.window import WindowConfig
 from repro.launch.ingest import make_exact_ingest_step, run_paper_mode
 from repro.launch.mesh import make_local_mesh
 

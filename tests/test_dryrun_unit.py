@@ -1,7 +1,6 @@
 """Dry-run machinery unit tests (no 512-device init): HLO collective
 parsing, cell construction, roofline arithmetic."""
 
-import jax.numpy as jnp
 
 from repro.launch.dryrun import parse_collective_bytes
 

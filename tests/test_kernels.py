@@ -1,7 +1,6 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
 (per-kernel allclose), plus integration through the core/build path."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -17,7 +17,6 @@ from repro.models.transformer import (
     forward,
     init_transformer,
     lm_loss,
-    make_empty_cache,
     prefill,
 )
 

@@ -70,9 +70,11 @@ def test_close_from_another_thread_unblocks_waiting_consumer():
     empty queue; the consumer must wake and stop, not hang forever."""
     import threading
 
+    release = threading.Event()
+
     def slow_gen():
         yield 0
-        time.sleep(60)  # the consumer will be parked waiting for item 2
+        release.wait(60)  # the consumer will be parked waiting for item 2
         yield 1
 
     pf = BoundedPrefetcher(slow_gen(), depth=2)
@@ -86,11 +88,17 @@ def test_close_from_another_thread_unblocks_waiting_consumer():
     t = threading.Thread(target=consumer, daemon=True)
     t.start()
     time.sleep(0.2)  # consumer got item 0 and is now blocked
-    # watchdog thread: close() itself joins the (sleeping) worker with a
+    # watchdog thread: close() itself joins the (stalled) worker with a
     # bounded timeout, so it runs off the assertion path
     threading.Thread(target=pf.close, daemon=True).start()
     assert done.wait(timeout=2.0)
     assert got == [0]
+    # un-stall the producer so the worker exits promptly (close() cannot
+    # interrupt a generator blocked inside its own body) and join it —
+    # otherwise the thread-leak fixture rightly flags the worker
+    release.set()
+    pf._thread.join(timeout=2.0)
+    assert not pf._thread.is_alive()
 
 
 def test_transform_error_reraises_after_drained_items():

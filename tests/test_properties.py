@@ -7,7 +7,6 @@ order-invariant, and reductions are monoid homomorphisms — so these are
 tested as laws, not examples.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
