@@ -26,11 +26,12 @@ RESULTS_DIR = Path(__file__).parent / "results_fig2"
 def measure(window_log2: int = 17, windows_per_batch: int = 64,
             n_batches: int = 4, thread_pairs=(1, 2, 4),
             anonymization: str = "feistel", policy: str = "double_buffered",
-            reps: int = 1) -> list[dict]:
+            reps: int = 1, build_kernel: bool = False) -> list[dict]:
     """The raw per-row measurements; ``run``/``run_json`` format these."""
     cfg = WindowConfig(window_log2=window_log2,
                        windows_per_batch=windows_per_batch,
-                       anonymization=anonymization)
+                       anonymization=anonymization,
+                       build_kernel=build_kernel)
     # Build+merge only in the timed step, like the paper (no analytics).
     engine = TrafficEngine(cfg, policy=policy,
                            stages=("anonymize", "build", "merge"),
@@ -39,6 +40,8 @@ def measure(window_log2: int = 17, windows_per_batch: int = 64,
     # default-policy rows keep their historical names so EXPERIMENTS.md
     # renders stay comparable release to release
     tag = "" if policy == "double_buffered" else f"_{policy}"
+    if build_kernel:
+        tag += "_build_kernel"
     records = []
     for pairs in thread_pairs:
         # `pairs` producer/consumer pairs: workload scales with pairs; on
@@ -77,6 +80,7 @@ def run_json(policy: str, **kw) -> dict:
     return {
         "suite": "fig2_graphblas_io",
         "policy": policy,
+        "build_kernel": kw.get("build_kernel", False),
         "geometry": {
             "window_log2": kw.get("window_log2", 17),
             "windows_per_batch": kw.get("windows_per_batch", 64),
@@ -100,6 +104,9 @@ def main(argv=None) -> int:
     ap.add_argument("--reps", type=int, default=1,
                     help="repeat each row, keep the best rate "
                          "(noise guard on shared hosts)")
+    ap.add_argument("--build-kernel", action="store_true",
+                    help="route builds through the fused Pallas kernel "
+                         "(kernels/build_fused)")
     ap.add_argument("--json-out", default=None,
                     help="write the record here (default "
                          "benchmarks/results_fig2/fig2_graphblas_io_"
@@ -115,12 +122,14 @@ def main(argv=None) -> int:
     if args.batches is not None:
         kw["n_batches"] = args.batches
     kw["reps"] = args.reps
+    kw["build_kernel"] = args.build_kernel
     record = run_json(args.policy, **kw)
     # --quick defaults to a _quick artifact so a CI-sized run never
     # clobbers a recorded sweep; an explicit --json-out always wins
-    default_name = (f"fig2_graphblas_io_{args.policy}_quick.json"
+    ktag = "_build_kernel" if args.build_kernel else ""
+    default_name = (f"fig2_graphblas_io_{args.policy}{ktag}_quick.json"
                     if args.quick else
-                    f"fig2_graphblas_io_{args.policy}.json")
+                    f"fig2_graphblas_io_{args.policy}{ktag}.json")
     out = (Path(args.json_out) if args.json_out
            else RESULTS_DIR / default_name)
     out.parent.mkdir(parents=True, exist_ok=True)

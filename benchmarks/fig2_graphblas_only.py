@@ -10,22 +10,36 @@ exposes ONE CPU core, so the paper's process-scaling axis is emulated by
 running N instances' workloads sequentially and reporting the aggregate
 (per-instance contention is zero by construction; see EXPERIMENTS.md for
 the honest read).  The per-core rate is the comparable number.
+
+``--build-kernel`` routes the per-window builds through the fused Pallas
+kernel (``kernels/build_fused``); stats are bit-identical, so the two
+recorded JSONs (``fig2_graphblas_only.json`` vs
+``fig2_graphblas_only_build_kernel.json``) are a pure before/after on the
+build path.  ``--json-out``/``main`` mirror ``fig2_graphblas_io.py``.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 from repro.core.window import WindowConfig
 from repro.engine import TrafficEngine
 
+RESULTS_DIR = Path(__file__).parent / "results_fig2"
 
-def run(window_log2: int = 17, windows_per_batch: int = 64,
-        n_batches: int = 4, instances=(1, 2, 4, 8),
-        anonymization: str = "feistel"):
+
+def measure(window_log2: int = 17, windows_per_batch: int = 64,
+            n_batches: int = 4, instances=(1, 2, 4, 8),
+            anonymization: str = "feistel",
+            build_kernel: bool = False) -> list[dict]:
+    """The raw per-row measurements; ``run``/``run_json`` format these."""
     cfg = WindowConfig(window_log2=window_log2,
                        windows_per_batch=windows_per_batch,
-                       anonymization=anonymization)
+                       anonymization=anonymization,
+                       build_kernel=build_kernel)
     # The paper times build+merge only — leave the analytics stage out of
     # the jitted step so the measured rate is the paper's quantity.
     engine = TrafficEngine(cfg, policy="blocking",
@@ -34,7 +48,10 @@ def run(window_log2: int = 17, windows_per_batch: int = 64,
     # warmup/compile once; the jitted stage graph is shared by every run
     engine.run("uniform", n_batches=1, seed=99)
 
-    rows = []
+    # default rows keep their historical names so recorded sweeps stay
+    # comparable; the kernel rows carry an explicit tag
+    tag = "_build_kernel" if build_kernel else ""
+    records = []
     for n_inst in instances:
         t0 = time.perf_counter()
         total_pkts = 0
@@ -44,6 +61,84 @@ def run(window_log2: int = 17, windows_per_batch: int = 64,
         dt = time.perf_counter() - t0
         rate = total_pkts / dt
         us_per_window = dt / (n_inst * n_batches * windows_per_batch) * 1e6
-        rows.append((f"fig2_graphblas_only_x{n_inst}", us_per_window,
-                     f"{rate:,.0f}_pkt_per_s"))
-    return rows
+        records.append({
+            "name": f"fig2_graphblas_only{tag}_x{n_inst}",
+            "us_per_window": us_per_window,
+            "pkt_per_s": rate,
+        })
+    return records
+
+
+def run(window_log2: int = 17, windows_per_batch: int = 64,
+        n_batches: int = 4, instances=(1, 2, 4, 8),
+        anonymization: str = "feistel", build_kernel: bool = False):
+    """Harness rows (name, us_per_call, derived-CSV cell)."""
+    return [
+        (r["name"], r["us_per_window"], f"{r['pkt_per_s']:,.0f}_pkt_per_s")
+        for r in measure(window_log2=window_log2,
+                         windows_per_batch=windows_per_batch,
+                         n_batches=n_batches, instances=instances,
+                         anonymization=anonymization,
+                         build_kernel=build_kernel)
+    ]
+
+
+def run_json(build_kernel: bool = False, **kw) -> dict:
+    """One build-path's curve as a self-describing JSON record."""
+    return {
+        "suite": "fig2_graphblas_only",
+        "build_kernel": build_kernel,
+        "geometry": {
+            "window_log2": kw.get("window_log2", 17),
+            "windows_per_batch": kw.get("windows_per_batch", 64),
+            "n_batches": kw.get("n_batches", 4),
+        },
+        "rows": measure(build_kernel=build_kernel, **kw),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--build-kernel", action="store_true",
+                    help="route builds through the fused Pallas kernel "
+                         "(kernels/build_fused)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small windows: fast CI-sized run")
+    ap.add_argument("--window-log2", type=int, default=None)
+    ap.add_argument("--windows-per-batch", type=int, default=None)
+    ap.add_argument("--batches", type=int, default=None)
+    ap.add_argument("--json-out", default=None,
+                    help="write the record here (default benchmarks/"
+                         "results_fig2/fig2_graphblas_only"
+                         "[_build_kernel][_quick].json)")
+    args = ap.parse_args(argv)
+
+    kw = (dict(window_log2=12, windows_per_batch=8, n_batches=2,
+               instances=(1, 2)) if args.quick else {})
+    if args.window_log2 is not None:
+        kw["window_log2"] = args.window_log2
+    if args.windows_per_batch is not None:
+        kw["windows_per_batch"] = args.windows_per_batch
+    if args.batches is not None:
+        kw["n_batches"] = args.batches
+    record = run_json(build_kernel=args.build_kernel, **kw)
+    # --quick defaults to a _quick artifact so a CI-sized run never
+    # clobbers a recorded sweep; an explicit --json-out always wins
+    tag = "_build_kernel" if args.build_kernel else ""
+    default_name = (f"fig2_graphblas_only{tag}_quick.json" if args.quick
+                    else f"fig2_graphblas_only{tag}.json")
+    out = (Path(args.json_out) if args.json_out
+           else RESULTS_DIR / default_name)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(record, indent=2) + "\n")
+
+    print("name,us_per_call,derived")
+    for r in record["rows"]:
+        print(f"{r['name']},{r['us_per_window']:.1f},"
+              f"{r['pkt_per_s']:,.0f}_pkt_per_s")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

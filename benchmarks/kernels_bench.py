@@ -1,13 +1,36 @@
 """Pallas-kernel microbenches (interpret mode on CPU — relative numbers;
-the BlockSpec tiling is the TPU story, validated structurally)."""
+the BlockSpec tiling is the TPU story, validated structurally).
+
+The build-kernel rows decompose `matrix_build`'s hot loop so the fused
+kernel's before/after is auditable stage by stage:
+
+  sort_two_argsort   — the oracle's sort (two stable argsorts + gathers)
+  sort_variadic      — the fused path's CPU sort stage (one lax.sort)
+  dedup_jnp          — count_dedup_sorted on pre-sorted streams
+  dedup_compact_pallas — the fused dedup+compact kernel on the same streams
+  build_jnp          — whole matrix_build, use_kernel=False (the before)
+  build_fused        — whole fused_build (the after)
+  merge_sort_3argsort / merge_sort_variadic — the ewise_add merge-path
+    sort before/after the lex_sort valid= fix (validity as a third key)
+
+``python -m benchmarks.kernels_bench`` records the rows as JSON under
+``benchmarks/results_kernels/`` (mirroring ``results_fig2/``); ``--quick``
+shrinks n and writes a ``*_quick.json`` artifact so CI-sized runs never
+clobber a recorded sweep.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+RESULTS_DIR = Path(__file__).parent / "results_kernels"
 
 
 def _time(fn, *args, iters=3):
@@ -18,7 +41,105 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6, out
 
 
-def run():
+def _build_rows(n_log2: int, iters: int = 3):
+    """The sort/dedup/fused decomposition at one window size."""
+    from repro.core.build import (
+        count_dedup_sorted,
+        lex_sort,
+        matrix_build,
+    )
+    from repro.kernels.build_fused import kernel as fused_kernel
+    from repro.kernels.build_fused import ops as fused_ops
+
+    rng = np.random.default_rng(0)
+    n = 1 << n_log2
+    tag = f"2^{n_log2}"
+    rows_a = jnp.asarray(rng.integers(0, 1 << 32, n, dtype=np.uint32))
+    cols_a = jnp.asarray(rng.integers(0, 1 << 32, n, dtype=np.uint32))
+    out = []
+
+    # -- sort-only: the oracle's two argsorts vs the fused variadic sort
+    us_two, (sr, sc) = _time(
+        jax.jit(lambda r, c: lex_sort(r, c)), rows_a, cols_a, iters=iters
+    )
+    us_var, _ = _time(
+        jax.jit(lambda r, c: jax.lax.sort((r, c), num_keys=2,
+                                          is_stable=True)),
+        rows_a, cols_a, iters=iters,
+    )
+    out.append((f"sort_two_argsort_{tag}", us_two, "oracle_sort"))
+    out.append((f"sort_variadic_{tag}", us_var,
+                f"{us_two / us_var:.2f}x_vs_argsort"))
+
+    # -- dedup-only on the pre-sorted streams
+    nv = jnp.int32(n)
+    us_dj, _ = _time(
+        jax.jit(lambda r, c: count_dedup_sorted(r, c, jnp.int32(n))),
+        sr, sc, iters=iters,
+    )
+    iota = jnp.arange(n, dtype=jnp.int32)
+    key_change = jnp.concatenate(
+        [(sr[:-1] != sr[1:]) | (sc[:-1] != sc[1:]),
+         jnp.ones((1,), jnp.bool_)]
+    )
+    closes = ((iota < nv) & (key_change | (iota == nv - 1))).astype(jnp.int32)
+    starts = jnp.concatenate([jnp.ones((1,), jnp.int32), closes[:-1]])
+    ones = jnp.ones((n,), jnp.int32)
+    bs = max(128, -(-n // 128) * 128) if n <= 131072 else 131072
+    us_dk, _ = _time(
+        lambda r, c, v, s, cl: fused_kernel.dedup_compact(
+            r, c, v, s, cl, block_size=bs, interpret=True
+        ),
+        sr, sc, ones, starts, closes, iters=iters,
+    )
+    out.append((f"dedup_jnp_{tag}", us_dj, "oracle_dedup"))
+    out.append((f"dedup_compact_pallas_{tag}", us_dk,
+                f"{us_dj / us_dk:.2f}x_vs_jnp"))
+
+    # -- the whole build: before (jnp oracle) / after (fused kernel)
+    us_bj, _ = _time(
+        lambda r, c: matrix_build(r, c), rows_a, cols_a, iters=iters
+    )
+    us_bf, _ = _time(
+        lambda r, c: fused_ops.fused_build(r, c), rows_a, cols_a,
+        iters=iters,
+    )
+    rate = n / (us_bf / 1e6)
+    out.append((f"build_jnp_{tag}", us_bj, "oracle_build"))
+    out.append((f"build_fused_{tag}", us_bf,
+                f"{us_bj / us_bf:.2f}x_vs_jnp_{rate:,.0f}_pkt_per_s"))
+
+    # -- the merge-path sort (ewise_add): 3-argsort pre-pass vs fused
+    # variadic 3-key sort over a 2n concat with interleaved validity
+    m = 2 * n
+    rng2 = np.random.default_rng(1)
+    mr = jnp.asarray(rng2.integers(0, 1 << 32, m, dtype=np.uint32))
+    mc = jnp.asarray(rng2.integers(0, 1 << 32, m, dtype=np.uint32))
+    mv = jnp.asarray(rng2.integers(0, 100, m).astype(np.int32))
+    valid = jnp.asarray(rng2.random(m) < 0.5)
+
+    def three_argsort(r, c, v, val):
+        perm0 = jnp.argsort(~val, stable=True)
+        r, c, v, val = r[perm0], c[perm0], v[perm0], val[perm0]
+        perm1 = jnp.argsort(c, stable=True)
+        perm2 = jnp.argsort(r[perm1], stable=True)
+        perm = perm1[perm2]
+        return r[perm], c[perm], v[perm], val[perm]
+
+    def variadic(r, c, v, val):
+        from repro.core.build import lex_sort as ls
+
+        return ls(r, c, v, val, valid=val)
+
+    us_m3, _ = _time(jax.jit(three_argsort), mr, mc, mv, valid, iters=iters)
+    us_mv, _ = _time(jax.jit(variadic), mr, mc, mv, valid, iters=iters)
+    out.append((f"merge_sort_3argsort_2^{n_log2 + 1}", us_m3, "old_merge"))
+    out.append((f"merge_sort_variadic_2^{n_log2 + 1}", us_mv,
+                f"{us_m3 / us_mv:.2f}x_vs_3argsort"))
+    return out
+
+
+def run(n_log2: int = 17, iters: int = 3):
     from repro.kernels.segsum import ops as segsum_ops
     from repro.kernels.spmm_coo import ops as spmm_ops
     from repro.kernels.spmm_coo.ref import spmm_coo_ref
@@ -60,4 +181,52 @@ def run():
         er, ec, ev, x,
     )
     rows.append(("spmm_coo_pallas_64k_edges", us_k, f"xla_ref_{us_r:.0f}us"))
+
+    rows.extend(_build_rows(n_log2, iters=iters))
     return rows
+
+
+def run_json(n_log2: int = 17, iters: int = 3) -> dict:
+    """The build-kernel decomposition as a self-describing JSON record."""
+    return {
+        "suite": "kernels_bench",
+        "geometry": {"n_log2": n_log2, "iters": iters},
+        "rows": [
+            {"name": name, "us": us, "derived": derived}
+            for name, us, derived in _build_rows(n_log2, iters=iters)
+        ],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small window: fast CI-sized run")
+    ap.add_argument("--n-log2", type=int, default=None,
+                    help="window size exponent (default 17, the paper's)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--json-out", default=None,
+                    help="write the record here (default benchmarks/"
+                         "results_kernels/kernels_bench[_quick].json)")
+    args = ap.parse_args(argv)
+
+    n_log2 = args.n_log2 if args.n_log2 is not None else (
+        12 if args.quick else 17
+    )
+    record = run_json(n_log2=n_log2, iters=args.iters)
+    default_name = ("kernels_bench_quick.json" if args.quick
+                    else "kernels_bench.json")
+    out = (Path(args.json_out) if args.json_out
+           else RESULTS_DIR / default_name)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(record, indent=2) + "\n")
+
+    print("name,us_per_call,derived")
+    for r in record["rows"]:
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,10 @@
 """Roofline table: reads the dry-run JSON cache and renders EXPERIMENTS.md
 §Roofline rows (all three terms, dominant bottleneck, MODEL_FLOPS ratio).
 
+Also tracks the gap to the paper's 18M pkt/s peak from the recorded
+``results_kernels/kernels_bench.json`` fused-build row, so the build-path
+trajectory lives next to the mesh roofline in one table.
+
 Run after  PYTHONPATH=src python -m repro.launch.dryrun .
 """
 
@@ -10,6 +14,33 @@ import json
 from pathlib import Path
 
 RESULTS = Path(__file__).parent / "results"
+RESULTS_KERNELS = Path(__file__).parent / "results_kernels"
+
+# Paper Fig. 2 peak: 18M pkt/s aggregate over 8 ARM cores (2.25M/core).
+PAPER_PEAK_PKT_PER_S = 18e6
+PAPER_PER_CORE_PKT_PER_S = PAPER_PEAK_PKT_PER_S / 8
+
+
+def fused_build_rows():
+    """Gap-to-18M rows from the recorded fused-build microbench (empty if
+    no sweep has been recorded yet — the roofline table degrades, never
+    fails, without one)."""
+    path = RESULTS_KERNELS / "kernels_bench.json"
+    if not path.exists():
+        return []
+    record = json.loads(path.read_text())
+    rows = []
+    for r in record["rows"]:
+        if not r["name"].startswith("build_fused_"):
+            continue
+        n_log2 = int(r["name"].rsplit("^", 1)[1])
+        rate = (1 << n_log2) / (r["us"] / 1e6)
+        rows.append((
+            f"{r['name']}_gap_to_18M",
+            r["us"],
+            f"{rate / PAPER_PER_CORE_PKT_PER_S:.2f}x_paper_core_rate",
+        ))
+    return rows
 
 
 def load_records(mesh: str | None = None):
@@ -54,8 +85,9 @@ def fmt_table(recs, *, only_ok=True) -> str:
 
 
 def run():
-    """benchmarks.run hook: one row per completed dry-run cell."""
-    rows = []
+    """benchmarks.run hook: one row per completed dry-run cell, plus the
+    recorded fused-build gap-to-18M trajectory."""
+    rows = fused_build_rows()
     for r in load_records():
         if r.get("status") != "ok":
             rows.append((

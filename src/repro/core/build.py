@@ -48,17 +48,22 @@ def lex_sort(rows, cols, *payloads, valid=None):
     yields (row, col) lexicographic order without 64-bit key packing.
 
     If ``valid`` is given (bool mask over entries, possibly interleaved —
-    e.g. after concatenating two padded matrices), a third pre-pass sorts
-    valid-before-invalid within equal keys, so that real entries whose key
-    happens to equal ``SENTINEL`` (255.255.255.255 is a legal address) still
-    land before padding and the "leading nnz are valid" invariant holds.
+    e.g. after concatenating two padded matrices), valid-before-invalid
+    ordering within equal keys is folded into the *same* sort as a third
+    key (one fused variadic ``lax.sort`` instead of the former 3-argsort
+    pre-pass — the merge path's dominant cost), so that real entries whose
+    key happens to equal ``SENTINEL`` (255.255.255.255 is a legal address)
+    still land before padding and the "leading nnz are valid" invariant
+    holds.  Both forms are stable, so their output order is identical.
 
     Returns (rows, cols, *payloads) permuted.
     """
     if valid is not None:
-        perm0 = jnp.argsort(~valid, stable=True)
-        rows, cols = rows[perm0], cols[perm0]
-        payloads = tuple(p[perm0] for p in payloads)
+        invalid = (~valid).astype(jnp.uint32)
+        out = jax.lax.sort(
+            (rows, cols, invalid, *payloads), num_keys=3, is_stable=True
+        )
+        return (out[0], out[1], *out[3:])
     perm1 = jnp.argsort(cols, stable=True)
     perm2 = jnp.argsort(rows[perm1], stable=True)
     perm = perm1[perm2]
@@ -177,6 +182,12 @@ def matrix_build(
     with ``count_fast_path`` that case skips the value payload entirely
     (run lengths are derived from run-head positions).
     Output capacity equals input length (worst case: all coordinates unique).
+
+    ``use_kernel=True`` routes the whole sort + dedup-accumulate + compact
+    through the fused Pallas kernel (``kernels/build_fused``) for the
+    ``plus`` dup monoid — bit-identical to the jnp path below, which is its
+    oracle.  Other monoids keep the jnp pipeline (where ``use_kernel``
+    still routes the segment reduction through ``kernels/segsum``).
     """
     rows = rows.astype(jnp.uint32)
     cols = cols.astype(jnp.uint32)
@@ -192,6 +203,17 @@ def matrix_build(
     valid = iota < n_valid
     rows = jnp.where(valid, rows, SENTINEL)
     cols = jnp.where(valid, cols, SENTINEL)
+
+    if use_kernel and dup.name == "plus":
+        from repro.kernels.build_fused import ops as fused_ops
+
+        r, c, v, nnz = fused_ops.fused_build(
+            rows, cols, None if counting else vals,
+            n_valid=n_valid, dtype=dtype,
+        )
+        return HypersparseMatrix(
+            rows=r, cols=c, vals=v, nnz=nnz, nrows=nrows, ncols=ncols
+        )
 
     if counting and count_fast_path and dup.name == "plus":
         srows, scols = lex_sort(rows, cols)

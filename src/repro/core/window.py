@@ -39,6 +39,9 @@ class WindowConfig:
     anonymization_key: int = 0xC0FFEE
     cap_max_log2: int = 19  # merged-matrix capacity ceiling (2^19 = 4x window)
     val_dtype: str = "int32"
+    # route window builds through the fused Pallas kernel
+    # (kernels/build_fused); bit-identical to the jnp path by contract
+    build_kernel: bool = False
 
     @property
     def window_size(self) -> int:
@@ -56,7 +59,8 @@ def process_window(packets: jax.Array, cfg: WindowConfig) -> HypersparseMatrix:
     """Anonymize one window [(n, 2) uint32] and build its traffic matrix."""
     pkts = anon.anonymize_packets(packets, cfg.anonymization_key,
                                   cfg.anonymization)
-    return build_window(pkts, dtype=jnp.dtype(cfg.val_dtype))
+    return build_window(pkts, dtype=jnp.dtype(cfg.val_dtype),
+                        use_kernel=cfg.build_kernel)
 
 
 def process_windows_batched(packets: jax.Array,
@@ -79,7 +83,8 @@ def build_flow_windows(flows: jax.Array, cfg: WindowConfig,
     (``value_col`` 3 = packet counts, 2 = byte counts)."""
     dtype = jnp.dtype(cfg.val_dtype)
     return jax.vmap(
-        lambda f: build_flow_window(f, value_col=value_col, dtype=dtype)
+        lambda f: build_flow_window(f, value_col=value_col, dtype=dtype,
+                                    use_kernel=cfg.build_kernel)
     )(flows)
 
 

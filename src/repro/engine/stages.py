@@ -78,7 +78,9 @@ def _anonymize(ctx, cfg):
 @register_stage("build", requires=("packets",), provides=("windows",))
 def _build(ctx, cfg):
     dtype = jnp.dtype(cfg.val_dtype)
-    windows = jax.vmap(lambda p: build_window(p, dtype=dtype))(ctx["packets"])
+    windows = jax.vmap(
+        lambda p: build_window(p, dtype=dtype, use_kernel=cfg.build_kernel)
+    )(ctx["packets"])
     return {"windows": windows}
 
 

@@ -6,6 +6,9 @@ Each kernel lives in its own subpackage with three files:
   ref.py    — the pure-jnp oracle the kernel is tested against.
 
 Kernels:
+  build_fused — the whole GrB_Matrix_build fused: single-block LSD radix
+              sort over (row, col) byte digits + run dedup-accumulate +
+              in-kernel head compaction with SMEM cursor/value carries.
   segsum    — sorted-run segment sum with cross-block carry: the
               GrB_Matrix_build duplicate-accumulation hot loop.
   spmm_coo  — 2D-blocked COO SpMM (scatter-add as one-hot MXU matmul):

@@ -1,0 +1,1 @@
+"""Fused GrB_Matrix_build kernel: radix sort + dedup-accumulate + compact."""

@@ -1,0 +1,155 @@
+"""Public wrapper for the fused build kernel (jit'd, CPU interpret fallback).
+
+`fused_build` is the drop-in for `matrix_build`'s sort+dedup+compact body
+under the `plus` dup monoid, returning the same `(rows, cols, vals, nnz)`
+contract bit for bit.  The sort stage is mode-switched:
+
+  * ``radix``  — the single-block Pallas LSD radix kernel (the TPU story;
+    bounded by VMEM, see `RADIX_MAX_BYTES`);
+  * ``xla``    — one variadic stable `lax.sort` over (rows, cols) with
+    num_keys=2 (the CPU/interpret fallback: one sort instead of the oracle's
+    two argsort+gather passes — roughly half the sort cost — because
+    interpret-mode per-bin radix loops cannot beat XLA's native sort).
+
+Both are *stable* lexicographic sorts, so their output is identical; the
+fused dedup+compact Pallas kernel then runs in either mode (interpret on
+CPU hosts), with block size chosen like `segsum`: whole-array single block
+under interpret (grid-step overhead dominates there), `DEFAULT_BLOCK`
+tiles on real TPUs (VMEM residency dominates there).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.build_fused import kernel
+from repro.core.hypersparse import SENTINEL
+
+# single-block radix VMEM budget: operand streams must fit comfortably
+RADIX_MAX_BYTES = 4 << 20
+
+
+def _pad_to(arr, m, fill):
+    n = arr.shape[0]
+    if m == n:
+        return arr
+    return jnp.concatenate(
+        [arr, jnp.full((m - n,), fill, arr.dtype)]
+    )
+
+
+def _pick_block(n: int, block_size: int | None, interpret: bool) -> int:
+    if block_size is not None:
+        return block_size
+    if interpret or n <= kernel.DEFAULT_BLOCK:
+        # one grid step: interpret-mode overhead is per step, not per element
+        return max(128, -(-n // 128) * 128)
+    return kernel.DEFAULT_BLOCK
+
+
+def _resolve_sort_mode(sort_mode, interpret, n, n_streams):
+    if sort_mode is not None:
+        return sort_mode
+    if interpret or n * n_streams * 4 > RADIX_MAX_BYTES:
+        return "xla"
+    return "radix"
+
+
+def _sort_stage(rows, cols, payloads, sort_mode, interpret):
+    if sort_mode == "radix":
+        m = max(128, -(-rows.shape[0] // 128) * 128)
+        # SENTINEL-key padding sorts last (stability keeps it after any
+        # real SENTINEL entries, which were already in front of it)
+        padded = [
+            _pad_to(rows, m, SENTINEL),
+            _pad_to(cols, m, SENTINEL),
+        ] + [_pad_to(p, m, jnp.zeros((), p.dtype)) for p in payloads]
+        outs = kernel.radix_sort_pairs(*padded, interpret=interpret)
+        return tuple(o[: rows.shape[0]] for o in outs)
+    if sort_mode == "xla":
+        return jax.lax.sort(
+            (rows, cols, *payloads), num_keys=2, is_stable=True
+        )
+    raise ValueError(f"unknown sort_mode {sort_mode!r}")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dtype", "block_size", "sort_mode", "interpret"),
+)
+def fused_build(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array | None = None,
+    *,
+    n_valid=None,
+    dtype=jnp.int32,
+    block_size: int | None = None,
+    sort_mode: str | None = None,
+    interpret: bool | None = None,
+):
+    """Sorted-COO build: sort by (row, col), sum duplicates, compact heads.
+
+    ``vals=None`` is the counting build (values synthesized as the validity
+    mask inside the pipeline — no payload rides through the sort).  Returns
+    ``(rows, cols, vals, nnz)`` with unique sorted coordinates leading and
+    SENTINEL/zero padding after — bit-identical to the jnp oracle
+    (`ref.fused_build_ref` == `matrix_build`'s default path).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    rows = rows.astype(jnp.uint32)
+    cols = cols.astype(jnp.uint32)
+    n = rows.shape[0]
+    counting = vals is None
+    if n_valid is None:
+        n_valid = jnp.int32(n)
+    else:
+        n_valid = jnp.asarray(n_valid, dtype=jnp.int32)
+
+    # padding keys must sort last; validity stays a *prefix* through the
+    # stable sort, so post-sort masks are still position < n_valid
+    iota = jnp.arange(n, dtype=jnp.int32)
+    valid = iota < n_valid
+    rows = jnp.where(valid, rows, SENTINEL)
+    cols = jnp.where(valid, cols, SENTINEL)
+
+    n_streams = 2 if counting else 3
+    mode = _resolve_sort_mode(sort_mode, interpret, n, n_streams)
+    if counting:
+        srows, scols = _sort_stage(rows, cols, (), mode, interpret)
+        svals = valid.astype(dtype)  # run totals of 1s == run lengths
+    else:
+        srows, scols, svals = _sort_stage(
+            rows, cols, (vals,), mode, interpret
+        )
+        svals = jnp.where(valid, svals, jnp.zeros((), svals.dtype))
+
+    # run boundaries among the valid prefix, computed once in O(n):
+    # a run closes at i when the (row, col) key changes at i+1 or i is the
+    # last valid entry (a valid SENTINEL key must not merge into padding)
+    key_change = jnp.concatenate(
+        [
+            (srows[:-1] != srows[1:]) | (scols[:-1] != scols[1:]),
+            jnp.ones((1,), jnp.bool_),
+        ]
+    )
+    closes = (valid & (key_change | (iota == n_valid - 1))).astype(jnp.int32)
+    starts = jnp.concatenate([jnp.ones((1,), jnp.int32), closes[:-1]])
+
+    bs = _pick_block(n, block_size, interpret)
+    m = -(-n // bs) * bs
+    r_out, c_out, v_out, nnz = kernel.dedup_compact(
+        _pad_to(srows, m, SENTINEL),
+        _pad_to(scols, m, SENTINEL),
+        _pad_to(svals, m, jnp.zeros((), svals.dtype)),
+        _pad_to(starts, m, jnp.int32(0)),
+        _pad_to(closes, m, jnp.int32(0)),
+        block_size=bs,
+        interpret=interpret,
+    )
+    return r_out[:n], c_out[:n], v_out[:n], nnz[0]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused build kernel.
+
+The oracle *is* the existing `core.build` jnp pipeline (two stable argsorts
+-> run boundaries -> segment reduce / run-length count -> gather compact);
+the fused kernel must match it bit for bit, because a stable lexicographic
+sort has a unique output and the plus reduction over int32 runs is
+order-insensitive modulo 2^32 (and left-to-right for the kernel's scan,
+which is the same association the oracle's segment_sum uses on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types
+from repro.core.build import count_dedup_sorted, dedup_sorted, lex_sort
+from repro.core.hypersparse import SENTINEL
+
+
+def fused_build_ref(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array | None = None,
+    *,
+    n_valid=None,
+    dtype=jnp.int32,
+    dup: types.Monoid = types.PLUS_MONOID,
+):
+    """(rows, cols, vals, nnz) exactly as `matrix_build`'s jnp path emits.
+
+    vals=None is the counting build (run lengths, no payload through the
+    sort). Padding keys are forced to SENTINEL before sorting so they land
+    last; a *valid* entry whose key equals SENTINEL still precedes padding
+    because validity is a prefix and the sorts are stable.
+    """
+    rows = rows.astype(jnp.uint32)
+    cols = cols.astype(jnp.uint32)
+    n = rows.shape[0]
+    if n_valid is None:
+        n_valid = jnp.int32(n)
+    else:
+        n_valid = jnp.asarray(n_valid, dtype=jnp.int32)
+    valid = jnp.arange(n, dtype=jnp.int32) < n_valid
+    rows = jnp.where(valid, rows, SENTINEL)
+    cols = jnp.where(valid, cols, SENTINEL)
+    if vals is None:
+        srows, scols = lex_sort(rows, cols)
+        return count_dedup_sorted(srows, scols, n_valid, dtype)
+    srows, scols, svals = lex_sort(rows, cols, vals)
+    return dedup_sorted(srows, scols, svals, n_valid, dup)

@@ -96,10 +96,15 @@ def run_paper_mode(mode: str, *, window_log2: int = 17,
                    windows_per_batch: int = 64, n_batches: int = 8,
                    anonymization: str = "feistel", kind: str = "uniform",
                    use_kernel: bool = False):
-    """Run one Fig.-2 mode through the engine; returns its EngineReport."""
+    """Run one Fig.-2 mode through the engine; returns its EngineReport.
+
+    ``use_kernel=True`` routes the per-window builds through the fused
+    Pallas kernel (``kernels/build_fused``) — stats are bit-identical.
+    """
     cfg = WindowConfig(window_log2=window_log2,
                        windows_per_batch=windows_per_batch,
-                       anonymization=anonymization)
+                       anonymization=anonymization,
+                       build_kernel=use_kernel)
     policy = {"stream": "double_buffered", "blocking": "blocking"}.get(
         mode, mode
     )
@@ -135,7 +140,8 @@ def run_sinks(source: str, sink_names, *, mode: str = "blocking",
               n_batches: int | None = None,
               anonymization: str = "feistel",
               pcap_out: str = "anonymized.pcl",
-              anomaly_threshold: float = 3.0, seed: int = 0):
+              anomaly_threshold: float = 3.0, seed: int = 0,
+              use_kernel: bool = False):
     """Generic engine run: any source spec x sink list x policy.
 
     Geometry arguments left as None take the workload's defaults.  Returns
@@ -147,6 +153,7 @@ def run_sinks(source: str, sink_names, *, mode: str = "blocking",
         window_log2=window_log2 or geom["window_log2"],
         windows_per_batch=windows_per_batch or geom["windows_per_batch"],
         anonymization=anonymization,
+        build_kernel=use_kernel,
     )
     policy = {"stream": "double_buffered", "distributed": "sharded"}.get(
         mode, mode
@@ -212,6 +219,10 @@ def main(argv=None):
                          "runs (e.g. 2.5 for 8 windows)")
     ap.add_argument("--anonymization", default="feistel",
                     choices=["feistel", "cryptopan", "none"])
+    ap.add_argument("--build-kernel", action="store_true",
+                    help="route window builds through the fused Pallas "
+                         "build kernel (kernels/build_fused; interpret "
+                         "mode on CPU hosts) — stats are bit-identical")
     args = ap.parse_args(argv)
 
     source = args.source if args.source is not None else args.traffic
@@ -228,6 +239,7 @@ def main(argv=None):
             n_batches=args.batches, anonymization=args.anonymization,
             pcap_out=args.pcap_out,
             anomaly_threshold=args.anomaly_threshold,
+            use_kernel=args.build_kernel,
         )
         unit = "flows" if workload == "flow" else "pkts"
         print(f"[ingest/{workload}/{rep.policy}] {rep.packets:,} {unit}, "
@@ -256,6 +268,7 @@ def main(argv=None):
         windows_per_batch=args.windows_per_batch or 64,
         n_batches=args.batches or 8,
         anonymization=args.anonymization, kind=args.traffic,
+        use_kernel=args.build_kernel,
     )
     label = "GraphBLAS+IO" if args.mode != "blocking" else "GraphBLAS only"
     print(f"[ingest/{label}] {rep.packets:,} packets, "

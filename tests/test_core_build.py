@@ -126,6 +126,37 @@ def test_lex_sort_stability_and_validity(rng):
     assert got == want
 
 
+def test_lex_sort_valid_matches_three_argsort_reference(rng):
+    """Regression pin for the fused valid= sort: the single variadic
+    3-key sort must reproduce the former 3-argsort pre-pass permutation
+    exactly — both are stable, so the output order is uniquely determined:
+    (row, col) ascending, valid-before-invalid within equal keys, original
+    order within equal (key, validity).  Duplicate keys carry distinct
+    payloads so any stability break is visible."""
+    for seed in (0, 1, 2):
+        r = np.random.default_rng(seed)
+        rows = r.integers(0, 3, 128).astype(np.uint32)
+        cols = r.integers(0, 3, 128).astype(np.uint32)
+        valid = r.random(128) < 0.6
+        payload = np.arange(128, dtype=np.int32)  # original position
+
+        def ref_three_argsort(rows, cols, payload, valid):
+            perm0 = np.argsort(~valid, kind="stable")
+            rows, cols = rows[perm0], cols[perm0]
+            payload = payload[perm0]
+            perm1 = np.argsort(cols, kind="stable")
+            perm2 = np.argsort(rows[perm1], kind="stable")
+            perm = perm1[perm2]
+            return rows[perm], cols[perm], payload[perm]
+
+        got = lex_sort(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(payload), valid=jnp.asarray(valid))
+        want = ref_three_argsort(rows, cols, payload, valid)
+        for g, w, name in zip(got, want, ("rows", "cols", "payload")):
+            np.testing.assert_array_equal(np.asarray(g), w,
+                                          err_msg=f"seed={seed}:{name}")
+
+
 def test_vector_build(rng):
     idx = rng.integers(0, 100, 300).astype(np.uint32)
     vals = rng.integers(1, 5, 300).astype(np.int32)
