@@ -7,7 +7,11 @@ Peak there: 8M pkt/s on 8 ARM cores.
 ``--policy`` swaps the execution policy under the same workload, so the
 async-dispatch variants can be compared head to head on one host
 (``async_pipelined`` must meet or beat ``double_buffered`` — the overlap
-acceptance check).  ``--json-out`` records the rows for
+acceptance check).  ``--source`` swaps the producer: the default
+``uniform`` host generator is the NIC stand-in (host gen + H2D transfer),
+while ``device-uniform``/``device-zipf`` generate on device with zero H2D
+copies — the same windows, keyed per global window index, isolating what
+the produce path itself costs.  ``--json-out`` records the rows for
 ``render_experiments.py`` and the acceptance audit.
 """
 
@@ -18,7 +22,7 @@ import json
 from pathlib import Path
 
 from repro.core.window import WindowConfig
-from repro.engine import SyntheticSource, TrafficEngine
+from repro.engine import TrafficEngine, as_source
 
 RESULTS_DIR = Path(__file__).parent / "results_fig2"
 
@@ -26,7 +30,8 @@ RESULTS_DIR = Path(__file__).parent / "results_fig2"
 def measure(window_log2: int = 17, windows_per_batch: int = 64,
             n_batches: int = 4, thread_pairs=(1, 2, 4),
             anonymization: str = "feistel", policy: str = "double_buffered",
-            reps: int = 1, build_kernel: bool = False) -> list[dict]:
+            reps: int = 1, build_kernel: bool = False,
+            source: str = "uniform") -> list[dict]:
     """The raw per-row measurements; ``run``/``run_json`` format these."""
     cfg = WindowConfig(window_log2=window_log2,
                        windows_per_batch=windows_per_batch,
@@ -42,6 +47,8 @@ def measure(window_log2: int = 17, windows_per_batch: int = 64,
     tag = "" if policy == "double_buffered" else f"_{policy}"
     if build_kernel:
         tag += "_build_kernel"
+    if source != "uniform":
+        tag += "_" + str(source).replace("-", "_")
     records = []
     for pairs in thread_pairs:
         # `pairs` producer/consumer pairs: workload scales with pairs; on
@@ -50,8 +57,8 @@ def measure(window_log2: int = 17, windows_per_batch: int = 64,
         # against scheduler noise on a shared host.
         best = None
         for _ in range(max(reps, 1)):
-            src = SyntheticSource(
-                seed=0, n_batches=pairs * n_batches + 1,
+            src = as_source(
+                source, seed=0, n_batches=pairs * n_batches + 1,
                 windows_per_batch=windows_per_batch,
                 window_size=cfg.window_size,
             )
@@ -80,6 +87,7 @@ def run_json(policy: str, **kw) -> dict:
     return {
         "suite": "fig2_graphblas_io",
         "policy": policy,
+        "source": kw.get("source", "uniform"),
         "build_kernel": kw.get("build_kernel", False),
         "geometry": {
             "window_log2": kw.get("window_log2", 17),
@@ -107,6 +115,10 @@ def main(argv=None) -> int:
     ap.add_argument("--build-kernel", action="store_true",
                     help="route builds through the fused Pallas kernel "
                          "(kernels/build_fused)")
+    ap.add_argument("--source", default="uniform",
+                    help="source spec: uniform (host gen + H2D, the NIC "
+                         "stand-in) | zipf | device-uniform | device-zipf "
+                         "(device-resident, zero H2D)")
     ap.add_argument("--json-out", default=None,
                     help="write the record here (default "
                          "benchmarks/results_fig2/fig2_graphblas_io_"
@@ -123,10 +135,13 @@ def main(argv=None) -> int:
         kw["n_batches"] = args.batches
     kw["reps"] = args.reps
     kw["build_kernel"] = args.build_kernel
+    kw["source"] = args.source
     record = run_json(args.policy, **kw)
     # --quick defaults to a _quick artifact so a CI-sized run never
     # clobbers a recorded sweep; an explicit --json-out always wins
     ktag = "_build_kernel" if args.build_kernel else ""
+    if args.source != "uniform":
+        ktag += "_" + args.source.replace("-", "_")
     default_name = (f"fig2_graphblas_io_{args.policy}{ktag}_quick.json"
                     if args.quick else
                     f"fig2_graphblas_io_{args.policy}{ktag}.json")

@@ -69,9 +69,12 @@ def main(argv=None) -> int:
             **(dict(window_log2s=(10, 12), n_batches=2) if args.quick else {})
         ),
         "depth_sweep": lambda: depth_sweep.run(
-            # quick harness runs never clobber the recorded full sweep
-            **(dict(window_log2=12, windows_per_batch=4, n_batches=2,
-                    depths=(1, 2, 4), json_path=None) if args.quick else {})
+            # quick harness runs never clobber the recorded full sweep;
+            # full runs record it best-of-3 (reps interleaved across rows)
+            # under results_depth/
+            **(dict(window_log2=10, windows_per_batch=4, n_batches=4,
+                    depths=(1, 2, 4), json_path=None) if args.quick
+               else dict(reps=3))
         ),
         "kernels": kernels_bench.run,
         "roofline": roofline.run,

@@ -1,0 +1,152 @@
+"""Device-resident synthetic traffic: keyed window generation inside jit.
+
+The host generators in ``data.packets``/``data.flows`` play the role of the
+NIC: numpy materializes every batch on the host and the pipeline pays a
+host->device copy per batch.  The paper's DPU never does that — packets
+arrive *in* the device's receive queues — so these generators are the
+faithful analogue: windows are generated on device by the jitted functions
+below and never touch host memory (zero H2D copies on the produce path).
+
+Keying scheme (the reproducibility contract):
+
+* one base key per stream: ``stream_keys(seed)`` splits
+  ``jax.random.key(seed)`` into a window key and a zipf-host-pool key;
+* window ``w`` (the *global* window index, counted from the start of the
+  stream) is generated from ``fold_in(window_key, w)``.
+
+Because every window is keyed by its global index — not by threading RNG
+state through the stream — the stream is a pure function of
+``(seed, window_size, kind)``: re-batching the same stream with a different
+``windows_per_batch`` yields bit-identical windows, any batch can be
+regenerated in isolation, and N producer workers can generate windows out
+of order without changing the stream.  That is what keeps device sources
+inside the engine's policy-equivalence invariant.
+
+Zipf ranks are drawn by inverting a CDF quantized to uint32
+(``rank = searchsorted(cdf_u32, u32_draw)``) so the device computation is
+pure integer compares — no float accumulation order to drift between
+backends.  The table itself is computed once on the host in float64.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.flows import FLOW_WIDTH
+
+# Mirrors data.packets.zipf_traffic / data.flows.synthetic_flows defaults.
+N_HOSTS = 100_000
+ZIPF_ALPHA = 1.2
+MAX_PKTS = 64  # flow records: packets per flow in [1, MAX_PKTS]
+
+
+def stream_keys(seed: int) -> tuple[jax.Array, jax.Array]:
+    """(window_key, pool_key) for one stream.  ``threefry2x32`` is pinned so
+    the stream survives a change of jax's default PRNG implementation."""
+    base = jax.random.key(seed, impl="threefry2x32")
+    window_key, pool_key = jax.random.split(base)
+    return window_key, pool_key
+
+
+@functools.lru_cache(maxsize=8)
+def zipf_cdf_u32(n_hosts: int = N_HOSTS, alpha: float = ZIPF_ALPHA):
+    """The rank CDF of a truncated zipf, quantized to uint32.
+
+    ``searchsorted(cdf_u32, u)`` for a uniform uint32 draw ``u`` returns a
+    rank in ``[0, n_hosts)`` with P(rank = k) proportional to (k+1)^-alpha
+    — same law as the host generator's ``rng.zipf(alpha) % n_hosts`` up to
+    truncation.  float64 happens here on the host, once; the device side
+    only ever compares integers.
+    """
+    p = np.arange(1, n_hosts + 1, dtype=np.float64) ** -alpha
+    cdf = np.cumsum(p / p.sum())
+    return np.minimum(np.floor(cdf * (1 << 32)), (1 << 32) - 1).astype(
+        np.uint32
+    )
+
+
+def zipf_hosts(pool_key: jax.Array, n_hosts: int = N_HOSTS) -> jax.Array:
+    """The stream's host pool: [n_hosts] uint32 addresses, fixed per seed."""
+    return jax.random.bits(pool_key, (n_hosts,), dtype=jnp.uint32)
+
+
+def _window_keys(window_key: jax.Array, start_window: jax.Array,
+                 windows_per_batch: int) -> jax.Array:
+    ws = start_window + jnp.arange(windows_per_batch, dtype=jnp.uint32)
+    return jax.vmap(lambda w: jax.random.fold_in(window_key, w))(ws)
+
+
+def _zipf_pairs(key: jax.Array, hosts: jax.Array, cdf_u32: jax.Array,
+                n: int) -> jax.Array:
+    u = jax.random.bits(key, (n, 2), dtype=jnp.uint32)
+    return hosts[jnp.searchsorted(cdf_u32, u)]
+
+
+@functools.partial(jax.jit, static_argnames=("windows_per_batch",
+                                             "window_size"))
+def uniform_packet_batch(window_key, start_window, *,
+                         windows_per_batch: int, window_size: int):
+    """[W, n, 2] uint32 uniform packets for windows [start, start+W)."""
+    keys = _window_keys(window_key, start_window, windows_per_batch)
+    return jax.vmap(
+        lambda k: jax.random.bits(k, (window_size, 2), dtype=jnp.uint32)
+    )(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("windows_per_batch",
+                                             "window_size"))
+def zipf_packet_batch(window_key, start_window, hosts, cdf_u32, *,
+                      windows_per_batch: int, window_size: int):
+    """[W, n, 2] uint32 heavy-tailed packets over the stream's host pool."""
+    keys = _window_keys(window_key, start_window, windows_per_batch)
+    return jax.vmap(
+        lambda k: _zipf_pairs(k, hosts, cdf_u32, window_size)
+    )(keys)
+
+
+def _flow_window(key, addrs):
+    """Assemble one [n, 5] flow window from its address pairs + key."""
+    n = addrs.shape[0]
+    kp, kf, kg = jax.random.split(key, 3)
+    pkts = jax.random.bits(kp, (n,), dtype=jnp.uint32) % MAX_PKTS + 1
+    frame = jax.random.bits(kf, (n,), dtype=jnp.uint32) % 1461 + 40
+    flags = jax.random.bits(kg, (n,), dtype=jnp.uint32) % 3 + 1
+    return jnp.stack(
+        [addrs[:, 0], addrs[:, 1], pkts * frame, pkts, flags], axis=1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("windows_per_batch",
+                                             "window_size"))
+def uniform_flow_batch(window_key, start_window, *,
+                       windows_per_batch: int, window_size: int):
+    """[W, n, 5] uint32 flow records (src, dst, bytes, pkts, flags)."""
+    keys = _window_keys(window_key, start_window, windows_per_batch)
+
+    def one(k):
+        ka, kv = jax.random.split(k)
+        addrs = jax.random.bits(ka, (window_size, 2), dtype=jnp.uint32)
+        return _flow_window(kv, addrs)
+
+    out = jax.vmap(one)(keys)
+    assert out.shape[-1] == FLOW_WIDTH
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("windows_per_batch",
+                                             "window_size"))
+def zipf_flow_batch(window_key, start_window, hosts, cdf_u32, *,
+                    windows_per_batch: int, window_size: int):
+    """[W, n, 5] uint32 flow records with zipf-distributed addresses."""
+    keys = _window_keys(window_key, start_window, windows_per_batch)
+
+    def one(k):
+        ka, kv = jax.random.split(k)
+        addrs = _zipf_pairs(ka, hosts, cdf_u32, window_size)
+        return _flow_window(kv, addrs)
+
+    return jax.vmap(one)(keys)

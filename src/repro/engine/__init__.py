@@ -44,6 +44,8 @@ from repro.engine.sinks import (  # noqa: F401
     TopKHeavyHitters,
 )
 from repro.engine.source import (  # noqa: F401
+    DeviceSyntheticFlowSource,
+    DeviceSyntheticSource,
     IterableSource,
     PcapLiteSource,
     Source,

@@ -31,6 +31,7 @@ import time
 from typing import Callable, Iterable
 
 import jax
+import jax.numpy as jnp
 
 from repro.engine.prefetch import BoundedPrefetcher
 from repro.engine.sharded import make_exact_ingest_step
@@ -113,6 +114,12 @@ def _validate_in_flight(max_in_flight: int) -> int:
     return max_in_flight
 
 
+def _validate_positive(value: int, name: str) -> int:
+    if value < 1:
+        raise ValueError(f"{name} must be >= 1, got {value}")
+    return value
+
+
 def _run_async_loop(
     items: Iterable,
     process_fn: Callable,
@@ -126,32 +133,46 @@ def _run_async_loop(
     keep_results: bool = True,
     sync_timing: bool = False,
     inflight: collections.deque | None = None,
+    submit_batches: int = 1,
+    batched_process_fn: Callable | None = None,
 ) -> EngineReport:
     """Async-dispatch variant of the pipeline loop: submit without blocking,
     retire FIFO.
 
-    Up to ``max_in_flight`` submitted batches await device completion at
+    Up to ``max_in_flight`` submitted dispatches await device completion at
     once; the oldest is retired (``block_until_ready`` -> results -> sinks)
     before a new one is submitted when the ring is full, and everything
     drains at end of stream.  Sinks therefore always observe results in
     submission order.  Warmup batches retire immediately so compile time
     never leaks into the measured window.
 
+    ``submit_batches=K > 1`` turns on batched multi-window submission:
+    source batches are stacked K at a time and dispatched through ONE
+    ``batched_process_fn`` call (a vmapped stage graph), amortizing K
+    dispatch/handoff rounds into one.  Retirement un-stacks the chunk and
+    delivers each batch's outputs separately, still in submission order, so
+    sinks and results are indistinguishable from K=1.  A final partial
+    chunk is padded by repeating its last batch (one compiled shape, no
+    recompile) and the padded lanes are dropped before delivery.
+
     Timing semantics (DESIGN.md "Async dispatch & donation"): ``process_s``
     is the *exposed* wait — wall-clock spent blocked on results, including
     the final drain; ``overlap_s`` is head-of-line in-flight time hidden
     behind host work, accounted over disjoint wall-clock segments so that
     ``process_s + overlap_s <= elapsed_s`` by construction.
-    ``sync_timing=True`` retires every batch right after submission,
-    restoring the per-batch blocking measurement (Fig. 2 comparability) at
-    the cost of the overlap.
+    ``sync_timing=True`` retires every dispatch right after submission,
+    restoring the per-dispatch blocking measurement (Fig. 2 comparability)
+    at the cost of the overlap.
 
     A mid-stream failure (source, transform, or dispatch) quiesces every
-    already-submitted batch before re-raising, so no in-flight device work
-    outlives the loop; ``inflight`` may be passed in by the policy so its
-    post-mortem emptiness is observable.
+    already-submitted dispatch before re-raising, so no in-flight device
+    work outlives the loop; ``inflight`` may be passed in by the policy so
+    its post-mortem emptiness is observable.
     """
     _validate_in_flight(max_in_flight)
+    _validate_positive(submit_batches, "submit_batches")
+    if submit_batches > 1 and batched_process_fn is None:
+        raise ValueError("submit_batches > 1 needs a batched_process_fn")
     if inflight is None:
         inflight = collections.deque()
     results: list = []
@@ -166,11 +187,11 @@ def _run_async_loop(
 
     def retire_one():
         nonlocal wait_s, overlap_s, last_retire_end
-        idx, submit_t, out = inflight.popleft()
+        start_idx, n_real, submit_t, out = inflight.popleft()
         t0 = time.perf_counter()
         out = jax.block_until_ready(out)
         t1 = time.perf_counter()
-        # head-of-line overlap: time this batch was in flight before we
+        # head-of-line overlap: time this dispatch was in flight before we
         # blocked on it, clipped to start after the previous retirement so
         # segments never double count
         lo = submit_t if last_retire_end is None else max(submit_t,
@@ -178,39 +199,69 @@ def _run_async_loop(
         overlap_s += max(t0 - lo, 0.0)
         wait_s += t1 - t0
         last_retire_end = t1
-        if keep_results:
-            results.append(out)
-        if consume is not None:
-            consume(idx, out)
+        for j in range(n_real):
+            # un-stack a K-chunk into its per-batch outputs (padded lanes
+            # beyond n_real are simply never delivered)
+            out_j = (out if submit_batches == 1
+                     else jax.tree_util.tree_map(lambda v: v[j], out))
+            if keep_results:
+                results.append(out_j)
+            if consume is not None:
+                consume(start_idx + j, out_j)
 
+    def submit(chunk):
+        nonlocal n_measured, n_packets, max_depth
+        while len(inflight) >= max_in_flight:
+            retire_one()
+        # count packets before dispatch: donation may invalidate the
+        # buffers the moment they are submitted
+        for d in chunk:
+            n_packets += packets_in_item(d, packets_per_item)
+        n_real = len(chunk)
+        if submit_batches == 1:
+            payload, fn = chunk[0], process_fn
+        else:
+            if n_real < submit_batches:
+                chunk = chunk + [chunk[-1]] * (submit_batches - n_real)
+            payload, fn = jnp.stack(chunk), batched_process_fn
+        submit_t = time.perf_counter()
+        out = fn(payload)  # async dispatch: no block here
+        inflight.append((n_measured, n_real, submit_t, out))
+        max_depth = max(max_depth, len(inflight))
+        n_measured += n_real
+        if sync_timing:
+            retire_one()
+
+    chunk: list = []
     try:
         for dev in items:  # the producer thread already device_put them
             if n_items == warmup_items:
                 start = time.perf_counter()
             if n_items < warmup_items:
-                # warmup (jit compile): retire immediately, deliver nowhere
-                jax.block_until_ready(process_fn(dev))
+                # warmup (jit compile): retire immediately, deliver
+                # nowhere; with K > 1 warm the K-stacked shape, which is
+                # the only shape the measured loop will compile
+                if submit_batches == 1:
+                    jax.block_until_ready(process_fn(dev))
+                else:
+                    jax.block_until_ready(batched_process_fn(
+                        jnp.stack([dev] * submit_batches)
+                    ))
             else:
-                while len(inflight) >= max_in_flight:
-                    retire_one()
-                # count packets before dispatch: donation may invalidate
-                # the buffer the moment it is submitted
-                n_packets += packets_in_item(dev, packets_per_item)
-                submit_t = time.perf_counter()
-                out = process_fn(dev)  # async dispatch: no block here
-                inflight.append((n_measured, submit_t, out))
-                max_depth = max(max_depth, len(inflight))
-                n_measured += 1
-                if sync_timing:
-                    retire_one()
+                chunk.append(dev)
+                if len(chunk) == submit_batches:
+                    submit(chunk)
+                    chunk = []
             n_items += 1
+        if chunk:
+            submit(chunk)  # final partial chunk (padded when K > 1)
         while inflight:
             retire_one()
     except BaseException:
         # never leak in-flight device work past a failure: quiesce every
-        # submitted batch (results are discarded), then re-raise
+        # submitted dispatch (results are discarded), then re-raise
         while inflight:
-            _, _, out = inflight.popleft()
+            *_, out = inflight.popleft()
             try:
                 jax.block_until_ready(out)
             except Exception:
@@ -228,6 +279,7 @@ def _run_async_loop(
         policy=policy_name,
         overlap_s=overlap_s,
         max_in_flight=max(max_depth, 1),
+        submit_batches=submit_batches,
     )
 
 
@@ -268,28 +320,44 @@ class BlockingPolicy(ExecutionPolicy):
 
 
 class DoubleBufferedPolicy(ExecutionPolicy):
-    """Producer thread transfers behind a bounded queue (GraphBLAS+IO)."""
+    """Producer thread(s) transfer behind a bounded queue (GraphBLAS+IO).
+
+    ``producer_workers > 1`` runs N prefetch workers: source pulls stay
+    serialized (so the stream is unchanged), but per-item transforms —
+    ``device_put``, and for file sources the decode — run concurrently,
+    with delivery re-sequenced into source order (see
+    ``BoundedPrefetcher``).  Scheduling only: per-batch outputs are
+    bit-identical at any worker count.
+    """
 
     name = "double_buffered"
 
-    def __init__(self, queue_depth: int = 2):
+    def __init__(self, queue_depth: int = 2, producer_workers: int = 1):
         self.queue_depth = queue_depth
+        self.producer_workers = _validate_positive(producer_workers,
+                                                   "producer_workers")
 
     def run(self, source, process_fn, *, packets_per_item=None,
             warmup_items=0, consume=None,
             keep_results=True) -> EngineReport:
-        pf = BoundedPrefetcher(
+        # kept on the instance so a failed run's produce accounting stays
+        # observable post-mortem (the prefetcher snapshots produce_s under
+        # its lock, in-flight transforms included)
+        pf = self._prefetcher = BoundedPrefetcher(
             iter(source), depth=self.queue_depth,
             transform=jax.device_put, untimed_items=warmup_items,
+            workers=self.producer_workers,
         )
         try:
-            return _run_loop(
+            report = _run_loop(
                 pf, process_fn,
                 policy_name=self.name, device_put_inline=False,
                 packets_per_item=packets_per_item, warmup_items=warmup_items,
-                consume=consume, produce_time=lambda: pf.produce_s,
+                consume=consume, produce_time=pf.produce_time,
                 keep_results=keep_results,
             )
+            report.producer_workers = self.producer_workers
+            return report
         finally:
             pf.close()  # a failed run must not leak the producer thread
 
@@ -303,36 +371,53 @@ class TripleBufferedPolicy(DoubleBufferedPolicy):
 
     name = "triple_buffered"
 
-    def __init__(self, queue_depth: int = 3):
-        super().__init__(queue_depth=queue_depth)
+    def __init__(self, queue_depth: int = 3, producer_workers: int = 1):
+        super().__init__(queue_depth=queue_depth,
+                         producer_workers=producer_workers)
 
 
 class _AsyncRingRunMixin:
-    """The shared run() of the async policies: a bounded-queue producer
-    thread feeding ``_run_async_loop``.  Hosts must set ``queue_depth``,
-    ``max_in_flight``, ``sync_timing``, and ``_inflight``."""
+    """The shared run() of the async policies: bounded-queue producer
+    worker(s) feeding ``_run_async_loop``.  Hosts must set ``queue_depth``,
+    ``max_in_flight``, ``sync_timing``, ``producer_workers``,
+    ``submit_batches``, ``_batched_fn``, and ``_inflight``."""
 
     def run(self, source, process_fn, *, packets_per_item=None,
             warmup_items=0, consume=None,
             keep_results=True) -> EngineReport:
-        pf = BoundedPrefetcher(
+        # kept on the instance so a failed run's produce accounting stays
+        # observable post-mortem (the prefetcher snapshots produce_s under
+        # its lock, in-flight transforms included)
+        pf = self._prefetcher = BoundedPrefetcher(
             iter(source), depth=self.queue_depth,
             transform=jax.device_put, untimed_items=warmup_items,
+            workers=self.producer_workers,
         )
+        bfn = None
+        if self.submit_batches > 1:
+            # engine runs set _batched_fn in build_process_fn (the vmapped
+            # stage graph / sharded step); direct run() callers with a
+            # custom process fn get a generic vmapped wrapper
+            bfn = self._batched_fn
+            if bfn is None:
+                bfn = jax.jit(jax.vmap(process_fn))
         # a FRESH ring per run — concurrent runs on one policy instance
         # must not share in-flight state; the attribute only points at the
         # latest run's ring for post-mortem emptiness checks
         ring = self._inflight = collections.deque()
         try:
-            return _run_async_loop(
+            report = _run_async_loop(
                 pf, process_fn,
                 policy_name=self.name, max_in_flight=self.max_in_flight,
                 packets_per_item=packets_per_item,
                 warmup_items=warmup_items, consume=consume,
-                produce_time=lambda: pf.produce_s,
+                produce_time=pf.produce_time,
                 keep_results=keep_results, sync_timing=self.sync_timing,
-                inflight=ring,
+                inflight=ring, submit_batches=self.submit_batches,
+                batched_process_fn=bfn,
             )
+            report.producer_workers = self.producer_workers
+            return report
         finally:
             pf.close()  # a failed run must not leak the producer thread
 
@@ -362,11 +447,17 @@ class AsyncPipelinedPolicy(_AsyncRingRunMixin, ExecutionPolicy):
     name = "async_pipelined"
 
     def __init__(self, max_in_flight: int = 3, queue_depth: int = 2,
-                 *, donate: bool = True, sync_timing: bool = False):
+                 *, donate: bool = True, sync_timing: bool = False,
+                 producer_workers: int = 1, submit_batches: int = 1):
         self.max_in_flight = _validate_in_flight(max_in_flight)
         self.queue_depth = queue_depth
         self.donate = donate
         self.sync_timing = sync_timing
+        self.producer_workers = _validate_positive(producer_workers,
+                                                   "producer_workers")
+        self.submit_batches = _validate_positive(submit_batches,
+                                                 "submit_batches")
+        self._batched_fn: Callable | None = None
         # exposed so overlap tests (and post-mortems) can assert no batch
         # is ever left in flight
         self._inflight: collections.deque = collections.deque()
@@ -375,6 +466,10 @@ class AsyncPipelinedPolicy(_AsyncRingRunMixin, ExecutionPolicy):
                          workload: str = "packets") -> Callable:
         if graph is None:
             raise ValueError(f"policy {self.name!r} needs a stage graph")
+        # the K-chunk variant rides the same graph: one donated, vmapped
+        # call takes [K, *batch] and the loop un-stacks per-batch outputs
+        self._batched_fn = (graph.jitted(donate=self.donate, batched=True)
+                            if self.submit_batches > 1 else None)
         return graph.jitted(donate=self.donate)
 
 
@@ -444,12 +539,27 @@ class ShardedPipelinedPolicy(_AsyncRingRunMixin, ShardedPolicy):
 
     def __init__(self, mesh=None, *, route_capacity_factor: float = 2.0,
                  queue_depth: int = 2, max_in_flight: int = 2,
-                 sync_timing: bool = False):
+                 sync_timing: bool = False, producer_workers: int = 1,
+                 submit_batches: int = 1):
         super().__init__(mesh, route_capacity_factor=route_capacity_factor)
         self.max_in_flight = _validate_in_flight(max_in_flight)
         self.queue_depth = queue_depth
         self.sync_timing = sync_timing
+        self.producer_workers = _validate_positive(producer_workers,
+                                                   "producer_workers")
+        self.submit_batches = _validate_positive(submit_batches,
+                                                 "submit_batches")
+        self._batched_fn: Callable | None = None
         self._inflight: collections.deque = collections.deque()
+
+    def build_process_fn(self, graph, cfg,
+                         workload: str = "packets") -> Callable:
+        process = super().build_process_fn(graph, cfg, workload=workload)
+        # vmap over the shard_map step: one [K, W, ...] dispatch runs K
+        # sharded builds+merges; slices are bit-identical to K single calls
+        self._batched_fn = (jax.jit(jax.vmap(process))
+                            if self.submit_batches > 1 else None)
+        return process
 
 
 _POLICIES = {
@@ -477,13 +587,39 @@ def canonical_policies() -> dict[str, type]:
             if cls.name == name}
 
 
-def make_policy(spec) -> ExecutionPolicy:
-    """Resolve a policy spec: instance passes through, string looks up."""
+def make_policy(spec, **knobs) -> ExecutionPolicy:
+    """Resolve a policy spec: instance passes through, string looks up.
+
+    Keyword knobs (``producer_workers=``, ``submit_batches=``,
+    ``queue_depth=``, ``max_in_flight=``, ...) forward to the policy
+    constructor; ``None`` values are dropped so CLI plumbing can pass
+    unset flags through.  A knob the policy's constructor does not take is
+    an error naming the supported set — silently ignoring e.g.
+    ``submit_batches`` on ``blocking`` would misreport what a benchmark
+    measured.
+    """
     if isinstance(spec, ExecutionPolicy):
+        if any(v is not None for v in knobs.values()):
+            raise ValueError(
+                "policy knobs cannot be applied to an already-constructed "
+                f"policy instance ({spec.name!r}); construct it with them"
+            )
         return spec
     try:
-        return _POLICIES[spec]()
+        cls = _POLICIES[spec]
     except KeyError:
         raise ValueError(
             f"unknown policy {spec!r}; choose from {sorted(_POLICIES)}"
+        ) from None
+    knobs = {k: v for k, v in knobs.items() if v is not None}
+    try:
+        return cls(**knobs)
+    except TypeError:
+        import inspect
+
+        allowed = sorted(set(inspect.signature(cls.__init__).parameters)
+                         - {"self"})
+        raise ValueError(
+            f"policy {spec!r} does not accept {sorted(knobs)}; "
+            f"supported knobs: {allowed}"
         ) from None

@@ -1,116 +1,228 @@
-"""Bounded-queue background prefetch: the one producer/consumer primitive.
+"""Bounded multi-worker prefetch: the one producer/consumer primitive.
 
 This is the double-buffer discipline every previous copy of the pipeline
 hand-rolled (``core.stream``'s producer thread, ``data.pipeline``'s
-``Prefetcher``): a worker thread pulls items from an iterable, optionally
-transforms them (device_put, shard placement, decompression — the "IO"
-stage), and feeds a depth-bounded queue.  The bounded queue is the
-backpressure, exactly like the DPU's receive queues: when the device falls
-behind, the producer blocks instead of buffering unboundedly.
+``Prefetcher``), generalized to N workers: worker threads pull items from an
+iterable, optionally transform them (device_put, decode, decompression —
+the "IO" stage), and feed a depth-bounded reorder buffer.  The depth bound
+is the backpressure, exactly like the DPU's receive queues: when the device
+falls behind, producers park instead of buffering unboundedly.
 
-Exceptions raised by the source or the transform are re-raised in the
-consumer thread, after all successfully produced items are drained.
+Ordering contract: items are delivered to the consumer in *source order*
+regardless of worker count or per-item transform latency.  Source pulls are
+serialized under an iterator lock and stamped with a sequence number; each
+worker transforms its item concurrently and files the result under its
+sequence number; the consumer only ever takes the next sequence number in
+line.  With ``workers=1`` this degenerates to the classic single-producer
+double buffer.
 
-Lifecycle: a consumer that stops early (breaks out of its loop, or a
-pipeline that dies mid-stream) calls ``close()`` — the worker is signalled
-to stop, queued items are dropped, and the thread is joined, so no producer
-thread outlives its pipeline.  ``BoundedPrefetcher`` is also a context
-manager (``__exit__`` closes); closing an exhausted or already-closed
-prefetcher is a no-op.
+Exceptions raised by the source or a transform are re-raised in the
+consumer thread, after all items sequenced *before* the failure are
+drained (later items, even if already transformed, are discarded).
+
+Cancellation is condition-driven — no polling loops.  A consumer that
+stops early (breaks out of its loop, or a pipeline that dies mid-stream)
+calls ``close()``: parked workers and a parked consumer wake immediately,
+buffered items are dropped, and the threads are joined.  A worker that
+cannot be joined (e.g. a source blocked in foreign code) is reported with
+a ``RuntimeWarning`` naming the thread instead of leaking silently.
+``BoundedPrefetcher`` is also a context manager (``__exit__`` closes);
+closing an exhausted or already-closed prefetcher is a no-op.
 """
 
 from __future__ import annotations
 
-import queue
 import threading
 import time
+import warnings
 from typing import Callable, Iterable, Iterator
-
-_STOP = object()
-
-# How often a blocked worker re-checks the close signal.  Wakeups on a full
-# queue are condition-driven (put returns as soon as space frees); the
-# timeout only bounds how long a cancelled worker lingers.
-_POLL_S = 0.05
 
 
 class BoundedPrefetcher:
-    """Background-thread prefetch of an iterable, depth-bounded.
+    """Background prefetch of an iterable: N workers, in-order delivery.
 
-    Attributes:
-      produce_s: cumulative seconds the worker spent in ``transform`` —
-        the pipeline's IO-side cost, reported in ``EngineReport.produce_s``.
+    Args:
+      it: the source iterable (pulls are serialized, so any iterator works).
+      depth: max items beyond the consumer's position that may be reserved
+        at once (buffered + in transform).  The effective bound is
+        ``max(depth, workers)`` so every worker can hold one item.
+      transform: optional per-item function applied on the worker threads —
+        this is the part N workers parallelize.
+      untimed_items: leading items excluded from ``produce_s`` (warmup), the
+        same way the consumer excludes them from elapsed/process accounting.
+      workers: number of producer threads (>= 1).
+
+    ``produce_s`` reports cumulative transform seconds — the pipeline's
+    IO-side cost, reported in ``EngineReport.produce_s``.  It is snapshotted
+    under the prefetcher lock and *includes in-progress transforms*, so a
+    reader observing a run that died mid-stream still sees the final
+    in-flight transform's time.
     """
 
     def __init__(self, it: Iterable, depth: int = 2,
                  transform: Callable | None = None,
-                 untimed_items: int = 0):
-        self._q: queue.Queue = queue.Queue(maxsize=depth)
+                 untimed_items: int = 0, workers: int = 1):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self._it = iter(it)
+        self._transform = transform
+        self._untimed = untimed_items
+        self._depth = max(depth, workers)
+        # The one condition variable ordering ALL shared state below (the
+        # name is load-bearing twice over: repro.analysis's
+        # thread-shared-state lint recognizes lock-named context managers,
+        # and a Condition *is* a lock with wait/notify on top).
+        self._lock = threading.Condition()
+        # Serializes source pulls so sequence order == iteration order.
+        # Held across next(it) WITHOUT holding _lock, so a source blocked
+        # in its own body never wedges close() or the consumer.
+        self._it_lock = threading.Lock()
+        self._buf: dict[int, object] = {}  # seq -> item awaiting delivery
+        self._next_seq = 0       # next sequence number to reserve
+        self._next_out = 0       # next sequence number the consumer takes
+        self._exhausted_at: int | None = None  # seq where source ended
         self._err: BaseException | None = None
-        self._closed = threading.Event()
-        # orders worker-side writes of produce_s/_err against consumer
-        # reads: += is a read-modify-write the GIL does not make atomic
-        self._lock = threading.Lock()
-        self.produce_s = 0.0
-
-        def put_until_closed(item) -> bool:
-            while not self._closed.is_set():
-                try:
-                    self._q.put(item, timeout=_POLL_S)
-                    return True
-                except queue.Full:
-                    continue
-            return False
-
-        def worker():
-            try:
-                for i, item in enumerate(it):
-                    if self._closed.is_set():
-                        return
-                    if transform is not None:
-                        t0 = time.perf_counter()
-                        item = transform(item)
-                        if i >= untimed_items:
-                            # warmup items are excluded from produce_s the
-                            # same way the consumer excludes them from
-                            # elapsed/process accounting
-                            dt = time.perf_counter() - t0
-                            with self._lock:
-                                self.produce_s += dt
-                    if not put_until_closed(item):
-                        return
-            except BaseException as e:  # surface in consumer
-                with self._lock:
-                    self._err = e
-            finally:
-                put_until_closed(_STOP)
-
-        # the name is load-bearing: the thread-leak fixture in
+        self._err_seq: int | None = None  # earliest failed sequence number
+        self._closed = False
+        self._produce_s = 0.0
+        self._active: dict[str, float] = {}  # thread -> transform start t
+        # the name prefix is load-bearing: the thread-leak fixture in
         # tests/conftest.py fails any test that leaves a repro-* thread
         # alive, which is what pins the close() discipline
-        self._thread = threading.Thread(
-            target=worker, daemon=True, name="repro-prefetch-worker"
-        )
-        self._thread.start()
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"repro-prefetch-worker-{i}")
+            for i in range(workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- worker side --------------------------------------------------------
+
+    def _pull(self):
+        """Reserve the next sequence number and pull its item from the
+        source.  Returns ``(seq, item)`` or None when there is nothing more
+        for this worker to do (closed / failed / exhausted)."""
+        with self._it_lock:
+            with self._lock:
+                while (not self._closed and self._err is None
+                       and self._exhausted_at is None
+                       and self._next_seq - self._next_out >= self._depth):
+                    self._lock.wait()
+                if (self._closed or self._err is not None
+                        or self._exhausted_at is not None):
+                    return None
+                seq = self._next_seq
+                self._next_seq = seq + 1
+            # _lock released, _it_lock still held: pulls stay in seq order
+            # and a blocking source only ever blocks other *pulls*
+            try:
+                item = next(self._it)
+            except StopIteration:
+                with self._lock:
+                    self._exhausted_at = seq
+                    self._lock.notify_all()
+                return None
+            except BaseException as e:  # surface in consumer
+                with self._lock:
+                    self._record_failure(e, seq)
+                return None
+        return seq, item
+
+    def _record_failure(self, err: BaseException, seq: int) -> None:
+        """Keep the earliest failure (caller holds the lock): the consumer
+        delivers everything sequenced before it, then raises it."""
+        if self._err is None or seq < self._err_seq:
+            self._err, self._err_seq = err, seq
+        self._lock.notify_all()
+
+    def _worker(self):
+        me = threading.current_thread().name
+        while True:
+            pulled = self._pull()
+            if pulled is None:
+                return
+            seq, item = pulled
+            timed = self._transform is not None and seq >= self._untimed
+            if timed:
+                with self._lock:
+                    self._active[me] = time.perf_counter()
+            try:
+                if self._transform is not None:
+                    item = self._transform(item)
+            except BaseException as e:  # surface in consumer
+                with self._lock:
+                    # a failed transform still spent IO time: bank it, so
+                    # the error-path produce_s snapshot doesn't lose the
+                    # final in-flight transform
+                    t0 = self._active.pop(me, None)
+                    if timed and t0 is not None:
+                        self._produce_s += time.perf_counter() - t0
+                    self._record_failure(e, seq)
+                return
+            with self._lock:
+                if timed:
+                    t0 = self._active.pop(me, None)
+                    if t0 is not None:
+                        self._produce_s += time.perf_counter() - t0
+                if self._closed:
+                    return
+                self._buf[seq] = item
+                self._lock.notify_all()
+
+    # -- consumer side ------------------------------------------------------
 
     @property
     def closed(self) -> bool:
         """True once closed or exhausted; iteration yields nothing more."""
-        return self._closed.is_set()
+        with self._lock:
+            return self._closed
 
-    def close(self) -> None:
-        """Cancel the prefetch: signal the worker, drop queued items, and
-        join the thread.  Idempotent; safe after normal exhaustion."""
-        already = self._closed.is_set()
-        self._closed.set()
-        if not already:
-            # unblock a worker stuck on a full queue
-            try:
-                while True:
-                    self._q.get_nowait()
-            except queue.Empty:
-                pass
-        self._thread.join(timeout=5.0)
+    @property
+    def produce_s(self) -> float:
+        """Locked snapshot of transform seconds, in-progress work included."""
+        with self._lock:
+            now = time.perf_counter()
+            return self._produce_s + sum(now - t0
+                                         for t0 in self._active.values())
+
+    def produce_time(self) -> float:
+        """Callable form of ``produce_s`` for ``EngineReport`` plumbing."""
+        return self.produce_s
+
+    def _join_workers(self, timeout: float | None) -> list[str]:
+        """Join every worker; returns the names of threads still alive."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        stuck = []
+        for t in self._threads:
+            t.join(None if deadline is None
+                   else max(deadline - time.perf_counter(), 0.0))
+            if t.is_alive():
+                stuck.append(t.name)
+        return stuck
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Cancel the prefetch: wake parked workers and consumer, drop
+        buffered items, and join the threads.  Idempotent; safe after
+        normal exhaustion.  A worker that fails to join within ``timeout``
+        (a source wedged in foreign code) is reported by name with a
+        ``RuntimeWarning`` — a silent leak here would defeat the
+        thread-leak fixture's intent."""
+        with self._lock:
+            self._closed = True
+            self._buf.clear()
+            self._lock.notify_all()
+        stuck = self._join_workers(timeout)
+        if stuck:
+            warnings.warn(
+                f"BoundedPrefetcher.close(): worker thread(s) "
+                f"{', '.join(stuck)} did not join within {timeout}s; "
+                f"the source may be blocked outside our control",
+                RuntimeWarning, stacklevel=2,
+            )
 
     def __enter__(self) -> "BoundedPrefetcher":
         return self
@@ -122,21 +234,41 @@ class BoundedPrefetcher:
         return self
 
     def __next__(self):
-        # timed get + closed recheck: close() may be called from another
-        # thread (a watchdog) while the consumer is parked on an empty
-        # queue, in which case no _STOP sentinel will ever arrive
-        while True:
-            if self._closed.is_set():
-                raise StopIteration
-            try:
-                item = self._q.get(timeout=_POLL_S)
-                break
-            except queue.Empty:
-                continue
-        if item is _STOP:
-            self._thread.join()
-            self._closed.set()  # exhausted: later close() is a no-op
-            if self._err is not None:
-                raise self._err
-            raise StopIteration
-        return item
+        failed = False
+        with self._lock:
+            while True:
+                if self._closed:
+                    raise StopIteration
+                if self._next_out in self._buf:
+                    item = self._buf.pop(self._next_out)
+                    self._next_out += 1
+                    self._lock.notify_all()  # frees a depth token
+                    return item
+                # nothing deliverable yet: either the stream is over, the
+                # earliest failure is next in line, or we park until a
+                # worker/close() notifies — no timeout, no polling
+                failed = (self._err is not None
+                          and self._next_out >= self._err_seq)
+                if failed or (self._exhausted_at is not None
+                              and self._next_out >= self._exhausted_at):
+                    break
+                self._lock.wait()
+        # end of stream (or failure boundary): workers are already
+        # returning — join outside the lock, then settle the final state
+        self._join_workers(None)
+        with self._lock:
+            self._closed = True  # exhausted: later close() is a no-op
+            self._buf.clear()
+            err = self._err
+            self._lock.notify_all()
+        if failed and err is not None:
+            raise err
+        raise StopIteration
+
+    # -- compatibility ------------------------------------------------------
+
+    @property
+    def _thread(self) -> threading.Thread:
+        """The first worker thread (the only one when ``workers=1``) —
+        kept for callers/tests that predate multi-worker prefetch."""
+        return self._threads[0]

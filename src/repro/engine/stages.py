@@ -214,37 +214,47 @@ class StageGraph:
                 f"stages {[s.name for s in self.stages]}"
             )
         self._jitted = jax.jit(self._forward)
-        self._jitted_donated = None
+        self._jit_cache: dict[tuple[bool, bool], Callable] = {
+            (False, False): self._jitted
+        }
 
-    def jitted(self, donate: bool = False) -> Callable:
-        """The compiled step function; ``donate=True`` returns a variant
-        compiled with ``donate_argnums=0``.
+    def jitted(self, donate: bool = False, batched: bool = False) -> Callable:
+        """The compiled step function.
 
-        Donation lets XLA recycle the input batch buffer into the step's
-        outputs, which is what keeps device memory O(in-flight window)
-        under the async policies (many batches are submitted before the
-        first is retired).  Donation is *safe* for every registered stage
-        graph because stages are pure functions of the context dict — the
-        caller must simply not reuse the batch array after the call, which
-        the engine's loops never do.  When no output can alias the input
-        (e.g. a stats-only graph), XLA falls back to a copy and jax warns;
-        the semantics are unchanged, so that warning is suppressed here.
+        ``donate=True`` compiles with ``donate_argnums=0``: XLA recycles
+        the input batch buffer into the step's outputs, which is what keeps
+        device memory O(in-flight window) under the async policies (many
+        batches are submitted before the first is retired).  Donation is
+        *safe* for every registered stage graph because stages are pure
+        functions of the context dict — the caller must simply not reuse
+        the batch array after the call, which the engine's loops never do.
+        When no output can alias the input (e.g. a stats-only graph), XLA
+        falls back to a copy and jax warns; the semantics are unchanged, so
+        that warning is suppressed here.
+
+        ``batched=True`` vmaps the forward over a leading chunk axis: one
+        call takes ``[K, *batch_shape]`` and returns outputs with a leading
+        ``K`` axis — the engine's batched multi-window submission
+        (``submit_batches``) uses this to amortize K dispatches into one.
+        Per-batch outputs are bit-identical to K separate calls (vmap of a
+        pure function), which the equivalence suite asserts.
         """
-        if not donate:
-            return self._jitted
-        if self._jitted_donated is None:
-            jfn = jax.jit(self._forward, donate_argnums=0)
-
-            def donated_step(batch):
-                with warnings.catch_warnings():
-                    warnings.filterwarnings(
-                        "ignore",
-                        message="Some donated buffers were not usable",
-                    )
-                    return jfn(batch)
-
-            self._jitted_donated = donated_step
-        return self._jitted_donated
+        key = (donate, batched)
+        if key not in self._jit_cache:
+            fwd = jax.vmap(self._forward) if batched else self._forward
+            jfn = jax.jit(fwd, donate_argnums=0 if donate else ())
+            if donate:
+                def step(batch, _jfn=jfn):
+                    with warnings.catch_warnings():
+                        warnings.filterwarnings(
+                            "ignore",
+                            message="Some donated buffers were not usable",
+                        )
+                        return _jfn(batch)
+                self._jit_cache[key] = step
+            else:
+                self._jit_cache[key] = jfn
+        return self._jit_cache[key]
 
     @staticmethod
     def _resolve(name: str) -> Stage:

@@ -51,6 +51,14 @@ class EngineReport:
     approximates the synchronous policies' ``process_s``.  ``max_in_flight``
     is the deepest ring of concurrently submitted batches observed (1 for
     the synchronous policies).  See DESIGN.md "Async dispatch & donation".
+
+    ``producer_workers`` and ``submit_batches`` record the produce-path
+    shape the run used (DESIGN.md "Producer pipeline"): N prefetch worker
+    threads, and K source batches stacked per device dispatch.  With
+    ``submit_batches=K > 1`` each ring slot holds one K-chunk, so
+    ``max_in_flight`` counts *chunks* (up to K·max_in_flight source batches
+    are in flight); per-batch outputs and their sink delivery order are
+    unchanged.
     """
 
     batches: int = 0
@@ -63,6 +71,8 @@ class EngineReport:
     merge_overflow: int = 0
     overlap_s: float = 0.0
     max_in_flight: int = 1
+    producer_workers: int = 1
+    submit_batches: int = 1
 
     @property
     def packets_per_second(self) -> float:

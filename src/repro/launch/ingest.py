@@ -43,6 +43,7 @@ from repro.engine import (
     StatsAccumulator,
     TopKHeavyHitters,
     TrafficEngine,
+    make_policy,
 )
 from repro.engine.source import SYNTHETIC_SPECS
 
@@ -62,7 +63,8 @@ GEOMETRY_DEFAULTS = {
 
 def infer_workload(source: str) -> str:
     s = str(source)
-    if s in ("flow", "flow-zipf") or s.endswith((".json", ".jsonl", ".eve")):
+    if (s in ("flow", "flow-zipf", "device-flow", "device-flow-zipf")
+            or s.endswith((".json", ".jsonl", ".eve"))):
         return "flow"
     return "packets"
 
@@ -141,10 +143,14 @@ def run_sinks(source: str, sink_names, *, mode: str = "blocking",
               anonymization: str = "feistel",
               pcap_out: str = "anonymized.pcl",
               anomaly_threshold: float = 3.0, seed: int = 0,
-              use_kernel: bool = False):
+              use_kernel: bool = False,
+              producer_workers: int | None = None,
+              submit_batches: int | None = None):
     """Generic engine run: any source spec x sink list x policy.
 
-    Geometry arguments left as None take the workload's defaults.  Returns
+    Geometry arguments left as None take the workload's defaults.
+    ``producer_workers``/``submit_batches`` forward to the policy
+    constructor (an error for policies without the knob).  Returns
     (EngineReport, finalized sink results keyed by sink name).
     """
     workload = infer_workload(source)
@@ -155,8 +161,11 @@ def run_sinks(source: str, sink_names, *, mode: str = "blocking",
         anonymization=anonymization,
         build_kernel=use_kernel,
     )
-    policy = {"stream": "double_buffered", "distributed": "sharded"}.get(
-        mode, mode
+    policy = make_policy(
+        {"stream": "double_buffered", "distributed": "sharded"}.get(
+            mode, mode
+        ),
+        producer_workers=producer_workers, submit_batches=submit_batches,
     )
     engine = TrafficEngine(
         cfg, workload=workload, policy=policy,
@@ -208,7 +217,17 @@ def main(argv=None):
                     choices=["uniform", "zipf"])
     ap.add_argument("--source", default=None,
                     help="uniform | zipf | flow | flow-zipf | capture.pcl "
-                         "| eve.json (defaults to --traffic)")
+                         "| eve.json | device-uniform | device-zipf | "
+                         "device-flow | device-flow-zipf (device-* generate "
+                         "on device inside jit: zero H2D copies; defaults "
+                         "to --traffic)")
+    ap.add_argument("--producer-workers", type=int, default=None,
+                    help="prefetch worker threads for the buffered/async "
+                         "policies (in-order delivery at any count)")
+    ap.add_argument("--submit-batches", type=int, default=None,
+                    help="source batches stacked per device dispatch for "
+                         "the async policies (one vmapped stage-graph "
+                         "call; per-batch outputs unchanged)")
     ap.add_argument("--sink", default=None,
                     help="comma list: stats,anomaly,topk,pcap "
                          "(default stats)")
@@ -228,7 +247,9 @@ def main(argv=None):
     source = args.source if args.source is not None else args.traffic
     workload = infer_workload(source)
 
-    if args.sink is not None or args.source is not None:
+    if (args.sink is not None or args.source is not None
+            or args.producer_workers is not None
+            or args.submit_batches is not None):
         # the generic Source x Sink path: an explicit --source must never
         # fall through to the synthetic-only legacy paths (which would
         # silently replay uniform traffic instead of the requested source)
@@ -240,6 +261,8 @@ def main(argv=None):
             pcap_out=args.pcap_out,
             anomaly_threshold=args.anomaly_threshold,
             use_kernel=args.build_kernel,
+            producer_workers=args.producer_workers,
+            submit_batches=args.submit_batches,
         )
         unit = "flows" if workload == "flow" else "pkts"
         print(f"[ingest/{workload}/{rep.policy}] {rep.packets:,} {unit}, "

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core.window import WindowConfig
 from repro.engine import (
     AsyncPipelinedPolicy,
+    DoubleBufferedPolicy,
     IterableSource,
     MatrixRetention,
     ShardedPipelinedPolicy,
@@ -195,6 +196,33 @@ def test_mid_stream_exception_through_engine():
     with pytest.raises(_NicDied):
         eng.run(IterableSource(it=dying_source()))
     assert len(policy._inflight) == 0
+
+
+@pytest.mark.parametrize("policy_factory", [
+    lambda: DoubleBufferedPolicy(queue_depth=2),
+    lambda: AsyncPipelinedPolicy(max_in_flight=3),
+], ids=["double_buffered", "async_pipelined"])
+def test_failed_run_keeps_produce_accounting_observable(policy_factory):
+    """The prefetcher stays on the policy instance after a failed run, and
+    its locked produce_s snapshot banks every device_put — including work
+    in flight when the stream died — so post-mortems see real IO time."""
+    cfg = _cfg()
+    policy = policy_factory()
+
+    def dying_source():
+        rng = np.random.default_rng(3)
+        for _ in range(4):
+            yield rng.integers(0, 1 << 16, (2, 16, 2), dtype=np.uint32)
+        raise _NicDied("cable pulled")
+
+    eng = TrafficEngine(cfg, policy=policy, sinks=[StatsAccumulator()])
+    with pytest.raises(_NicDied):
+        eng.run(IterableSource(it=dying_source()))
+    pf = policy._prefetcher
+    assert pf.closed
+    assert not pf._thread.is_alive()
+    assert pf.produce_s > 0.0  # the 4 produced batches' transfer time
+    assert pf.produce_time() == pytest.approx(pf.produce_s)
 
 
 # -- sharded_pipelined ------------------------------------------------------

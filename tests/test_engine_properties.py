@@ -25,12 +25,16 @@ from hypothesis import given, settings, strategies as st
 from repro.core.window import WindowConfig
 from repro.engine import (
     AsyncPipelinedPolicy,
+    DeviceSyntheticFlowSource,
+    DeviceSyntheticSource,
     DoubleBufferedPolicy,
     MatrixRetention,
     ShardedPolicy,
+    Sink,
     StatsAccumulator,
     TrafficEngine,
     canonical_policies,
+    make_policy,
 )
 from repro.engine import policies as policies_mod
 
@@ -62,11 +66,25 @@ def _cfg(window_log2, windows_per_batch):
 
 
 def _run(policy_key, cfg, workload, kind, seed, *, depth=None,
-         matrices=False):
-    """Run a cached engine; returns (report, per-batch stats, matrices)."""
-    cache_key = (policy_key, depth, matrices, workload, cfg)
+         matrices=False, workers=None, submit_batches=None):
+    """Run a cached engine; returns (report, per-batch stats, matrices).
+
+    ``kind`` may be a generator-kind string or a Source instance (the
+    device-resident sources enter the matrix this way).  ``workers`` and
+    ``submit_batches`` forward through ``make_policy``, which drops None.
+    """
+    cache_key = (policy_key, depth, workers, submit_batches, matrices,
+                 workload, cfg)
     if cache_key not in _ENGINES:
-        if policy_key == "double_buffered" and depth:
+        if workers or submit_batches:
+            knobs = {"producer_workers": workers,
+                     "submit_batches": submit_batches}
+            if depth and policy_key == "double_buffered":
+                knobs["queue_depth"] = depth
+            elif depth:
+                knobs["max_in_flight"] = depth
+            policy = make_policy(policy_key, **knobs)
+        elif policy_key == "double_buffered" and depth:
             policy = DoubleBufferedPolicy(queue_depth=depth)
         elif policy_key == "async_pipelined" and depth:
             policy = AsyncPipelinedPolicy(max_in_flight=depth)
@@ -243,3 +261,125 @@ def test_policy_equivalence_grid(workload, kind, seed, window_log2, wpb,
                                  depth):
     _assert_policy_equivalence(workload, kind, seed, window_log2, wpb,
                                depth)
+
+
+# -- device-resident sources enter the canonical matrix ---------------------
+
+def _device_source(workload, kind, seed, cfg, n_batches=2):
+    cls = (DeviceSyntheticFlowSource if workload == "flow"
+           else DeviceSyntheticSource)
+    return cls(kind=kind, seed=seed, n_batches=n_batches,
+               windows_per_batch=cfg.windows_per_batch,
+               window_size=cfg.window_size)
+
+
+def _assert_same_trace(policy, ref, got, *, sharded, matrices=True):
+    (tb, mb), (tp, mp) = ref, got
+    if sharded:
+        for a, b in zip(tb, tp):
+            for k in SHARDED_KEYS:
+                np.testing.assert_array_equal(
+                    np.asarray(a[k]), np.asarray(b[k]),
+                    err_msg=f"{policy}:{k}")
+        return
+    for a, b in zip(tb, tp):
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"{policy}:{k}")
+    if matrices:
+        for a, b in zip(mb, mp):
+            np.testing.assert_array_equal(np.asarray(a.vals),
+                                          np.asarray(b.vals))
+            assert int(a.nnz) == int(b.nnz)
+
+
+@pytest.mark.parametrize("workload", WORKLOADS)
+@pytest.mark.parametrize("kind", ["uniform", "zipf"])
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_device_source_matches_host_baseline(policy, workload, kind):
+    """Every canonical policy run on the device-resident source produces
+    the same stats (and retained matrices) as the blocking policy run on
+    the same stream's host-placement twin — device generation is pure
+    work relocation, and the keyed-per-window stream is policy-invariant.
+    """
+    cfg = _cfg(4, 2)
+    dev = _device_source(workload, kind, 11, cfg)
+    sharded = _is_sharded(policy)
+    _, tb, mb = _run("blocking", cfg, workload, dev.host_baseline(), 11,
+                     matrices=True)
+    _, tp, mp = _run(policy, cfg, workload, dev, 11, matrices=not sharded)
+    _assert_same_trace(policy, (tb, mb), (tp, mp), sharded=sharded,
+                       matrices=not sharded)
+
+
+@pytest.mark.parametrize("policy,workers,submit_batches", [
+    ("double_buffered", 2, None),
+    ("double_buffered", 3, None),
+    ("async_pipelined", 2, None),
+    ("async_pipelined", 3, 2),
+    ("async_pipelined", 1, 3),
+    ("sharded_pipelined", 2, 2),
+    ("sharded_pipelined", 1, 3),
+])
+def test_workers_and_batched_submission_keep_the_invariant(
+        policy, workers, submit_batches):
+    """Multi-worker producers and K-batched submission are pure
+    scheduling: stats and retained matrices stay bit-identical to the
+    blocking host-baseline run.  n_batches=5 is deliberately not a
+    multiple of K, so the padded final partial chunk is exercised (padded
+    lanes must never be delivered)."""
+    cfg = _cfg(4, 2)
+    dev = _device_source("packets", "uniform", 23, cfg, n_batches=5)
+    sharded = _is_sharded(policy)
+    rb, tb, mb = _run("blocking", cfg, "packets", dev.host_baseline(), 23,
+                      matrices=True)
+    rp, tp, mp = _run(policy, cfg, "packets", dev, 23,
+                      matrices=not sharded, workers=workers,
+                      submit_batches=submit_batches)
+    assert rb.batches == rp.batches == 5
+    assert rb.packets == rp.packets
+    assert len(tp) == 5
+    assert rp.producer_workers == workers
+    assert rp.submit_batches == (submit_batches or 1)
+    _assert_same_trace(policy, (tb, mb), (tp, mp), sharded=sharded,
+                       matrices=not sharded)
+
+
+class _IndexTrace(Sink):
+    """Records the submission index each consume() call delivers."""
+
+    name = "index_trace"
+    requires = ("merge_overflow",)
+
+    def __init__(self):
+        self.indices = []
+
+    def consume(self, index, outputs):
+        self.indices.append(index)
+
+    def finalize(self):
+        return list(self.indices)
+
+
+def test_sinks_see_submission_order_under_reordering_workers():
+    """3 producer workers transform concurrently, so items routinely
+    complete out of order — yet sinks must observe batches in submission
+    order (the reorder buffer + in-order ring retire guarantee)."""
+    cfg = _cfg(4, 2)
+    dev = _device_source("packets", "uniform", 31, cfg, n_batches=6)
+    trace = _IndexTrace()
+    eng = TrafficEngine(cfg, policy=make_policy(
+        "async_pipelined", producer_workers=3, max_in_flight=3,
+    ), sinks=[StatsAccumulator(), trace])
+    rep = eng.run(dev)
+    assert rep.batches == 6
+    assert trace.indices == list(range(6))
+    # and the per-batch stats line up with the blocking host-run, batch
+    # for batch — order-sensitive by construction
+    _, tb, _ = _run("blocking", cfg, "packets", dev.host_baseline(), 31,
+                    matrices=True)
+    per_batch = eng.finalize()["stats"]["per_batch"]
+    for a, b in zip(tb, per_batch):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)

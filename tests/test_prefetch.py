@@ -142,3 +142,162 @@ def test_produce_time_accounting():
     pf = BoundedPrefetcher(iter(range(3)), depth=2, transform=slow)
     assert list(pf) == [0, 1, 2]
     assert pf.produce_s >= 0.03
+
+
+# -- multi-worker producers -------------------------------------------------
+
+
+def test_workers_deliver_in_source_order_under_reordering():
+    """4 workers with inverted per-item latency: late items finish their
+    transforms *first*, yet the consumer must still see source order (the
+    reorder buffer holds completed items until their turn)."""
+    n = 12
+
+    def jitter(x):
+        time.sleep((n - x) * 0.004)  # item 0 is the slowest
+        return x * 10
+
+    pf = BoundedPrefetcher(iter(range(n)), depth=8, transform=jitter,
+                           workers=4)
+    assert list(pf) == [x * 10 for x in range(n)]
+    for t in pf._threads:
+        assert not t.is_alive()
+
+
+def test_workers_error_delivers_prefix_then_raises():
+    """With reordering workers, an item failing mid-stream must still let
+    everything sequenced *before* it through, then raise — later items,
+    even if already transformed, are discarded."""
+
+    def bad(x):
+        if x == 3:
+            raise ValueError("boom at 3")
+        time.sleep(0.002 * (8 - x))
+        return x
+
+    pf = BoundedPrefetcher(iter(range(8)), depth=8, transform=bad,
+                           workers=3)
+    out = []
+    with pytest.raises(ValueError, match="boom at 3"):
+        for x in pf:
+            out.append(x)
+    assert out == [0, 1, 2]
+    for t in pf._threads:
+        assert not t.is_alive()
+
+
+def test_workers_validation():
+    with pytest.raises(ValueError, match="workers"):
+        BoundedPrefetcher(iter(range(3)), workers=0)
+
+
+# -- close(): join-timeout warning + condition-driven (no-polling) wakeups --
+
+
+def test_close_warns_by_name_when_worker_cannot_join():
+    """A source wedged in foreign code can defeat close()'s join; that must
+    be a RuntimeWarning naming the stuck thread, never a silent leak."""
+    import threading
+
+    release = threading.Event()
+
+    def wedged():
+        yield 0
+        release.wait(60)  # blocked where close() cannot interrupt
+        yield 1
+
+    pf = BoundedPrefetcher(wedged(), depth=2)
+    assert next(pf) == 0
+    time.sleep(0.05)  # let the worker park inside the source
+    with pytest.warns(RuntimeWarning, match="repro-prefetch-worker-0"):
+        pf.close(timeout=0.1)
+    assert pf.closed
+    # un-wedge and reap the worker so the thread-leak fixture stays green
+    release.set()
+    pf._thread.join(timeout=2.0)
+    assert not pf._thread.is_alive()
+
+
+def test_close_while_parked_returns_promptly():
+    """Cancellation is condition-driven: a worker parked on a full buffer
+    wakes on notify, not on a poll tick — close() latency is bounded by
+    the wakeup, nowhere near any polling period."""
+    pf = BoundedPrefetcher(iter(range(100)), depth=1)
+    time.sleep(0.05)  # worker fills the buffer and parks on the bound
+    t0 = time.perf_counter()
+    pf.close()
+    assert time.perf_counter() - t0 < 0.25
+    assert not pf._thread.is_alive()
+
+
+def test_close_wakes_parked_consumer_promptly():
+    import threading
+
+    release = threading.Event()
+
+    def slow_gen():
+        yield 0
+        release.wait(60)
+        yield 1
+
+    pf = BoundedPrefetcher(slow_gen(), depth=2)
+    assert next(pf) == 0
+    woke = threading.Event()
+
+    def consumer():
+        for _ in pf:
+            pass
+        woke.set()
+
+    t = threading.Thread(target=consumer, daemon=True)
+    t.start()
+    time.sleep(0.1)  # consumer is parked on the empty buffer
+    t0 = time.perf_counter()
+    threading.Thread(target=pf.close, daemon=True).start()
+    assert woke.wait(timeout=0.5)
+    assert time.perf_counter() - t0 < 0.5
+    release.set()
+    pf._thread.join(timeout=2.0)
+    assert not pf._thread.is_alive()
+
+
+# -- produce_s: locked snapshot, in-flight + error-path accounting ----------
+
+
+def test_produce_s_snapshot_includes_in_progress_transform():
+    import threading
+
+    entered = threading.Event()
+    release = threading.Event()
+
+    def gated(x):
+        if x == 1:
+            entered.set()
+            release.wait(10)
+        return x
+
+    pf = BoundedPrefetcher(iter(range(3)), depth=2, transform=gated)
+    assert next(pf) == 0
+    assert entered.wait(timeout=2.0)
+    time.sleep(0.05)  # transform of item 1 is mid-flight
+    assert pf.produce_s >= 0.05  # snapshot sees the in-progress transform
+    release.set()
+    assert list(pf) == [1, 2]
+    assert not pf._thread.is_alive()
+
+
+def test_produce_s_keeps_failed_transform_time():
+    """A transform that dies mid-stream still spent IO time; the error
+    path must bank it, not drop it with the traceback."""
+
+    def bad(x):
+        time.sleep(0.04)
+        if x == 1:
+            raise RuntimeError("mid-stream")
+        return x
+
+    pf = BoundedPrefetcher(iter(range(3)), depth=2, transform=bad)
+    with pytest.raises(RuntimeError, match="mid-stream"):
+        list(pf)
+    assert pf.produce_s >= 0.08  # both the good and the failed transform
+    assert not pf._thread.is_alive()
