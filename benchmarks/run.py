@@ -43,6 +43,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (
         depth_sweep,
+        fault_overhead,
         fig2_flow,
         fig2_graphblas_io,
         fig2_graphblas_only,
@@ -75,6 +76,10 @@ def main(argv=None) -> int:
             **(dict(window_log2=10, windows_per_batch=4, n_batches=4,
                     depths=(1, 2, 4), json_path=None) if args.quick
                else dict(reps=3))
+        ),
+        "fault_overhead": lambda: fault_overhead.run(
+            **(dict(window_log2=8, windows_per_batch=4, n_batches=8)
+               if args.quick else dict(reps=3))
         ),
         "kernels": kernels_bench.run,
         "roofline": roofline.run,

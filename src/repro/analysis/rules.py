@@ -628,3 +628,81 @@ class ThreadSharedStateRule(Rule):
         elif isinstance(expr, ast.Call):
             return ThreadSharedStateRule._is_lock(expr.func)
         return name is not None and "lock" in name.lower()
+
+
+# ---------------------------------------------------------------------------
+# swallowed-exception
+# ---------------------------------------------------------------------------
+_BROAD_EXC = {"Exception", "BaseException"}
+_HANDLER_VERBS = ("warn", "log", "record", "fail")
+
+
+def _broad_handler_types(handler: ast.ExceptHandler) -> list[str]:
+    """The broad classes this handler catches: bare ``except:``, Exception,
+    BaseException — named directly or inside a tuple.  A handler for a
+    *specific* exception type is a deliberate decision and never flagged."""
+    t = handler.type
+    if t is None:
+        return ["<bare>"]
+    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+    broad = []
+    for e in elts:
+        name = e.id if isinstance(e, ast.Name) else (
+            e.attr if isinstance(e, ast.Attribute) else None)
+        if name in _BROAD_EXC:
+            broad.append(name)
+    return broad
+
+
+@register_rule
+class SwallowedExceptionRule(Rule):
+    id = "swallowed-exception"
+    doc = (
+        "In the fault-tolerant engine modules (src/repro/engine/): a bare/"
+        "Exception/BaseException handler whose body neither re-raises, nor "
+        "reads the bound exception, nor calls a warn/log/record/fail "
+        "handler. The engine's degradation contract is *honest* "
+        "accounting — every survived failure must be recorded (counters, "
+        "_record_failure, warnings.warn) or re-raised; a silent `except "
+        "Exception: pass` turns a fault into a lie about coverage."
+    )
+    paths = ("src/repro/engine",)
+
+    def check(self, tree, source, path):
+        findings = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            broad = _broad_handler_types(node)
+            if not broad:
+                continue
+            if self._handles(node):
+                continue
+            caught = ", ".join(broad).replace("<bare>", "everything")
+            findings.append(self.finding(
+                path, node,
+                f"broad except ({caught}) drops the error on the floor: "
+                f"no raise, no use of the caught exception, no "
+                f"warn/log/record call — record the failure or re-raise",
+            ))
+        return findings
+
+    @staticmethod
+    def _handles(handler: ast.ExceptHandler) -> bool:
+        """Does the handler body do *something* with the error?  A raise
+        (including bare re-raise), any read of the bound exception name,
+        or a call whose name contains a handling verb all count."""
+        for node in ast.walk(handler):
+            if isinstance(node, ast.Raise):
+                return True
+            if (handler.name and isinstance(node, ast.Name)
+                    and node.id == handler.name
+                    and isinstance(node.ctx, ast.Load)):
+                return True
+            if isinstance(node, ast.Call):
+                f = node.func
+                name = f.attr if isinstance(f, ast.Attribute) else (
+                    f.id if isinstance(f, ast.Name) else "")
+                if any(v in name.lower() for v in _HANDLER_VERBS):
+                    return True
+        return False

@@ -30,8 +30,26 @@ class CheckpointManager:
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
-        self._lock = threading.Lock()
+        # RLock: save() always takes it (it mutates the directory and runs
+        # gc), and callers that already hold it (none in-repo, but external
+        # code following the old save_async pattern) must not deadlock.
+        self._lock = threading.RLock()
         self._pending: threading.Thread | None = None
+        self._clean_stale_tmp()
+
+    def _clean_stale_tmp(self) -> None:
+        """Drop leftovers of saves that died between write and rename.
+
+        Only files matching our own tmp naming are touched; a fresh manager
+        pointed at a directory with a crashed sibling's half-written
+        ``ckpt_*.tmp`` would otherwise carry the garbage forever (``steps()``
+        ignores it, but it pins disk and confuses humans).
+        """
+        for p in self.dir.glob("ckpt_*.tmp"):
+            try:
+                p.unlink()
+            except FileNotFoundError:
+                pass
 
     # -- discovery -----------------------------------------------------------
     def steps(self) -> list[int]:
@@ -50,18 +68,24 @@ class CheckpointManager:
         return self.dir / f"ckpt_{step:010d}.rpck"
 
     # -- save ----------------------------------------------------------------
-    def save(self, step: int, state: Any, *, meta: dict | None = None) -> Path:
-        meta = dict(meta or {})
-        meta["step"] = step
-        final = self._path(step)
-        tmp = final.with_suffix(".tmp")
-        serialization.save_pytree(state, tmp, meta=meta)
-        tmp.rename(final)  # atomic on POSIX
-        self._gc()
-        return final
+    def save(self, step: int, state: Any, *, meta: dict | None = None,
+             portable: bool = False) -> Path:
+        # The lock lives here, not in save_async's worker: a direct save()
+        # racing an in-flight async save used to mutate/gc the directory
+        # unguarded while the worker held _lock.
+        with self._lock:
+            meta = dict(meta or {})
+            meta["step"] = step
+            final = self._path(step)
+            tmp = final.with_suffix(".tmp")
+            serialization.save_pytree(state, tmp, meta=meta,
+                                      portable=portable)
+            tmp.rename(final)  # atomic on POSIX
+            self._gc()
+            return final
 
     def save_async(self, step: int, state: Any, *,
-                   meta: dict | None = None) -> None:
+                   meta: dict | None = None, portable: bool = False) -> None:
         """Host-fetch now (cheap), serialize/compress/write in background."""
         import jax
 
@@ -71,8 +95,7 @@ class CheckpointManager:
         self.wait()  # one in flight at a time
 
         def work():
-            with self._lock:
-                self.save(step, host_state, meta=meta)
+            self.save(step, host_state, meta=meta, portable=portable)
 
         self._pending = threading.Thread(target=work, daemon=True)
         self._pending.start()

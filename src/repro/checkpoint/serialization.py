@@ -58,14 +58,68 @@ def _unpack_leaf(rec: dict):
     ).copy()
 
 
+# Self-describing ("portable") containers: unlike the flat leaves+treedef
+# form above, the structure is encoded recursively so a restoring process
+# needs no `like` template — required for engine window-state checkpoints
+# whose shape (number of retained matrices, per-batch stats rows, ...)
+# varies with how far the crashed run got.
+_NODE_DICT = "d"
+_NODE_LIST = "l"
+_NODE_TUPLE = "t"
+_NODE_PRIM = "p"   # msgpack-native: str/bytes/bool/int/float, round-trip exact
+_NODE_LEAF = "x"   # array/scalar/None via _pack_leaf
+
+
+def _encode_node(x) -> dict:
+    if isinstance(x, dict):
+        enc = {}
+        for k, v in x.items():
+            if not isinstance(k, str):
+                raise TypeError(
+                    f"portable checkpoints require str dict keys, got {k!r}"
+                )
+            enc[k] = _encode_node(v)
+        return {"t": _NODE_DICT, "v": enc}
+    if isinstance(x, (list, tuple)):
+        tag = _NODE_TUPLE if isinstance(x, tuple) else _NODE_LIST
+        return {"t": tag, "v": [_encode_node(v) for v in x]}
+    if isinstance(x, (str, bytes, bool, int, float)) and not isinstance(
+        x, np.generic
+    ):
+        return {"t": _NODE_PRIM, "v": x}
+    return {"t": _NODE_LEAF, "v": _pack_leaf(x)}
+
+
+def _decode_node(rec: dict):
+    tag, v = rec["t"], rec["v"]
+    if tag == _NODE_DICT:
+        return {k: _decode_node(r) for k, r in v.items()}
+    if tag == _NODE_LIST:
+        return [_decode_node(r) for r in v]
+    if tag == _NODE_TUPLE:
+        return tuple(_decode_node(r) for r in v)
+    if tag == _NODE_PRIM:
+        return v
+    if tag == _NODE_LEAF:
+        return _unpack_leaf(v)
+    raise ValueError(f"unknown portable node tag {tag!r}")
+
+
 def save_pytree(tree: Any, path: str | Path, *, compress: bool = True,
-                meta: dict | None = None) -> None:
-    leaves, treedef = jax.tree.flatten(tree)
-    payload = {
-        "leaves": [_pack_leaf(x) for x in leaves],
-        "treedef": str(treedef),
-        "meta": meta or {},
-    }
+                meta: dict | None = None, portable: bool = False) -> None:
+    if portable:
+        payload = {
+            "fmt": "tree",
+            "tree": _encode_node(tree),
+            "meta": meta or {},
+        }
+    else:
+        leaves, treedef = jax.tree.flatten(tree)
+        payload = {
+            "leaves": [_pack_leaf(x) for x in leaves],
+            "treedef": str(treedef),
+            "meta": meta or {},
+        }
     raw = msgpack.packb(payload, use_bin_type=True)
     flags = b"\x00"
     if compress and zstandard is not None:
@@ -75,7 +129,8 @@ def save_pytree(tree: Any, path: str | Path, *, compress: bool = True,
 
 
 def load_pytree(path: str | Path, like: Any | None = None):
-    """Load; if ``like`` given, unflatten into its structure (and it must
+    """Load; portable files return ``(tree, meta)`` directly. For flat
+    files: if ``like`` given, unflatten into its structure (and it must
     match), else return (leaves, treedef_str, meta)."""
     blob = Path(path).read_bytes()
     assert blob[:4] == b"RPCK", "not a repro checkpoint"
@@ -85,6 +140,8 @@ def load_pytree(path: str | Path, like: Any | None = None):
             raise RuntimeError("zstandard required")
         raw = zstandard.ZstdDecompressor().decompress(raw)
     payload = msgpack.unpackb(raw, raw=False)
+    if payload.get("fmt") == "tree":
+        return _decode_node(payload["tree"]), payload["meta"]
     leaves = [_unpack_leaf(r) for r in payload["leaves"]]
     if like is not None:
         _, treedef = jax.tree.flatten(like)

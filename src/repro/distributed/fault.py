@@ -30,14 +30,18 @@ class HostState:
     host_id: int
     last_step: int = -1
     last_beat: float = 0.0
+    registered_at: float = 0.0
     step_times: list = dataclasses.field(default_factory=list)
     alive: bool = True
 
 
 class HeartbeatMonitor:
     def __init__(self, n_hosts: int, window: int = 16,
-                 straggle_factor: float = 3.0, dead_after_s: float = 60.0):
-        self.hosts = {h: HostState(h) for h in range(n_hosts)}
+                 straggle_factor: float = 3.0, dead_after_s: float = 60.0,
+                 now: float | None = None):
+        registered = now if now is not None else time.monotonic()
+        self.hosts = {h: HostState(h, registered_at=registered)
+                      for h in range(n_hosts)}
         self.window = window
         self.straggle_factor = straggle_factor
         self.dead_after_s = dead_after_s
@@ -71,13 +75,23 @@ class HeartbeatMonitor:
         return out
 
     def dead(self, now: float | None = None) -> list[int]:
+        """Hosts silent for longer than ``dead_after_s``.
+
+        A host that registered but never beat counts its silence from its
+        registration timestamp — previously such a host had
+        ``last_beat == 0`` and could never be declared dead, which meant a
+        worker wedged before its first heartbeat was invisible to the
+        straggler policy forever.
+        """
         now = now if now is not None else time.monotonic()
-        return [
-            h.host_id
-            for h in self.hosts.values()
-            if h.alive and h.last_beat > 0
-            and now - h.last_beat > self.dead_after_s
-        ]
+        out = []
+        for h in self.hosts.values():
+            if not h.alive:
+                continue
+            since = h.last_beat if h.last_beat > 0 else h.registered_at
+            if now - since > self.dead_after_s:
+                out.append(h.host_id)
+        return out
 
     def mark_dead(self, host_id: int) -> None:
         self.hosts[host_id].alive = False

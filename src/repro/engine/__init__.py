@@ -17,12 +17,35 @@ Source -> Stage graph -> Sink, under a pluggable execution policy:
   ``async_pipelined`` (async dispatch + donated buffers, ring of in-flight
   batches), ``sharded`` (mesh-parallel with the exact all_to_all row-block
   merge), ``sharded_pipelined`` (sharded + prefetch + async ring).
+* Faults (``engine.faults``): deterministic fault injection
+  (``FaultPlan``), bounded-retry + quarantine survival
+  (``RetryingSource``, ``QuarantineSink``), and the per-run
+  ``FaultTolerance`` config ``TrafficEngine.run`` consumes; paired with
+  engine checkpoints (``checkpoint_every=``/``resume=``) for
+  crash-consistent, bit-identical resume (DESIGN.md "Fault tolerance &
+  resume").
 
 See DESIGN.md at the repo root for the architecture; ``core.stream`` and
 ``data.pipeline`` are compatibility shims over this package.
 """
 
 from repro.engine.engine import TrafficEngine  # noqa: F401
+from repro.engine.faults import (  # noqa: F401
+    FaultCounters,
+    FaultInjectingSink,
+    FaultInjectingSource,
+    FaultPlan,
+    FaultSpec,
+    FaultTolerance,
+    PermanentSourceError,
+    PoisonedBatchError,
+    QuarantineSink,
+    RetryingSource,
+    SinkWriteError,
+    SourceTimeoutError,
+    TransientSourceError,
+    make_batch_validator,
+)
 from repro.engine.policies import (  # noqa: F401
     AsyncPipelinedPolicy,
     BlockingPolicy,
@@ -34,7 +57,11 @@ from repro.engine.policies import (  # noqa: F401
     canonical_policies,
     make_policy,
 )
-from repro.engine.prefetch import BoundedPrefetcher  # noqa: F401
+from repro.engine.prefetch import (  # noqa: F401
+    BoundedPrefetcher,
+    WorkerDiedError,
+    WorkerKilled,
+)
 from repro.engine.sinks import (  # noqa: F401
     AnomalySink,
     MatrixRetention,
@@ -48,11 +75,13 @@ from repro.engine.source import (  # noqa: F401
     DeviceSyntheticSource,
     IterableSource,
     PcapLiteSource,
+    SkippingSource,
     Source,
     SuricataFlowSource,
     SyntheticFlowSource,
     SyntheticSource,
     as_source,
+    fast_forward,
 )
 from repro.engine.stages import (  # noqa: F401
     DEFAULT_STAGES,

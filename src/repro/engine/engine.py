@@ -14,14 +14,16 @@ returned ``EngineReport``.
 
 from __future__ import annotations
 
+import warnings
 from typing import Sequence
 
 import numpy as np
 
 from repro.core.window import WindowConfig
+from repro.engine.faults import FaultTolerance, RetryingSource
 from repro.engine.policies import ExecutionPolicy, ShardedPolicy, make_policy
 from repro.engine.sinks import Sink
-from repro.engine.source import Source, as_source
+from repro.engine.source import Source, as_source, fast_forward
 from repro.engine.stages import (
     DEFAULT_OUTPUTS,
     WORKLOAD_INPUT_KEY,
@@ -91,6 +93,20 @@ class TrafficEngine:
                                     input_key=input_key)
         self._process_fn = None
         self._overflow = 0
+        # per-run fault-tolerance / checkpoint state (set by run())
+        self._active_sinks: list[Sink] = self.sinks
+        self._sink_failure_mode = "raise"
+        self._ft: FaultTolerance | None = None
+        self._retrier: RetryingSource | None = None
+        self._ckpt_mgr = None
+        self._ckpt_every = 0
+        self._ckpt_measured_base = 0
+        self._ckpt_stream_base = 0
+        self._ckpt_warmup = 0
+        self._ckpt_per_item = 0
+        self._ckpt_prior_counters: dict = {}
+        self._ckpt_meta: dict = {}
+        self._ckpt_written = 0
 
     def make_source(self, spec="uniform", *, n_batches: int = 8,
                     seed: int = 0) -> Source:
@@ -103,8 +119,10 @@ class TrafficEngine:
         )
 
     def run(self, source="uniform", *, n_batches: int = 8, seed: int = 0,
-            warmup_items: int = 0, keep_results: bool = True
-            ) -> EngineReport:
+            warmup_items: int = 0, keep_results: bool = True,
+            fault_tolerance: FaultTolerance | None = None,
+            checkpoint_every: int = 0, checkpoint_manager=None,
+            resume: bool = False) -> EngineReport:
         """Drive ``source`` through the pipeline; returns the telemetry.
 
         ``source`` may be a Source, an iterable of batches, ``"uniform"`` /
@@ -113,21 +131,118 @@ class TrafficEngine:
         excluded from timing, packet counts, and sink delivery (jit
         compile).  ``keep_results=False`` drops per-batch outputs once the
         sinks have consumed them, keeping long runs O(1) in memory.
+
+        ``fault_tolerance`` (a ``faults.FaultTolerance``) wraps the source
+        in the injection/retry/quarantine layers and stamps the run's fault
+        accounting into the report.  ``checkpoint_every=k`` writes a
+        crash-consistent engine checkpoint (sink state, merge overflow,
+        stream cursor) to ``checkpoint_manager`` after every k-th measured
+        batch; ``resume=True`` restores the latest checkpoint (cold-starts
+        if none exists), fast-forwards the source past everything the
+        crashed run disposed of, and folds the checkpointed batch/packet/
+        fault totals into the returned report — so a killed-and-resumed
+        run finalizes bit-identically to an uninterrupted one.
         """
+        ft = fault_tolerance
+        if (checkpoint_every or resume) and checkpoint_manager is None:
+            raise ValueError(
+                "checkpoint_every/resume require a checkpoint_manager"
+            )
+        if ft is not None:
+            ft.counters.reset()
+            if ft.quarantine is not None and ft.quarantine not in self.sinks:
+                self.sinks.append(ft.quarantine)
+        prior = None
+        start_measured = 0
+        start_stream = 0
+        self._overflow = 0
+        if resume:
+            state, _meta = checkpoint_manager.restore(None)
+            if state is not None:
+                self._load_checkpoint_state(state)
+                prior = state
+                start_measured = int(state["batches_done"])
+                start_stream = int(state.get("stream_pos", start_measured))
+        if start_stream and warmup_items:
+            raise ValueError(
+                "warmup_items must be 0 when resuming from a checkpoint: "
+                "warmup would consume (and discard) resumed stream items"
+            )
         src = self.make_source(source, n_batches=n_batches, seed=seed)
+        per_item = src.packets_per_item
+        if checkpoint_every and per_item is None:
+            raise ValueError(
+                "checkpointing requires a source with a known "
+                "packets_per_item (exact packet accounting in checkpoints)"
+            )
+        if start_stream:
+            src = fast_forward(src, start_stream)
+        wrapped = src
+        if ft is not None:
+            wrapped = ft.wrap_source(src, cfg=self.cfg,
+                                     workload=self.workload)
+        self._active_sinks = (ft.wrap_sinks(self.sinks) if ft is not None
+                              else self.sinks)
+        self._sink_failure_mode = (ft.sink_failures if ft is not None
+                                   else "raise")
+        self._ft = ft
+        self._retrier = (wrapped if isinstance(wrapped, RetryingSource)
+                         else None)
+        self._ckpt_mgr = checkpoint_manager if checkpoint_every else None
+        self._ckpt_every = int(checkpoint_every)
+        self._ckpt_measured_base = start_measured
+        self._ckpt_stream_base = start_stream
+        self._ckpt_warmup = int(warmup_items)
+        self._ckpt_per_item = int(per_item or 0)
+        self._ckpt_prior_counters = (dict(prior.get("counters") or {})
+                                     if prior is not None else {})
+        self._ckpt_meta = {
+            "workload": self.workload,
+            "policy": self.policy.name,
+            "window_size": int(self.cfg.window_size),
+            "windows_per_batch": int(self.cfg.windows_per_batch),
+            "seed": int(seed),
+            "source": (source if isinstance(source, str)
+                       else type(source).__name__),
+        }
+        self._ckpt_written = 0
         if self._process_fn is None:
             self._process_fn = self.policy.build_process_fn(
                 self.graph, self.cfg, workload=self.workload
             )
-        self._overflow = 0
-        report = self.policy.run(
-            src, self._process_fn,
-            packets_per_item=src.packets_per_item,
-            warmup_items=warmup_items,
-            consume=self._dispatch,
-            keep_results=keep_results,
-        )
+        try:
+            report = self.policy.run(
+                wrapped, self._process_fn,
+                packets_per_item=per_item,
+                warmup_items=warmup_items,
+                consume=self._dispatch,
+                keep_results=keep_results,
+            )
+        finally:
+            closer = getattr(wrapped, "close", None)
+            if closer is not None:
+                closer()
         report.merge_overflow = self._overflow
+        report.checkpoints_written = self._ckpt_written
+        report.resumed_from = start_measured
+        if ft is not None:
+            snap = ft.counters.snapshot()
+            report.retries = snap["retries"]
+            report.faults_injected = snap["faults_injected"]
+            report.batches_quarantined = snap["batches_quarantined"]
+            report.packets_dropped = snap["packets_dropped"]
+            report.sink_write_failures = snap["sink_write_failures"]
+        if prior is not None:
+            pc = self._ckpt_prior_counters
+            report.batches += start_measured
+            report.packets += int(prior.get("packets_done", 0))
+            report.retries += int(pc.get("retries", 0))
+            report.faults_injected += int(pc.get("faults_injected", 0))
+            report.batches_quarantined += int(
+                pc.get("batches_quarantined", 0))
+            report.packets_dropped += int(pc.get("packets_dropped", 0))
+            report.sink_write_failures += int(
+                pc.get("sink_write_failures", 0))
         return report
 
     def finalize(self) -> dict:
@@ -137,5 +252,83 @@ class TrafficEngine:
     def _dispatch(self, index: int, outputs) -> None:
         if isinstance(outputs, dict) and "merge_overflow" in outputs:
             self._overflow += int(np.asarray(outputs["merge_overflow"]))
-        for sink in self.sinks:
-            sink.consume(index, outputs)
+        for sink in self._active_sinks:
+            try:
+                sink.consume(index, outputs)
+            except Exception as e:
+                if self._sink_failure_mode != "record":
+                    raise
+                self._ft.counters.add("sink_write_failures")
+                warnings.warn(
+                    f"sink {sink.name!r} failed on batch {index}: {e!r}; "
+                    "continuing (sink_failures='record')",
+                    RuntimeWarning, stacklevel=2,
+                )
+        if self._ckpt_every:
+            measured_done = self._ckpt_measured_base + index + 1
+            if measured_done % self._ckpt_every == 0:
+                self._save_checkpoint(index, measured_done)
+
+    # -- checkpoint plumbing -------------------------------------------------
+
+    def _save_checkpoint(self, index: int, measured_done: int) -> None:
+        """Write the engine's crash-consistent window state.
+
+        ``stream_pos`` is the cursor a resumed run fast-forwards the source
+        by: the number of stream items the run has *disposed of* (delivered
+        + warmup + skipped + quarantined) up to this batch — taken from the
+        retry layer when one is present, since only it knows about skips.
+        """
+        if self._retrier is not None:
+            stream_rel = self._retrier.delivered_pos(
+                self._ckpt_warmup + index
+            )
+        else:
+            stream_rel = self._ckpt_warmup + index + 1
+        state = {
+            "batches_done": int(measured_done),
+            "stream_pos": int(self._ckpt_stream_base + stream_rel),
+            "packets_done": int(measured_done * self._ckpt_per_item),
+            "merge_overflow": int(self._overflow),
+            "counters": self._cumulative_counters(),
+            "sinks": {s.name: s.state_dict() for s in self.sinks},
+        }
+        self._ckpt_mgr.save(measured_done, state, meta=self._ckpt_meta,
+                            portable=True)
+        self._ckpt_written += 1
+
+    def _cumulative_counters(self) -> dict:
+        """Fault counters across the whole resume chain (prior + this run).
+        Best-effort: prefetch workers pull ahead of consumption, so a
+        checkpoint may include retry work for batches not yet consumed."""
+        out = {k: int(v) for k, v in self._ckpt_prior_counters.items()}
+        if self._ft is not None:
+            for k, v in self._ft.counters.snapshot().items():
+                out[k] = out.get(k, 0) + int(v)
+        return out
+
+    def _load_checkpoint_state(self, state: dict) -> None:
+        sink_states = state.get("sinks") or {}
+        by_name: dict[str, Sink] = {}
+        for s in self.sinks:
+            if s.name in by_name:
+                raise ValueError(
+                    f"cannot resume: duplicate sink name {s.name!r}"
+                )
+            by_name[s.name] = s
+        for name, s_state in sink_states.items():
+            sink = by_name.get(name)
+            if sink is None:
+                raise ValueError(
+                    f"cannot resume: checkpoint carries state for sink "
+                    f"{name!r}, which is not attached to this engine "
+                    f"(attached: {sorted(by_name)})"
+                )
+            sink.load_state_dict(s_state)
+        missing = sorted(set(by_name) - set(sink_states))
+        if missing:
+            raise ValueError(
+                f"cannot resume: sinks {missing} have no state in the "
+                "checkpoint (they were not attached when it was written)"
+            )
+        self._overflow = int(state.get("merge_overflow", 0))

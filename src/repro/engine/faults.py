@@ -1,0 +1,849 @@
+"""Deterministic fault injection + retry/quarantine for the engine.
+
+Every failure mode the long-running collector must survive is modeled as a
+seed-keyed, reproducible fault:
+
+* ``transient`` — a source read that fails N times, then succeeds (flaky
+  capture device; the retry path's bread and butter);
+* ``permanent`` — a source read that never succeeds (dead capture ring);
+* ``slow``      — a read delayed by ``delay_s`` (backpressure / saturated
+  NIC; trips the per-attempt timeout when one is configured);
+* ``poison``    — the read succeeds but the batch is corrupted (truncated
+  trailing axis) and fails stage validation — routed to the quarantine
+  dead-letter path instead of killing the run;
+* ``sink``      — a sink write fails at a given batch index;
+* ``kill-worker`` — the thread performing the read dies (``WorkerKilled``,
+  a BaseException the prefetcher turns into worker last rites);
+* ``crash``     — plain ``RuntimeError``: simulated process death, used by
+  the resume chaos tests (not retryable, not recorded as survivable).
+
+A ``FaultPlan`` is an explicit list of ``FaultSpec``s (or ``parse``/
+``random(seed)`` built), so tests and benchmarks replay the exact same
+failure schedule every run.  ``FaultInjectingSource`` raises read faults
+*before* consuming the wrapped source's item — a retried batch is the same
+batch, and the stream content is unchanged by transient faults.  Batch
+indices in a plan are *stream* indices as seen by the injector (warmup
+batches included, when the engine adds one).
+
+``RetryingSource`` is the survival layer: bounded retries with exponential
+backoff for transient errors, an optional per-attempt timeout (a hung read
+is charged as a failed attempt), and — when retries exhaust or a batch
+fails validation — either a clean raise or a skip/quarantine with honest
+accounting (``FaultCounters``: retries, faults_injected,
+batches_quarantined, packets_dropped, sink_write_failures) that the engine
+copies into ``EngineReport``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import random
+import threading
+import time
+import warnings
+from typing import Callable, Iterable
+
+import numpy as np
+
+from repro.engine.prefetch import WorkerDiedError, WorkerKilled
+from repro.engine.sinks import Sink
+from repro.engine.source import Source
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultCounters",
+    "FaultInjectingSink",
+    "FaultInjectingSource",
+    "FaultPlan",
+    "FaultSpec",
+    "FaultTolerance",
+    "PermanentSourceError",
+    "PoisonedBatchError",
+    "QuarantineSink",
+    "RetryingSource",
+    "SinkWriteError",
+    "SourceTimeoutError",
+    "TransientSourceError",
+    "WorkerDiedError",
+    "WorkerKilled",
+    "make_batch_validator",
+]
+
+
+class TransientSourceError(RuntimeError):
+    """A source read that may succeed if retried."""
+
+
+class PermanentSourceError(RuntimeError):
+    """A source read that will never succeed; retrying is pointless."""
+
+
+class SourceTimeoutError(RuntimeError):
+    """A source read exceeded the per-attempt timeout too many times."""
+
+
+class SinkWriteError(RuntimeError):
+    """A sink failed to persist a batch's outputs."""
+
+
+class PoisonedBatchError(RuntimeError):
+    """A batch failed validation and there is no quarantine to take it."""
+
+
+FAULT_KINDS = ("transient", "permanent", "slow", "poison", "sink",
+               "kill-worker", "crash")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One planned fault: ``kind`` at stream-batch ``batch``.
+
+    ``count`` is how many times a transient fault fires before the read
+    succeeds; ``delay_s`` is the injected latency of a slow read.
+    """
+
+    kind: str
+    batch: int
+    count: int = 1
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{FAULT_KINDS}"
+            )
+        if self.batch < 0:
+            raise ValueError(f"fault batch must be >= 0, got {self.batch}")
+        if self.count < 1:
+            raise ValueError(f"fault count must be >= 1, got {self.count}")
+        if self.delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A reproducible fault schedule: a tuple of ``FaultSpec``s.
+
+    Build explicitly, via ``parse`` (the CLI grammar), or via
+    ``random(seed)`` — the same seed always yields the same plan.
+    """
+
+    specs: tuple[FaultSpec, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "specs", tuple(self.specs))
+
+    def __bool__(self) -> bool:
+        return bool(self.specs)
+
+    def source_specs(self) -> tuple[FaultSpec, ...]:
+        return tuple(s for s in self.specs if s.kind != "sink")
+
+    def sink_batches(self) -> set[int]:
+        return {s.batch for s in self.specs if s.kind == "sink"}
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultPlan":
+        """Parse the CLI grammar: comma-separated ``kind[:arg]@batch``.
+
+        ``arg`` is the retry count for ``transient`` and the delay seconds
+        for ``slow``; other kinds take no argument.  Example:
+        ``"transient:2@1,slow:0.05@2,poison@3,sink@2,crash@5"``.
+        """
+        specs = []
+        for part in filter(None, (p.strip() for p in text.split(","))):
+            head, sep, batch = part.partition("@")
+            if not sep:
+                raise ValueError(
+                    f"bad fault spec {part!r}: expected kind[:arg]@batch"
+                )
+            kind, _, arg = head.partition(":")
+            kw: dict = {}
+            if arg:
+                if kind == "transient":
+                    kw["count"] = int(arg)
+                elif kind == "slow":
+                    kw["delay_s"] = float(arg)
+                else:
+                    raise ValueError(
+                        f"fault kind {kind!r} takes no argument, got {arg!r}"
+                    )
+            specs.append(FaultSpec(kind=kind, batch=int(batch), **kw))
+        return cls(specs=tuple(specs))
+
+    @classmethod
+    def random(cls, seed: int, n_batches: int,
+               rates: dict[str, float] | None = None) -> "FaultPlan":
+        """Seed-keyed random plan over ``n_batches`` stream batches.
+
+        ``rates`` maps fault kind -> per-batch probability; the default
+        exercises only the survivable kinds (transient/slow/poison).
+        """
+        rates = dict(rates if rates is not None
+                     else {"transient": 0.2, "slow": 0.1, "poison": 0.1})
+        for kind in rates:
+            if kind not in FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {kind!r} in rates")
+        rng = random.Random(seed)
+        specs = []
+        for b in range(n_batches):
+            for kind in sorted(rates):
+                if rng.random() >= rates[kind]:
+                    continue
+                if kind == "transient":
+                    specs.append(FaultSpec(kind, b,
+                                           count=rng.randint(1, 2)))
+                elif kind == "slow":
+                    specs.append(FaultSpec(
+                        kind, b, delay_s=round(rng.uniform(0.005, 0.02), 4)
+                    ))
+                else:
+                    specs.append(FaultSpec(kind, b))
+        return cls(specs=tuple(specs))
+
+
+class FaultCounters:
+    """Thread-safe honest accounting of what a degraded run survived.
+
+    One instance per run (``FaultTolerance`` owns and resets it); the
+    engine copies the final snapshot into ``EngineReport``.
+    """
+
+    FIELDS = ("retries", "faults_injected", "batches_quarantined",
+              "packets_dropped", "sink_write_failures")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        with self._lock:
+            for f in self.FIELDS:
+                setattr(self, f, 0)
+
+    def add(self, name: str, n: int = 1) -> None:
+        if name not in self.FIELDS:
+            raise ValueError(f"unknown fault counter {name!r}")
+        with self._lock:
+            setattr(self, name, getattr(self, name) + int(n))
+
+    def snapshot(self) -> dict[str, int]:
+        with self._lock:
+            return {f: int(getattr(self, f)) for f in self.FIELDS}
+
+
+def _poison(item):
+    """Deterministically corrupt a batch: truncate the trailing axis so the
+    payload width no longer matches the workload (fails validation)."""
+    return item[..., :-1]
+
+
+@dataclasses.dataclass
+class _Pending:
+    spec: FaultSpec
+    remaining: int = 0
+    fired: bool = False
+
+    def __post_init__(self):
+        self.remaining = self.spec.count
+
+
+class FaultInjectingSource(Source):
+    """Wrap a source; raise/modify reads according to a ``FaultPlan``.
+
+    Read faults fire *before* the wrapped item is consumed, so a retry
+    re-attempts the same batch and the stream content is unchanged once
+    the fault clears.  The batch index advances only on delivery (or an
+    explicit ``skip_current`` from the retry layer).
+    """
+
+    def __init__(self, inner, plan: FaultPlan,
+                 counters: FaultCounters | None = None):
+        self.inner = inner
+        self.plan = plan
+        self.counters = counters if counters is not None else FaultCounters()
+        self.packets_per_item = getattr(inner, "packets_per_item", None)
+
+    def __iter__(self) -> "_FaultIter":
+        return _FaultIter(self)
+
+
+class _FaultIter:
+    def __init__(self, src: FaultInjectingSource):
+        self._inner = iter(src.inner)
+        self._counters = src.counters
+        self._i = 0
+        self._done = False
+        self._pending: dict[int, list[_Pending]] = {}
+        for spec in src.plan.source_specs():
+            self._pending.setdefault(spec.batch, []).append(_Pending(spec))
+
+    def __iter__(self) -> "_FaultIter":
+        return self
+
+    def __next__(self):
+        if self._done:
+            raise StopIteration
+        i = self._i
+        faults = self._pending.get(i, [])
+        for f in faults:
+            kind = f.spec.kind
+            if kind == "transient":
+                if f.remaining > 0:
+                    f.remaining -= 1
+                    self._counters.add("faults_injected")
+                    raise TransientSourceError(
+                        f"injected transient read error at stream batch {i}"
+                        f" ({f.remaining} more before success)"
+                    )
+            elif kind == "permanent":
+                if not f.fired:
+                    f.fired = True
+                    self._counters.add("faults_injected")
+                raise PermanentSourceError(
+                    f"injected permanent read error at stream batch {i}"
+                )
+            elif kind == "crash":
+                if not f.fired:
+                    f.fired = True
+                    self._counters.add("faults_injected")
+                raise RuntimeError(
+                    f"injected crash at stream batch {i}"
+                )
+            elif kind == "kill-worker":
+                if not f.fired:
+                    f.fired = True
+                    self._counters.add("faults_injected")
+                raise WorkerKilled(
+                    f"injected worker death at stream batch {i}"
+                )
+        try:
+            item = next(self._inner)
+        except StopIteration:
+            self._done = True
+            raise
+        for f in faults:
+            kind = f.spec.kind
+            if f.fired:
+                continue
+            if kind == "slow":
+                f.fired = True
+                self._counters.add("faults_injected")
+                time.sleep(f.spec.delay_s)
+            elif kind == "poison":
+                f.fired = True
+                self._counters.add("faults_injected")
+                item = _poison(item)
+        self._i = i + 1
+        return item
+
+    def skip_current(self) -> bool:
+        """Abandon the current batch: drop its remaining faults, consume
+        and discard the wrapped item, advance.  Returns True if a stream
+        item was actually consumed (False: the source had already ended).
+        """
+        if self._done:
+            return False
+        self._pending.pop(self._i, None)
+        try:
+            next(self._inner)
+        except StopIteration:
+            self._done = True
+            return False
+        self._i += 1
+        return True
+
+
+def make_batch_validator(cfg, workload: str = "packets") -> Callable:
+    """Validator for raw source batches against the engine geometry.
+
+    Returns a callable ``validate(item) -> None | str`` (None = valid,
+    str = human-readable reason).  This is the stage-validation gate a
+    poisoned batch fails: rank-3 ``[windows_per_batch, window_size, width]``
+    uint32, width 2 for packets and ``FLOW_WIDTH`` for flows.
+    """
+    from repro.data.flows import FLOW_WIDTH
+
+    width = FLOW_WIDTH if workload == "flow" else 2
+    expect = (cfg.windows_per_batch, cfg.window_size, width)
+
+    def validate(item):
+        shape = tuple(getattr(item, "shape", ()) or ())
+        if len(shape) != 3 or shape != expect:
+            return f"expected shape {expect}, got {shape}"
+        dtype = getattr(item, "dtype", None)
+        if dtype is None or np.dtype(dtype) != np.uint32:
+            return f"expected uint32 payload, got dtype {dtype}"
+        return None
+
+    return validate
+
+
+class QuarantineSink(Sink):
+    """Dead-letter path: poisoned batches land here instead of killing
+    the run.  Entries record the stream index, the validation reason, and
+    (by default) the offending payload, so an operator can replay or
+    inspect exactly what was dropped."""
+
+    name = "quarantine"
+    requires: tuple[str, ...] = ()
+
+    def __init__(self, keep_payload: bool = True):
+        self.keep_payload = keep_payload
+        self.entries: list[dict] = []
+
+    def quarantine(self, index: int, item, reason: str) -> None:
+        rec: dict = {"index": int(index), "reason": str(reason)}
+        if self.keep_payload and hasattr(item, "shape"):
+            import jax
+
+            rec["batch"] = np.asarray(jax.device_get(item))
+        self.entries.append(rec)
+
+    def consume(self, index: int, outputs: dict) -> None:
+        # not fed by the stage graph; entries arrive via quarantine()
+        return None
+
+    def finalize(self) -> dict:
+        return {"batches": len(self.entries), "entries": list(self.entries)}
+
+    def state_dict(self) -> dict:
+        return {"entries": list(self.entries)}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.entries = list(state["entries"])
+
+
+class _AttemptTimeout(Exception):
+    """Internal: one timed pull attempt expired (the pull stays pending)."""
+
+
+class _TimeoutPuller:
+    """Single persistent pull thread so a hung source read can be timed
+    out without killing the stream.  Commands (``pull``/``skip``) map 1:1
+    to result records; a timed-out command can be *abandoned* — its
+    eventual result is dropped on arrival, which is exactly the accounting
+    for "we gave up on that batch" (the stream item still gets consumed).
+    """
+
+    def __init__(self, it, name: str = "repro-retry-puller"):
+        self._it = it
+        self._cv = threading.Condition()
+        self._cmds: collections.deque = collections.deque()
+        self._results: collections.deque = collections.deque()
+        self._outstanding = 0
+        self._abandon = 0
+        self._closed = False
+        self._stopped = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=name)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._cmds and not self._closed:
+                    self._cv.wait()
+                if self._closed:
+                    return
+                cmd = self._cmds.popleft()
+            if cmd == "pull":
+                try:
+                    rec = ("item", next(self._it))
+                except StopIteration:
+                    rec = ("stop", None)
+                except BaseException as e:  # re-raised at the consumer
+                    rec = ("error", e)
+            else:  # "skip": consume-and-discard the current stream item
+                skip = getattr(self._it, "skip_current", None)
+                try:
+                    if skip is not None:
+                        skip()
+                    else:
+                        next(self._it)
+                    rec = ("skipped", None)
+                except StopIteration:
+                    rec = ("stop", None)
+                except BaseException as e:
+                    # the batch is being abandoned anyway: a skip that
+                    # raises still counts as disposed of
+                    rec = ("skipped", e)
+            stop = rec[0] == "stop"
+            with self._cv:
+                if stop or not self._abandon:
+                    if stop and self._abandon:
+                        self._abandon -= 1
+                    self._results.append(rec)
+                else:
+                    self._abandon -= 1
+                self._cv.notify_all()
+            if stop:
+                return  # iterator finished; nothing more to serve
+
+    def pull(self, timeout: float | None):
+        """Next item, waiting at most ``timeout`` for *this attempt*.  On
+        timeout the pending pull is kept (a later attempt re-waits on it);
+        raising ``_AttemptTimeout`` charges the attempt to the caller."""
+        with self._cv:
+            if self._stopped and not self._results:
+                raise StopIteration
+            if self._outstanding == 0:
+                self._cmds.append("pull")
+                self._outstanding += 1
+                self._cv.notify_all()
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            while not self._results:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise _AttemptTimeout()
+                self._cv.wait(remaining)
+            kind, payload = self._results.popleft()
+            self._outstanding -= 1
+            if kind == "item":
+                return payload
+            if kind == "stop":
+                self._stopped = True
+                raise StopIteration
+            if kind == "error":
+                raise payload
+            raise RuntimeError(f"unexpected puller record {kind!r}")
+
+    def skip(self, timeout: float | None) -> bool:
+        """Dispose of the current stream item.  Returns True when the
+        stream is known to have ended (nothing was consumed)."""
+        with self._cv:
+            if self._stopped:
+                return True
+            if self._outstanding:
+                # the in-flight pull IS the current batch: drop its result
+                self._abandon += 1
+                self._outstanding -= 1
+                return False
+            self._cmds.append("skip")
+            self._outstanding += 1
+            self._cv.notify_all()
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            while not self._results:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    # the skip itself wedged: abandon it too
+                    self._abandon += 1
+                    self._outstanding -= 1
+                    return False
+                self._cv.wait(remaining)
+            kind, _ = self._results.popleft()
+            self._outstanding -= 1
+            if kind == "stop":
+                self._stopped = True
+                return True
+            return False
+
+    def close(self, timeout: float = 5.0) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            warnings.warn(
+                f"{self._thread.name} did not join within {timeout}s; "
+                "the source may be blocked outside our control",
+                RuntimeWarning, stacklevel=2,
+            )
+
+
+_SKIPPED = object()
+
+
+class RetryingSource(Source):
+    """Bounded-retry wrapper: survive transient read errors, time out hung
+    reads, quarantine invalid batches, and account for every item the
+    stream gave up on.
+
+    * ``TransientSourceError`` and per-attempt timeouts are retried up to
+      ``max_retries`` times with exponential backoff
+      (``backoff_s * 2**(attempt-1)``).
+    * ``PermanentSourceError`` and exhausted retries follow
+      ``on_exhausted``: ``"raise"`` (default) kills the stream with the
+      original error; ``"skip"`` drops the batch, advances the source, and
+      counts ``packets_dropped``.
+    * With a ``validator``, delivered batches that fail validation are
+      handed to the ``quarantine`` sink (counted as
+      ``batches_quarantined`` + ``packets_dropped``) and the stream
+      continues; without a quarantine they raise ``PoisonedBatchError``.
+    * ``attempt_timeout_s`` moves pulls onto a dedicated thread
+      (``repro-retry-puller``) so a hung read is charged as a failed
+      attempt instead of wedging the pipeline — call ``close()`` (the
+      engine does) to tear it down.
+
+    Any other exception — including ``WorkerKilled`` — propagates
+    untouched: retrying must never paper over faults it wasn't asked to
+    survive.
+    """
+
+    def __init__(self, inner, *, max_retries: int = 3,
+                 backoff_s: float = 0.0,
+                 attempt_timeout_s: float | None = None,
+                 on_exhausted: str = "raise",
+                 validator: Callable | None = None,
+                 quarantine: QuarantineSink | None = None,
+                 counters: FaultCounters | None = None,
+                 sleep: Callable = time.sleep):
+        if on_exhausted not in ("raise", "skip"):
+            raise ValueError(
+                f"on_exhausted must be 'raise' or 'skip', "
+                f"got {on_exhausted!r}"
+            )
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.inner = inner
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        self.attempt_timeout_s = attempt_timeout_s
+        self.on_exhausted = on_exhausted
+        self.validator = validator
+        self.quarantine = quarantine
+        self.counters = counters if counters is not None else FaultCounters()
+        self.packets_per_item = getattr(inner, "packets_per_item", None)
+        self._sleep = sleep
+        self._delivered_pos: list[int] = []
+        self._live: _RetryIter | None = None
+
+    def __iter__(self) -> "_RetryIter":
+        it = iter(self.inner)
+        puller = (None if self.attempt_timeout_s is None
+                  else _TimeoutPuller(it))
+        self._delivered_pos = []
+        self._live = _RetryIter(self, it, puller)
+        return self._live
+
+    def delivered_pos(self, delivered_index: int) -> int:
+        """Stream items consumed from the wrapped source by the time the
+        ``delivered_index``-th item was handed out — skipped and
+        quarantined batches included.  This is the exact cursor the engine
+        checkpoints so a resumed run fast-forwards past everything this
+        run disposed of, not just what it delivered."""
+        return self._delivered_pos[delivered_index]
+
+    def close(self) -> None:
+        live, self._live = self._live, None
+        if live is not None:
+            live.close()
+
+
+class _RetryIter:
+    def __init__(self, src: RetryingSource, it, puller: _TimeoutPuller | None):
+        self._src = src
+        self._it = it
+        self._puller = puller
+        self._stream_pos = 0  # items consumed from the wrapped source
+        self._exhausted = False
+
+    def __iter__(self) -> "_RetryIter":
+        return self
+
+    def close(self) -> None:
+        if self._puller is not None:
+            self._puller.close()
+
+    def __next__(self):
+        src = self._src
+        while True:
+            if self._exhausted:
+                raise StopIteration
+            item = self._attempt_batch()
+            if item is _SKIPPED:
+                continue
+            self._stream_pos += 1
+            src._delivered_pos.append(self._stream_pos)
+            return item
+
+    def _pull_once(self):
+        if self._puller is not None:
+            return self._puller.pull(self._src.attempt_timeout_s)
+        return next(self._it)
+
+    def _attempt_batch(self):
+        src = self._src
+        attempts = 0
+        while True:
+            try:
+                item = self._pull_once()
+            except StopIteration:
+                self._exhausted = True
+                raise
+            except TransientSourceError as e:
+                retryable: Exception = e
+            except _AttemptTimeout:
+                retryable = SourceTimeoutError(
+                    f"source read exceeded {src.attempt_timeout_s}s "
+                    f"per attempt, {src.max_retries} retries used"
+                )
+            except PermanentSourceError as e:
+                return self._give_up(e)
+            else:
+                if src.validator is not None:
+                    reason = src.validator(item)
+                    if reason is not None:
+                        return self._quarantine_item(item, reason)
+                return item
+            attempts += 1
+            if attempts > src.max_retries:
+                return self._give_up(retryable)
+            src.counters.add("retries")
+            if src.backoff_s > 0:
+                src._sleep(src.backoff_s * (2 ** (attempts - 1)))
+
+    def _quarantine_item(self, item, reason: str):
+        src = self._src
+        index = self._stream_pos  # the item just consumed sits at this index
+        self._stream_pos += 1
+        src.counters.add("batches_quarantined")
+        if src.packets_per_item:
+            src.counters.add("packets_dropped", src.packets_per_item)
+        if src.quarantine is None:
+            raise PoisonedBatchError(
+                f"stream batch {index} failed validation ({reason}) and no "
+                "quarantine sink is attached"
+            )
+        src.quarantine.quarantine(index, item, reason)
+        return _SKIPPED
+
+    def _give_up(self, err: Exception):
+        src = self._src
+        if src.on_exhausted != "skip":
+            raise err
+        consumed = self._skip_stream_item()
+        if consumed and src.packets_per_item:
+            src.counters.add("packets_dropped", src.packets_per_item)
+        return _SKIPPED
+
+    def _skip_stream_item(self) -> bool:
+        """Advance the wrapped source past the batch being given up on.
+        Returns True if a stream item was consumed (or abandoned to be
+        consumed); False if the source turned out to be exhausted."""
+        if self._puller is not None:
+            ended = self._puller.skip(self._src.attempt_timeout_s)
+            if ended:
+                self._exhausted = True
+                return False
+            self._stream_pos += 1
+            return True
+        skip = getattr(self._it, "skip_current", None)
+        try:
+            if skip is not None:
+                consumed = skip()
+            else:
+                next(self._it)
+                consumed = True
+        except StopIteration:
+            consumed = False
+        if not consumed:
+            self._exhausted = True
+            return False
+        self._stream_pos += 1
+        return True
+
+
+class FaultInjectingSink(Sink):
+    """Wrap a sink; ``consume`` raises ``SinkWriteError`` once per planned
+    ``sink`` fault index, before the wrapped sink sees the batch."""
+
+    def __init__(self, inner: Sink, plan: FaultPlan,
+                 counters: FaultCounters | None = None):
+        self.inner = inner
+        self.name = inner.name
+        self.requires = inner.requires
+        self.counters = counters if counters is not None else FaultCounters()
+        self._fail_at = set(plan.sink_batches())
+
+    def consume(self, index: int, outputs: dict) -> None:
+        if index in self._fail_at:
+            self._fail_at.discard(index)  # fire once; a redo succeeds
+            self.counters.add("faults_injected")
+            raise SinkWriteError(
+                f"injected sink write failure at batch {index} "
+                f"(sink {self.name!r})"
+            )
+        self.inner.consume(index, outputs)
+
+    def finalize(self):
+        return self.inner.finalize()
+
+    def state_dict(self) -> dict:
+        return self.inner.state_dict()
+
+    def load_state_dict(self, state: dict) -> None:
+        self.inner.load_state_dict(state)
+
+
+@dataclasses.dataclass
+class FaultTolerance:
+    """Per-run fault-tolerance configuration handed to ``TrafficEngine.run``.
+
+    ``plan`` injects faults (tests/benchmarks/chaos drills); the retry/
+    timeout/skip/validation knobs configure survival.  ``sink_failures``
+    selects whether a failing sink write kills the run (``"raise"``) or is
+    counted and warned about (``"record"``) while the run continues.
+    Owns the run's ``FaultCounters`` (reset at run start).
+    """
+
+    plan: FaultPlan | None = None
+    max_retries: int = 3
+    backoff_s: float = 0.0
+    attempt_timeout_s: float | None = None
+    on_exhausted: str = "raise"
+    validate: bool = False
+    quarantine: QuarantineSink | None = None
+    sink_failures: str = "raise"  # "raise" | "record"
+    counters: FaultCounters = dataclasses.field(default_factory=FaultCounters)
+
+    def __post_init__(self):
+        if self.sink_failures not in ("raise", "record"):
+            raise ValueError(
+                f"sink_failures must be 'raise' or 'record', "
+                f"got {self.sink_failures!r}"
+            )
+        if self.validate and self.quarantine is None:
+            self.quarantine = QuarantineSink()
+
+    def wrap_source(self, source, *, cfg=None,
+                    workload: str = "packets") -> RetryingSource:
+        src = source
+        if self.plan is not None and self.plan.source_specs():
+            src = FaultInjectingSource(src, plan=self.plan,
+                                       counters=self.counters)
+        validator = None
+        if self.validate:
+            if cfg is None:
+                raise ValueError("validate=True needs the engine cfg")
+            validator = make_batch_validator(cfg, workload)
+        return RetryingSource(
+            src,
+            max_retries=self.max_retries,
+            backoff_s=self.backoff_s,
+            attempt_timeout_s=self.attempt_timeout_s,
+            on_exhausted=self.on_exhausted,
+            validator=validator,
+            quarantine=self.quarantine,
+            counters=self.counters,
+        )
+
+    def wrap_sinks(self, sinks: Iterable[Sink]) -> list[Sink]:
+        """Apply planned sink faults: the first real sink gets wrapped (one
+        deterministic failure site; wrapping all of them would multiply
+        every planned fault by the sink count)."""
+        sinks = list(sinks)
+        if self.plan is None or not self.plan.sink_batches():
+            return sinks
+        for i, s in enumerate(sinks):
+            if not isinstance(s, QuarantineSink):
+                sinks[i] = FaultInjectingSink(s, self.plan,
+                                              counters=self.counters)
+                break
+        return sinks

@@ -264,7 +264,9 @@ def _run_async_loop(
             *_, out = inflight.popleft()
             try:
                 jax.block_until_ready(out)
-            except Exception:
+            # the original failure (re-raised below) is the story; a dead
+            # in-flight batch failing its drain adds nothing to record
+            except Exception:  # repro-lint: disable=swallowed-exception
                 pass
         raise
 

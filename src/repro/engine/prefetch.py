@@ -37,6 +37,33 @@ import time
 import warnings
 from typing import Callable, Iterable, Iterator
 
+from repro.distributed.fault import (
+    HeartbeatMonitor,
+    PolicyDecision,
+    StragglerPolicy,
+)
+
+
+class WorkerKilled(BaseException):
+    """Simulated death of the thread that raised it.
+
+    Deliberately a ``BaseException``: every ``except BaseException`` handler
+    in the produce path explicitly re-raises it first, so it unwinds the
+    worker thread instead of being recorded as an ordinary stream failure —
+    which is exactly what a real ``pthread_kill``/OOM would look like.
+    Raised by fault injection (``engine.faults``); never raise it yourself
+    unless you want the worker dead.
+    """
+
+
+class WorkerDiedError(RuntimeError):
+    """A prefetch worker died without delivering the item it had reserved.
+
+    Recorded by the dead worker's last-rites handler at the lost item's
+    sequence number, so the consumer drains every earlier item and then
+    sees this instead of hanging forever on a sequence gap.
+    """
+
 
 class BoundedPrefetcher:
     """Background prefetch of an iterable: N workers, in-order delivery.
@@ -61,7 +88,8 @@ class BoundedPrefetcher:
 
     def __init__(self, it: Iterable, depth: int = 2,
                  transform: Callable | None = None,
-                 untimed_items: int = 0, workers: int = 1):
+                 untimed_items: int = 0, workers: int = 1,
+                 monitor: HeartbeatMonitor | None = None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         if workers < 1:
@@ -88,6 +116,12 @@ class BoundedPrefetcher:
         self._closed = False
         self._produce_s = 0.0
         self._active: dict[str, float] = {}  # thread -> transform start t
+        self._working: dict[str, int] = {}   # thread -> reserved, undelivered seq
+        # one "host" per worker: beats on every delivered item, marked dead
+        # by the last-rites handler — StragglerPolicy then reports evict
+        self.monitor = monitor if monitor is not None else (
+            HeartbeatMonitor(workers))
+        self._straggler = StragglerPolicy(self.monitor)
         # the name prefix is load-bearing: the thread-leak fixture in
         # tests/conftest.py fails any test that leaves a repro-* thread
         # alive, which is what pins the close() discipline
@@ -96,12 +130,13 @@ class BoundedPrefetcher:
                              name=f"repro-prefetch-worker-{i}")
             for i in range(workers)
         ]
+        self._worker_idx = {t.name: i for i, t in enumerate(self._threads)}
         for t in self._threads:
             t.start()
 
     # -- worker side --------------------------------------------------------
 
-    def _pull(self):
+    def _pull(self, me: str):
         """Reserve the next sequence number and pull its item from the
         source.  Returns ``(seq, item)`` or None when there is nothing more
         for this worker to do (closed / failed / exhausted)."""
@@ -116,17 +151,23 @@ class BoundedPrefetcher:
                     return None
                 seq = self._next_seq
                 self._next_seq = seq + 1
+                self._working[me] = seq
             # _lock released, _it_lock still held: pulls stay in seq order
             # and a blocking source only ever blocks other *pulls*
             try:
                 item = next(self._it)
             except StopIteration:
                 with self._lock:
+                    self._working.pop(me, None)
                     self._exhausted_at = seq
                     self._lock.notify_all()
                 return None
+            except WorkerKilled:
+                # the reserved seq stays in _working: last rites record it
+                raise
             except BaseException as e:  # surface in consumer
                 with self._lock:
+                    self._working.pop(me, None)
                     self._record_failure(e, seq)
                 return None
         return seq, item
@@ -140,8 +181,18 @@ class BoundedPrefetcher:
 
     def _worker(self):
         me = threading.current_thread().name
+        try:
+            self._worker_loop(me)
+        except WorkerKilled:
+            # deliberate (injected) death: the thread exits; accounting
+            # happens in the last-rites handler below
+            pass
+        finally:
+            self._last_rites(me)
+
+    def _worker_loop(self, me: str):
         while True:
-            pulled = self._pull()
+            pulled = self._pull(me)
             if pulled is None:
                 return
             seq, item = pulled
@@ -152,6 +203,9 @@ class BoundedPrefetcher:
             try:
                 if self._transform is not None:
                     item = self._transform(item)
+            except WorkerKilled:
+                # the reserved seq stays in _working: last rites record it
+                raise
             except BaseException as e:  # surface in consumer
                 with self._lock:
                     # a failed transform still spent IO time: bank it, so
@@ -160,17 +214,57 @@ class BoundedPrefetcher:
                     t0 = self._active.pop(me, None)
                     if timed and t0 is not None:
                         self._produce_s += time.perf_counter() - t0
+                    self._working.pop(me, None)
                     self._record_failure(e, seq)
                 return
+            dt = 0.0
             with self._lock:
                 if timed:
                     t0 = self._active.pop(me, None)
                     if t0 is not None:
-                        self._produce_s += time.perf_counter() - t0
+                        dt = time.perf_counter() - t0
+                        self._produce_s += dt
+                self._working.pop(me, None)
                 if self._closed:
                     return
                 self._buf[seq] = item
                 self._lock.notify_all()
+            idx = self._worker_idx.get(me)
+            if idx is not None:
+                self.monitor.beat(idx, seq, dt)
+
+    def _last_rites(self, me: str) -> None:
+        """Runs as the worker thread unwinds, however it died.  If the
+        worker still holds a reserved-but-undelivered sequence number and
+        the prefetcher is live, the consumer would otherwise park forever
+        on the gap — record a ``WorkerDiedError`` at that seq (earliest
+        failure wins, as usual) and mark the worker's heartbeat host dead
+        so ``health()`` reports evict."""
+        with self._lock:
+            seq = self._working.pop(me, None)
+            if seq is None or self._closed:
+                return
+            idx = self._worker_idx.get(me)
+            if idx is not None:
+                self.monitor.mark_dead(idx)
+            self._record_failure(
+                WorkerDiedError(
+                    f"prefetch worker {me} died while producing item {seq}"
+                ),
+                seq,
+            )
+
+    def health(self, now: float | None = None) -> PolicyDecision:
+        """Heartbeat-driven worker health: the ``StragglerPolicy`` decision
+        over this prefetcher's workers (``proceed`` / ``drop`` / ``evict``).
+        A worker that died via last rites is already marked not-alive on the
+        monitor (so it no longer counts as silent) — report it as evict
+        directly; otherwise defer to silence/straggle detection."""
+        fallen = tuple(h.host_id for h in self.monitor.hosts.values()
+                       if not h.alive)
+        if fallen:
+            return PolicyDecision("evict", fallen)
+        return self._straggler.evaluate(now)
 
     # -- consumer side ------------------------------------------------------
 

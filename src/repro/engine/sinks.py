@@ -39,6 +39,26 @@ class Sink:
     def finalize(self) -> Any:
         return None
 
+    # -- checkpointing -------------------------------------------------------
+    # Engine checkpoints serialize every attached sink's state so a resumed
+    # run finalizes to bit-identical results.  State must be host data
+    # (numpy / python scalars / str) nested in dicts/lists/tuples — the
+    # portable checkpoint encoding (checkpoint.serialization) handles the
+    # rest.  A sink that cannot round-trip must raise, not silently resume
+    # empty: losing accumulated windows would be lying about coverage.
+
+    def state_dict(self) -> dict:
+        raise NotImplementedError(
+            f"sink {self.name!r} does not support checkpointing "
+            "(no state_dict)"
+        )
+
+    def load_state_dict(self, state: dict) -> None:
+        raise NotImplementedError(
+            f"sink {self.name!r} does not support checkpointing "
+            "(no load_state_dict)"
+        )
+
 
 class StatsAccumulator(Sink):
     """Accumulate per-batch analytics into totals + the per-batch trace.
@@ -79,6 +99,21 @@ class StatsAccumulator(Sink):
         totals["per_batch"] = host
         return totals
 
+    def state_dict(self) -> dict:
+        return {
+            "per_batch": [
+                {k: np.asarray(v) for k, v in jax.device_get(s).items()}
+                for s in self.per_batch
+            ],
+            "overflow": [int(np.asarray(o)) for o in self.overflow],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        # restored rows are host dicts; finalize's device_get is a no-op on
+        # them, so mixing restored + freshly-consumed device rows is fine
+        self.per_batch = list(state["per_batch"])
+        self.overflow = [int(o) for o in state["overflow"]]
+
 
 @dataclasses.dataclass
 class TopKHeavyHitters(Sink):
@@ -111,6 +146,14 @@ class TopKHeavyHitters(Sink):
     def finalize(self) -> list[tuple[tuple[int, int], int]]:
         ranked = sorted(self._counts.items(), key=lambda kv: -kv[1])
         return ranked[: self.k]
+
+    def state_dict(self) -> dict:
+        return {"counts": [[r, c, v]
+                           for (r, c), v in self._counts.items()]}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._counts = {(int(r), int(c)): int(v)
+                        for r, c, v in state["counts"]}
 
 
 @dataclasses.dataclass
@@ -145,6 +188,31 @@ class MatrixRetention(Sink):
 
     def finalize(self) -> list:
         return self.matrices
+
+    def state_dict(self) -> dict:
+        out = []
+        for m in self.matrices:
+            h = jax.device_get(m)
+            out.append({
+                "rows": np.asarray(h.rows),
+                "cols": np.asarray(h.cols),
+                "vals": np.asarray(h.vals),
+                "nnz": np.asarray(h.nnz),
+                "nrows": int(h.nrows),
+                "ncols": int(h.ncols),
+            })
+        return {"matrices": out}
+
+    def load_state_dict(self, state: dict) -> None:
+        from repro.core.hypersparse import HypersparseMatrix
+
+        self.matrices = [
+            HypersparseMatrix(
+                rows=d["rows"], cols=d["cols"], vals=d["vals"],
+                nnz=d["nnz"], nrows=int(d["nrows"]), ncols=int(d["ncols"]),
+            )
+            for d in state["matrices"]
+        ]
 
 
 @dataclasses.dataclass
@@ -197,6 +265,13 @@ class AnomalySink(Sink):
             "threshold": self.threshold,
         }
 
+    def state_dict(self) -> dict:
+        return {"hists": [np.asarray(jax.device_get(h))
+                          for h in self._hists]}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._hists = list(state["hists"])
+
 
 @dataclasses.dataclass
 class PcapLiteWriterSink(Sink):
@@ -230,3 +305,10 @@ class PcapLiteWriterSink(Sink):
                 if self._chunks else np.zeros((0, 2), np.uint32))
         PcapLite.write(self.path, pkts, compress=self.compress)
         return {"path": str(self.path), "packets": int(pkts.shape[0])}
+
+    def state_dict(self) -> dict:
+        return {"chunks": list(self._chunks)}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._chunks = [np.asarray(c, dtype=np.uint32)
+                        for c in state["chunks"]]

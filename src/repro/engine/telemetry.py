@@ -73,6 +73,21 @@ class EngineReport:
     max_in_flight: int = 1
     producer_workers: int = 1
     submit_batches: int = 1
+    # Fault-tolerance accounting (engine.faults).  Degraded runs must say
+    # exactly what they survived and what they skipped: ``packets`` counts
+    # only delivered batches (the single packets_in_item rule), while
+    # ``packets_dropped`` counts what retry-exhaustion/quarantine gave up.
+    retries: int = 0
+    batches_quarantined: int = 0
+    packets_dropped: int = 0
+    faults_injected: int = 0
+    sink_write_failures: int = 0
+    # Checkpoint/resume accounting: checkpoints written this run, and the
+    # global measured-batch index the run resumed at (0 = cold start).
+    # A resumed report folds the checkpointed batches/packets/counters in,
+    # so it describes the *logical* run end-to-end.
+    checkpoints_written: int = 0
+    resumed_from: int = 0
 
     @property
     def packets_per_second(self) -> float:
@@ -81,14 +96,30 @@ class EngineReport:
     def summary(self) -> str:
         """One-line report in the Fig.-2 style.  Depth and overlap always
         print — an async run at depth 1 still has exposed-wait ``process_s``
-        semantics, and the line must carry the cue to read it that way."""
-        return (
+        semantics, and the line must carry the cue to read it that way.
+        Fault/resume accounting appends only when present, keeping clean
+        runs' lines unchanged."""
+        line = (
             f"[{self.policy or 'pipeline'}] {self.packets:,} packets, "
             f"{self.elapsed_s:.2f}s -> {self.packets_per_second:,.0f} pkt/s "
             f"(produce {self.produce_s:.2f}s / process {self.process_s:.2f}s, "
             f"overlap {self.overlap_s:.2f}s @ depth {self.max_in_flight}, "
             f"overflow {self.merge_overflow})"
         )
+        if (self.retries or self.batches_quarantined or self.packets_dropped
+                or self.faults_injected or self.sink_write_failures):
+            line += (
+                f" [faults {self.faults_injected}: retries {self.retries}, "
+                f"quarantined {self.batches_quarantined}, dropped "
+                f"{self.packets_dropped:,} pkts, sink failures "
+                f"{self.sink_write_failures}]"
+            )
+        if self.checkpoints_written or self.resumed_from:
+            line += (
+                f" [ckpt {self.checkpoints_written} written, resumed at "
+                f"batch {self.resumed_from}]"
+            )
+        return line
 
 
 # Historical name: ``core.stream`` called this StreamReport.  The engine is

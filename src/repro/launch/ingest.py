@@ -37,6 +37,8 @@ import argparse
 from repro.core.window import WindowConfig
 from repro.engine import (
     AnomalySink,
+    FaultPlan,
+    FaultTolerance,
     PcapLiteWriterSink,
     ShardedPipelinedPolicy,
     ShardedPolicy,
@@ -145,13 +147,30 @@ def run_sinks(source: str, sink_names, *, mode: str = "blocking",
               anomaly_threshold: float = 3.0, seed: int = 0,
               use_kernel: bool = False,
               producer_workers: int | None = None,
-              submit_batches: int | None = None):
+              submit_batches: int | None = None,
+              inject_faults: str | FaultPlan | None = None,
+              max_retries: int = 3, retry_backoff: float = 0.0,
+              attempt_timeout: float | None = None,
+              on_exhausted: str = "raise",
+              validate_batches: bool = False,
+              checkpoint_dir: str | None = None,
+              checkpoint_every: int = 0, resume: bool = False):
     """Generic engine run: any source spec x sink list x policy.
 
     Geometry arguments left as None take the workload's defaults.
     ``producer_workers``/``submit_batches`` forward to the policy
-    constructor (an error for policies without the knob).  Returns
-    (EngineReport, finalized sink results keyed by sink name).
+    constructor (an error for policies without the knob).
+
+    Fault tolerance (engine.faults): ``inject_faults`` is a FaultPlan or
+    its ``parse`` spec string; the retry knobs shape the RetryingSource
+    wrapper and ``validate_batches`` adds the shape/dtype validator with a
+    quarantine dead-letter sink.  ``checkpoint_dir``/``checkpoint_every``
+    write crash-consistent engine checkpoints; ``resume=True`` restores the
+    latest one and fast-forwards the source (synthetic sources keep the
+    same n_batches+1 stream as the crashed run, but warmup is 0 — the
+    resume cursor already accounts for the crashed run's warmup batch).
+
+    Returns (EngineReport, finalized sink results keyed by sink name).
     """
     workload = infer_workload(source)
     geom = GEOMETRY_DEFAULTS[workload]
@@ -172,14 +191,34 @@ def run_sinks(source: str, sink_names, *, mode: str = "blocking",
         sinks=make_sinks(sink_names, workload=workload, pcap_out=pcap_out,
                          anomaly_threshold=anomaly_threshold),
     )
+    ft = None
+    if (inject_faults or validate_batches or attempt_timeout
+            or on_exhausted != "raise"):
+        plan = (FaultPlan.parse(inject_faults)
+                if isinstance(inject_faults, str) else inject_faults)
+        ft = FaultTolerance(
+            plan=plan, max_retries=max_retries, backoff_s=retry_backoff,
+            attempt_timeout_s=attempt_timeout, on_exhausted=on_exhausted,
+            validate=validate_batches,
+        )
+    manager = None
+    if checkpoint_dir is not None:
+        from repro.checkpoint.manager import CheckpointManager
+
+        manager = CheckpointManager(checkpoint_dir)
     # For synthetic sources one extra leading batch absorbs jit compile
     # (excluded from timing and sinks); file replays must not lose their
-    # first batch, so they just eat the compile in their timing.
+    # first batch, so they just eat the compile in their timing.  A resumed
+    # run re-declares the crashed run's stream (same n_batches+1) but must
+    # not warm up: the checkpoint's stream cursor already covers the
+    # crashed run's warmup item, and the engine rejects warmup-on-resume.
     synthetic = str(source) in SYNTHETIC_SPECS
     report = engine.run(
         source,
         n_batches=(n_batches or geom["n_batches"]) + (1 if synthetic else 0),
-        seed=seed, warmup_items=1 if synthetic else 0,
+        seed=seed, warmup_items=1 if synthetic and not resume else 0,
+        fault_tolerance=ft, checkpoint_every=checkpoint_every,
+        checkpoint_manager=manager, resume=resume,
     )
     return report, engine.finalize()
 
@@ -242,14 +281,48 @@ def main(argv=None):
                     help="route window builds through the fused Pallas "
                          "build kernel (kernels/build_fused; interpret "
                          "mode on CPU hosts) — stats are bit-identical")
+    ap.add_argument("--inject-faults", default=None, metavar="PLAN",
+                    help="deterministic fault plan, e.g. "
+                         "'transient:2@1,slow:0.05@3,crash@4' "
+                         "(see engine.faults.FaultPlan.parse)")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="bounded retries per batch for transient/timeout "
+                         "source faults")
+    ap.add_argument("--retry-backoff", type=float, default=0.0,
+                    help="base exponential-backoff sleep between retries "
+                         "(seconds)")
+    ap.add_argument("--attempt-timeout", type=float, default=None,
+                    help="per-attempt source read timeout (seconds); "
+                         "timeouts count as retriable faults")
+    ap.add_argument("--on-exhausted", default="raise",
+                    choices=["raise", "skip"],
+                    help="after max retries: fail the run, or skip the "
+                         "batch and account it as dropped")
+    ap.add_argument("--validate-batches", action="store_true",
+                    help="shape/dtype-validate every delivered batch; "
+                         "failures go to the quarantine dead-letter sink")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for crash-consistent engine checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
+                    help="write a checkpoint after every K-th measured "
+                         "batch (requires --checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from "
+                         "--checkpoint-dir and continue the interrupted "
+                         "run (cold-starts if none exists)")
     args = ap.parse_args(argv)
+
+    if (args.checkpoint_every or args.resume) and not args.checkpoint_dir:
+        ap.error("--checkpoint-every/--resume require --checkpoint-dir")
 
     source = args.source if args.source is not None else args.traffic
     workload = infer_workload(source)
 
     if (args.sink is not None or args.source is not None
             or args.producer_workers is not None
-            or args.submit_batches is not None):
+            or args.submit_batches is not None
+            or args.inject_faults is not None or args.validate_batches
+            or args.checkpoint_dir is not None):
         # the generic Source x Sink path: an explicit --source must never
         # fall through to the synthetic-only legacy paths (which would
         # silently replay uniform traffic instead of the requested source)
@@ -263,11 +336,29 @@ def main(argv=None):
             use_kernel=args.build_kernel,
             producer_workers=args.producer_workers,
             submit_batches=args.submit_batches,
+            inject_faults=args.inject_faults,
+            max_retries=args.max_retries,
+            retry_backoff=args.retry_backoff,
+            attempt_timeout=args.attempt_timeout,
+            on_exhausted=args.on_exhausted,
+            validate_batches=args.validate_batches,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            resume=args.resume,
         )
         unit = "flows" if workload == "flow" else "pkts"
         print(f"[ingest/{workload}/{rep.policy}] {rep.packets:,} {unit}, "
               f"{rep.elapsed_s:.2f}s -> {rep.packets_per_second:,.0f} "
               f"{unit[:-1]}/s (overflow {rep.merge_overflow})")
+        if (rep.faults_injected or rep.retries or rep.batches_quarantined
+                or rep.packets_dropped or rep.sink_write_failures):
+            print(f"  faults: injected {rep.faults_injected}, retries "
+                  f"{rep.retries}, quarantined {rep.batches_quarantined}, "
+                  f"dropped {rep.packets_dropped:,} {unit}, sink failures "
+                  f"{rep.sink_write_failures}")
+        if rep.checkpoints_written or rep.resumed_from:
+            print(f"  checkpoints: {rep.checkpoints_written} written, "
+                  f"resumed at batch {rep.resumed_from}")
         _print_sink_results(results)
         return rep
 

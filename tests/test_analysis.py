@@ -188,6 +188,29 @@ class Prefetcher:
 """,
         ),
     ],
+    "swallowed-exception": [
+        (
+            "src/repro/engine/policies.py",
+            """\
+def drain(batches, consume):
+    for i, b in enumerate(batches):
+        try:
+            consume(i, b)
+        except Exception:  # BAD
+            pass
+""",
+        ),
+        (
+            "src/repro/engine/prefetch.py",
+            """\
+def pull(it):
+    try:
+        return next(it)
+    except:  # BAD
+        return None
+""",
+        ),
+    ],
 }
 
 # rule id -> (pretend-path, good twin): the sanctioned pattern, no finding.
@@ -316,6 +339,46 @@ class Prefetcher:
                 self.count += 1
 
         self.t = threading.Thread(target=worker)
+""",
+        ),
+    ],
+    "swallowed-exception": [
+        (
+            "src/repro/engine/policies.py",
+            """\
+import warnings
+
+def drain(batches, consume):
+    for i, b in enumerate(batches):
+        try:
+            consume(i, b)
+        except Exception as e:
+            warnings.warn(f"batch {i} failed: {e}")
+""",
+        ),
+        (
+            "src/repro/engine/prefetch.py",
+            """\
+def pull(it, record_failure):
+    try:
+        return next(it)
+    except StopIteration:
+        return None
+    except Exception as e:
+        record_failure(e)
+        raise
+""",
+        ),
+        (
+            "src/repro/engine/policies.py",
+            """\
+def quiesce(inflight, block):
+    while inflight:
+        out = inflight.popleft()
+        try:
+            block(out)
+        except Exception:  # repro-lint: disable=swallowed-exception
+            pass
 """,
         ),
     ],

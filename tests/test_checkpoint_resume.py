@@ -1,0 +1,378 @@
+"""Crash-consistent engine checkpoints and kill/resume equivalence.
+
+The headline invariant of the fault-tolerant runtime: kill an engine
+mid-run at a window boundary, resume from the latest checkpoint, and the
+final stats and retained matrices are bit-identical to the uninterrupted
+run — for every canonical policy, under injected source faults.  Plus the
+serialization/manager plumbing that invariant rests on: the portable
+(self-describing) checkpoint encoding, save-lock correctness under
+async/direct save races, and stale-tmp hygiene.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.core.window import WindowConfig
+from repro.engine import (
+    FaultPlan,
+    FaultTolerance,
+    MatrixRetention,
+    ShardedPolicy,
+    StatsAccumulator,
+    TrafficEngine,
+    WorkerDiedError,
+    canonical_policies,
+    make_policy,
+)
+from repro.engine.source import (
+    DeviceSyntheticSource,
+    SkippingSource,
+    fast_forward,
+)
+
+POLICY_NAMES = sorted(canonical_policies())
+N_BATCHES = 6
+SEED = 23
+
+
+def _is_sharded(policy_name: str) -> bool:
+    return issubclass(canonical_policies()[policy_name], ShardedPolicy)
+
+
+def _cfg():
+    return WindowConfig(window_log2=6, windows_per_batch=4,
+                        anonymization="none")
+
+
+def _source(n_batches=N_BATCHES):
+    # host placement: the device-keyed stream (pure function of the global
+    # window index -> exact resume cursor), materialized as numpy so every
+    # policy (including sharded's shard transfer) accepts it
+    return DeviceSyntheticSource(kind="uniform", seed=SEED,
+                                 n_batches=n_batches, windows_per_batch=4,
+                                 window_size=64, placement="host")
+
+
+def _sinks(policy_name):
+    sinks = [StatsAccumulator()]
+    if not _is_sharded(policy_name):
+        sinks.append(MatrixRetention(max_keep=8))
+    return sinks
+
+
+def _engine(policy_name, **policy_knobs):
+    policy = (make_policy(policy_name, **policy_knobs) if policy_knobs
+              else policy_name)
+    return TrafficEngine(_cfg(), policy=policy, sinks=_sinks(policy_name))
+
+
+def _results(engine):
+    res = engine.finalize()
+    return res["stats"], res.get("matrices")
+
+
+def _assert_identical(ref, got, label):
+    ref_stats, ref_mats = ref
+    got_stats, got_mats = got
+    assert got_stats["batches"] == ref_stats["batches"], label
+    assert ref_stats.keys() == got_stats.keys()
+    for k in ref_stats:
+        if k == "per_batch":
+            for a, b in zip(ref_stats[k], got_stats[k]):
+                for kk in a:
+                    np.testing.assert_array_equal(
+                        np.asarray(a[kk]), np.asarray(b[kk]),
+                        err_msg=f"{label}:per_batch:{kk}")
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(ref_stats[k]), np.asarray(got_stats[k]),
+            err_msg=f"{label}:{k}")
+    if ref_mats is None:
+        assert got_mats is None
+        return
+    assert len(ref_mats) == len(got_mats), label
+    for a, b in zip(ref_mats, got_mats):
+        np.testing.assert_array_equal(np.asarray(a.rows), np.asarray(b.rows))
+        np.testing.assert_array_equal(np.asarray(a.cols), np.asarray(b.cols))
+        np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
+        assert int(a.nnz) == int(b.nnz)
+
+
+_REFERENCE: dict = {}
+
+
+def _reference(policy_name):
+    """The uninterrupted fault-free run, cached per policy."""
+    if policy_name not in _REFERENCE:
+        eng = _engine(policy_name)
+        rep = eng.run(_source(), n_batches=N_BATCHES, seed=SEED)
+        assert rep.batches == N_BATCHES
+        _REFERENCE[policy_name] = _results(eng)
+    return _REFERENCE[policy_name]
+
+
+def _crash_and_resume(policy_name, tmp_path, *, checkpoint_every,
+                      crash_at, exc=RuntimeError, match="injected crash",
+                      **policy_knobs):
+    """Run with a crash planned at stream batch ``crash_at``; resume from
+    the checkpoint dir with a fresh engine; return (resume report, results).
+    """
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    ft = FaultTolerance(
+        plan=FaultPlan.parse(f"transient:1@1,{'kill-worker' if exc is WorkerDiedError else 'crash'}@{crash_at}"))
+    crashed = _engine(policy_name, **policy_knobs)
+    with pytest.raises(exc, match=match):
+        crashed.run(_source(), n_batches=N_BATCHES, seed=SEED,
+                    fault_tolerance=ft, checkpoint_every=checkpoint_every,
+                    checkpoint_manager=mgr)
+
+    resumed = _engine(policy_name, **policy_knobs)
+    rep = resumed.run(_source(), n_batches=N_BATCHES, seed=SEED,
+                      checkpoint_every=checkpoint_every,
+                      checkpoint_manager=CheckpointManager(tmp_path / "ckpt"),
+                      resume=True)
+    return rep, _results(resumed)
+
+
+# ---------------------------------------------------------------------------
+# THE chaos invariant: every canonical policy, kill + resume == uninterrupted
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_kill_resume_bit_identical(policy_name, tmp_path):
+    ref = _reference(policy_name)
+    rep, got = _crash_and_resume(policy_name, tmp_path,
+                                 checkpoint_every=1, crash_at=4)
+    assert rep.batches == N_BATCHES
+    assert rep.packets == N_BATCHES * 4 * 64
+    _assert_identical(ref, got, policy_name)
+
+
+@pytest.mark.parametrize("policy_name", ["blocking", "async_pipelined"])
+def test_kill_resume_with_sparser_checkpoints(policy_name, tmp_path):
+    ref = _reference(policy_name)
+    rep, got = _crash_and_resume(policy_name, tmp_path,
+                                 checkpoint_every=2, crash_at=5)
+    assert rep.batches == N_BATCHES
+    _assert_identical(ref, got, policy_name)
+
+
+def test_blocking_resume_starts_mid_stream(tmp_path):
+    """With checkpoint_every=1 under the blocking policy, every delivered
+    batch checkpoints before the crash — the resume must NOT cold-start."""
+    ref = _reference("blocking")
+    rep, got = _crash_and_resume("blocking", tmp_path,
+                                 checkpoint_every=1, crash_at=4)
+    assert rep.resumed_from == 4
+    assert rep.checkpoints_written == 2  # batches 5 and 6
+    # cumulative accounting folds the checkpointed counters in.  The crash
+    # fault itself fired AFTER the last checkpoint was written, so it is
+    # (correctly) absent: nothing survived it to account for.
+    assert rep.retries == 1 and rep.faults_injected == 1
+    _assert_identical(ref, got, "blocking-mid-stream")
+
+
+def test_kill_worker_chaos_resume(tmp_path):
+    """A prefetch worker dying mid-read (WorkerKilled -> last rites ->
+    WorkerDiedError) is also recoverable by resume.  The async ring may
+    discard in-flight batches before the first dispatch, so a cold-start
+    resume is valid here — only equivalence is asserted."""
+    ref = _reference("async_pipelined")
+    rep, got = _crash_and_resume(
+        "async_pipelined", tmp_path, checkpoint_every=1, crash_at=4,
+        exc=WorkerDiedError, match="died while producing",
+        producer_workers=2)
+    assert rep.batches == N_BATCHES
+    _assert_identical(ref, got, "kill-worker")
+
+
+def test_restore_onto_different_policy(tmp_path):
+    """Checkpoints are policy-agnostic: crash under blocking, resume under
+    double_buffered — still bit-identical to the uninterrupted run."""
+    ref = _reference("blocking")
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    crashed = _engine("blocking")
+    with pytest.raises(RuntimeError, match="injected crash"):
+        crashed.run(_source(), n_batches=N_BATCHES, seed=SEED,
+                    fault_tolerance=FaultTolerance(
+                        plan=FaultPlan.parse("crash@3")),
+                    checkpoint_every=1, checkpoint_manager=mgr)
+
+    resumed = _engine("double_buffered")
+    rep = resumed.run(_source(), n_batches=N_BATCHES, seed=SEED,
+                      checkpoint_every=1, checkpoint_manager=mgr,
+                      resume=True)
+    assert rep.resumed_from == 3 and rep.policy == "double_buffered"
+    _assert_identical(ref, _results(resumed), "cross-policy")
+
+
+def test_resume_rejects_warmup(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    eng = _engine("blocking")
+    eng.run(_source(), n_batches=2, seed=SEED, checkpoint_every=1,
+            checkpoint_manager=mgr)
+    eng2 = _engine("blocking")
+    with pytest.raises(ValueError, match="warmup_items must be 0"):
+        eng2.run(_source(), n_batches=N_BATCHES, seed=SEED, warmup_items=1,
+                 checkpoint_manager=mgr, resume=True)
+
+
+def test_checkpointing_requires_manager_and_accounting():
+    eng = _engine("blocking")
+    with pytest.raises(ValueError, match="checkpoint_manager"):
+        eng.run(_source(), n_batches=2, checkpoint_every=1)
+
+
+def test_resume_rejects_unknown_sink_state(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    eng = _engine("blocking")  # stats + matrices
+    eng.run(_source(), n_batches=2, seed=SEED, checkpoint_every=1,
+            checkpoint_manager=mgr)
+    lean = TrafficEngine(_cfg(), policy="blocking",
+                         sinks=[StatsAccumulator()])
+    with pytest.raises(ValueError, match="not attached"):
+        lean.run(_source(), n_batches=N_BATCHES, seed=SEED,
+                 checkpoint_manager=mgr, resume=True)
+
+
+# ---------------------------------------------------------------------------
+# resume cursor plumbing
+# ---------------------------------------------------------------------------
+def test_fast_forward_device_source_is_exact():
+    full = list(_source(4))
+    moved = fast_forward(_source(4), 2)
+    assert isinstance(moved, DeviceSyntheticSource)
+    rest = list(moved)
+    assert len(rest) == 2
+    for a, b in zip(rest, full[2:]):
+        np.testing.assert_array_equal(a, b)
+    # generic sources get the skipping wrapper instead
+    wrapped = fast_forward(SkippingSource(inner=_source(4), skip=0), 2)
+    assert isinstance(wrapped, SkippingSource)
+    for a, b in zip(wrapped, full[2:]):
+        np.testing.assert_array_equal(a, b)
+    # skipping past the end is an empty stream, not an error
+    assert list(fast_forward(_source(2), 5)) == []
+
+
+# ---------------------------------------------------------------------------
+# portable serialization + manager hygiene
+# ---------------------------------------------------------------------------
+def test_portable_roundtrip(tmp_path):
+    tree = {
+        "ints": 7,
+        "floats": 0.25,
+        "strings": "hello",
+        "flags": True,
+        "nothing": None,
+        "nested": {"list": [1, "two", np.arange(6, dtype=np.uint32)],
+                   "tuple": (np.float32(1.5), [{"deep": np.eye(2)}])},
+    }
+    p = tmp_path / "x.rpck"
+    save_pytree(tree, p, portable=True, meta={"who": "test"})
+    back, meta = load_pytree(p)
+    assert meta == {"who": "test"}
+    assert back["ints"] == 7 and isinstance(back["ints"], int)
+    assert back["floats"] == 0.25
+    assert back["strings"] == "hello" and back["flags"] is True
+    assert back["nothing"] is None
+    lst = back["nested"]["list"]
+    assert lst[0] == 1 and lst[1] == "two"
+    np.testing.assert_array_equal(lst[2], np.arange(6, dtype=np.uint32))
+    assert lst[2].dtype == np.uint32
+    tup = back["nested"]["tuple"]
+    assert isinstance(tup, tuple)
+    np.testing.assert_array_equal(tup[1][0]["deep"], np.eye(2))
+
+
+def test_portable_rejects_non_str_keys(tmp_path):
+    with pytest.raises(TypeError, match="str dict keys"):
+        save_pytree({1: "x"}, tmp_path / "x.rpck", portable=True)
+
+
+def test_manager_portable_restore_without_template(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = {"sinks": {"stats": {"rows": [np.arange(3, dtype=np.uint32)]}},
+             "batches_done": 4}
+    mgr.save(4, state, meta={"policy": "blocking"}, portable=True)
+    back, meta = mgr.restore(None)  # no `like` template needed
+    assert meta["step"] == 4 and meta["policy"] == "blocking"
+    assert back["batches_done"] == 4
+    np.testing.assert_array_equal(back["sinks"]["stats"]["rows"][0],
+                                  np.arange(3, dtype=np.uint32))
+
+
+def test_direct_save_races_async_save_safely(tmp_path):
+    """The satellite fix: save() takes the manager lock, so a direct save
+    racing an in-flight async save cannot interleave with its tmp-write/
+    rename/gc sequence.  Hammer the pair and check every surviving
+    checkpoint loads cleanly."""
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = {"w": np.arange(2048, dtype=np.float64)}
+    stop = threading.Event()
+    errors = []
+
+    def direct_saver():
+        step = 1000
+        while not stop.is_set():
+            try:
+                mgr.save(step, state, portable=True)
+            except Exception as e:  # noqa: BLE001 - the assertion payload
+                errors.append(e)
+                return
+            step += 1
+
+    t = threading.Thread(target=direct_saver)
+    t.start()
+    try:
+        for step in range(1, 20):
+            mgr.save_async(step, state, portable=True)
+        mgr.wait()
+    finally:
+        stop.set()
+        t.join()
+    assert not errors
+    for step in mgr.steps():
+        back, _ = mgr.restore(None, step=step)
+        np.testing.assert_array_equal(back["w"], state["w"])
+
+
+def test_stale_tmp_cleaned_at_discovery(tmp_path):
+    """The satellite fix: a crashed sibling's half-written tmp file is
+    removed when a new manager takes over the directory (a tmp written
+    AFTER construction — a live save — is untouched; see
+    test_checkpoint_crash_safety)."""
+    stale = tmp_path / "ckpt_0000000007.tmp"
+    stale.write_bytes(b"half-written garbage")
+    other = tmp_path / "unrelated.tmp"
+    other.write_bytes(b"not ours")
+    mgr = CheckpointManager(tmp_path)
+    assert not stale.exists()
+    assert other.exists()  # only our own naming is touched
+    assert mgr.steps() == []
+
+
+def test_save_async_waits_for_previous(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=10)
+    state = {"w": np.arange(64, dtype=np.float32)}
+    for step in (1, 2, 3):
+        mgr.save_async(step, state, portable=True)
+    mgr.wait()
+    assert mgr.steps() == [1, 2, 3]
+    # a second wait is a no-op, not an error
+    mgr.wait()
+
+
+def test_checkpoint_file_is_atomic_under_kill(tmp_path):
+    """Simulated death mid-save: the tmp never shadows a finished
+    checkpoint, and the latest complete file stays restorable."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": np.ones(4)}, portable=True)
+    # a save that died after tmp-write but before rename
+    (tmp_path / "ckpt_0000000002.tmp").write_bytes(b"RPCK\x00truncated")
+    assert mgr.latest_step() == 1
+    back, meta = mgr.restore(None)
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(back["w"], np.ones(4))

@@ -1,0 +1,379 @@
+"""Deterministic fault injection + the retry/quarantine survival layer.
+
+Unit coverage for ``engine.faults`` (plans, the injector, RetryingSource's
+retry/timeout/skip accounting, the quarantine dead-letter path) plus the
+engine-level contract: a run that survives injected faults finalizes to
+the same results as the fault-free run, with honest counters.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.window import WindowConfig
+from repro.engine import (
+    FaultCounters,
+    FaultPlan,
+    FaultSpec,
+    FaultTolerance,
+    PermanentSourceError,
+    PoisonedBatchError,
+    QuarantineSink,
+    RetryingSource,
+    SinkWriteError,
+    SourceTimeoutError,
+    StatsAccumulator,
+    TrafficEngine,
+    TransientSourceError,
+    WorkerKilled,
+    make_batch_validator,
+)
+from repro.engine.faults import FaultInjectingSource
+from repro.engine.source import IterableSource
+
+
+def _cfg(**kw):
+    kw.setdefault("window_log2", 6)
+    kw.setdefault("windows_per_batch", 4)
+    kw.setdefault("anonymization", "none")
+    return WindowConfig(**kw)
+
+
+def _items(n, windows=2, size=8):
+    """n distinct, valid-looking batches."""
+    return [np.full((windows, size, 2), i, np.uint32) for i in range(n)]
+
+
+def _src(items):
+    s = IterableSource(it=list(items))
+    s.packets_per_item = int(np.prod(items[0].shape[:-1])) if items else None
+    return s
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+def test_fault_plan_parse():
+    plan = FaultPlan.parse("transient:2@1, slow:0.05@2, poison@3, sink@2")
+    assert plan.specs == (
+        FaultSpec("transient", 1, count=2),
+        FaultSpec("slow", 2, delay_s=0.05),
+        FaultSpec("poison", 3),
+        FaultSpec("sink", 2),
+    )
+    assert plan.sink_batches() == {2}
+    assert all(s.kind != "sink" for s in plan.source_specs())
+    assert not FaultPlan.parse("")
+    with pytest.raises(ValueError, match="kind\\[:arg\\]@batch"):
+        FaultPlan.parse("transient:2")
+    with pytest.raises(ValueError, match="takes no argument"):
+        FaultPlan.parse("poison:3@1")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("meteor@1")
+
+
+def test_fault_plan_random_is_seed_keyed():
+    a = FaultPlan.random(7, 50)
+    b = FaultPlan.random(7, 50)
+    c = FaultPlan.random(8, 50)
+    assert a.specs == b.specs
+    assert a.specs != c.specs
+    assert a  # the default rates fire something over 50 batches
+    assert {s.kind for s in a.specs} <= {"transient", "slow", "poison"}
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.random(0, 10, rates={"meteor": 1.0})
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor", 0)
+    with pytest.raises(ValueError, match="batch"):
+        FaultSpec("transient", -1)
+    with pytest.raises(ValueError, match="count"):
+        FaultSpec("transient", 0, count=0)
+
+
+# ---------------------------------------------------------------------------
+# the injector
+# ---------------------------------------------------------------------------
+def test_injector_transient_then_same_item():
+    items = _items(3)
+    counters = FaultCounters()
+    inj = FaultInjectingSource(
+        _src(items), FaultPlan.parse("transient:2@1"), counters=counters)
+    it = iter(inj)
+    got = [next(it)]
+    for _ in range(2):
+        with pytest.raises(TransientSourceError):
+            next(it)
+    got.extend(it)
+    # the stream content is unchanged: retries re-attempt the same batch
+    for a, b in zip(got, items):
+        np.testing.assert_array_equal(a, b)
+    assert counters.snapshot()["faults_injected"] == 2
+
+
+def test_injector_permanent_raises_forever_counts_once():
+    counters = FaultCounters()
+    inj = FaultInjectingSource(
+        _src(_items(2)), FaultPlan.parse("permanent@0"), counters=counters)
+    it = iter(inj)
+    for _ in range(3):
+        with pytest.raises(PermanentSourceError):
+            next(it)
+    assert counters.snapshot()["faults_injected"] == 1
+
+
+def test_injector_kill_worker_raises_base_exception():
+    inj = FaultInjectingSource(_src(_items(2)),
+                               FaultPlan.parse("kill-worker@0"))
+    with pytest.raises(WorkerKilled):
+        next(iter(inj))
+
+
+def test_injector_skip_current_advances_past_the_fault():
+    items = _items(3)
+    inj = FaultInjectingSource(_src(items), FaultPlan.parse("permanent@1"))
+    it = iter(inj)
+    np.testing.assert_array_equal(next(it), items[0])
+    with pytest.raises(PermanentSourceError):
+        next(it)
+    assert it.skip_current()  # disposes of stream item 1
+    np.testing.assert_array_equal(next(it), items[2])
+    with pytest.raises(StopIteration):
+        next(it)
+    assert not it.skip_current()  # already exhausted
+
+
+def test_injector_poison_truncates_payload():
+    inj = FaultInjectingSource(_src(_items(2)), FaultPlan.parse("poison@1"))
+    good, bad = list(inj)
+    assert good.shape[-1] == 2 and bad.shape[-1] == 1
+
+
+# ---------------------------------------------------------------------------
+# RetryingSource
+# ---------------------------------------------------------------------------
+def test_retry_survives_transient_with_accounting():
+    items = _items(4)
+    counters = FaultCounters()
+    inj = FaultInjectingSource(
+        _src(items), FaultPlan.parse("transient:2@1,transient:1@3"),
+        counters=counters)
+    retrier = RetryingSource(inj, max_retries=3, counters=counters)
+    got = list(retrier)
+    for a, b in zip(got, items):
+        np.testing.assert_array_equal(a, b)
+    snap = counters.snapshot()
+    assert snap["retries"] == 3
+    assert snap["faults_injected"] == 3
+    assert snap["packets_dropped"] == 0
+    # the checkpoint cursor: delivered index -> stream items consumed
+    assert [retrier.delivered_pos(i) for i in range(4)] == [1, 2, 3, 4]
+
+
+def test_retry_exhaustion_raises_the_original_error():
+    inj = FaultInjectingSource(_src(_items(2)),
+                               FaultPlan.parse("transient:5@0"))
+    retrier = RetryingSource(inj, max_retries=2)
+    with pytest.raises(TransientSourceError):
+        list(retrier)
+    assert retrier.counters.snapshot()["retries"] == 2
+
+
+def test_retry_exhaustion_skip_drops_batch_with_accounting():
+    items = _items(4)
+    counters = FaultCounters()
+    inj = FaultInjectingSource(
+        _src(items), FaultPlan.parse("permanent@1"), counters=counters)
+    retrier = RetryingSource(inj, max_retries=2, on_exhausted="skip",
+                             counters=counters)
+    got = list(retrier)
+    assert len(got) == 3
+    np.testing.assert_array_equal(got[1], items[2])
+    snap = counters.snapshot()
+    assert snap["packets_dropped"] == items[0].shape[0] * items[0].shape[1]
+    # delivered items 0,1,2 consumed stream items 1, 3 (skip ate #1), 4
+    assert [retrier.delivered_pos(i) for i in range(3)] == [1, 3, 4]
+
+
+def test_retry_backoff_is_exponential():
+    sleeps = []
+    inj = FaultInjectingSource(_src(_items(1)),
+                               FaultPlan.parse("transient:3@0"))
+    retrier = RetryingSource(inj, max_retries=3, backoff_s=0.01,
+                             sleep=sleeps.append)
+    list(retrier)
+    assert sleeps == [0.01, 0.02, 0.04]
+
+
+def test_retry_does_not_swallow_worker_death():
+    inj = FaultInjectingSource(_src(_items(2)),
+                               FaultPlan.parse("kill-worker@0"))
+    retrier = RetryingSource(inj, max_retries=5, on_exhausted="skip")
+    with pytest.raises(WorkerKilled):
+        list(retrier)
+
+
+def test_retry_rejects_bad_config():
+    with pytest.raises(ValueError, match="on_exhausted"):
+        RetryingSource(_src(_items(1)), on_exhausted="explode")
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryingSource(_src(_items(1)), max_retries=-1)
+
+
+# ---------------------------------------------------------------------------
+# per-attempt timeouts (the repro-retry-puller thread)
+# ---------------------------------------------------------------------------
+def _slow_gen(items, slow_at, delay_s):
+    for i, item in enumerate(items):
+        if i == slow_at:
+            time.sleep(delay_s)
+        yield item
+
+
+def test_attempt_timeout_raises_after_retries():
+    items = _items(3)
+    retrier = RetryingSource(
+        IterableSource(it=_slow_gen(items, 1, 0.6)),
+        max_retries=1, attempt_timeout_s=0.05)
+    it = iter(retrier)
+    try:
+        np.testing.assert_array_equal(next(it), items[0])
+        with pytest.raises(SourceTimeoutError):
+            next(it)
+    finally:
+        retrier.close()  # joins repro-retry-puller (thread-leak fixture)
+
+
+def test_attempt_timeout_skip_abandons_the_hung_batch():
+    # the hang (0.5s) must clear inside the NEXT batch's attempt window
+    # (< 2 * 0.35s): the single puller thread serves pulls in order, so a
+    # still-wedged read would charge the following batches' attempts too
+    items = _items(3)
+    src = _src([])
+    src.it = _slow_gen(items, 1, 0.5)
+    src.packets_per_item = int(np.prod(items[0].shape[:-1]))
+    retrier = RetryingSource(src, max_retries=0, attempt_timeout_s=0.35,
+                             on_exhausted="skip")
+    try:
+        got = list(retrier)
+    finally:
+        retrier.close()
+    # the hung read was abandoned; its item (index 1) never delivered
+    assert len(got) == 2
+    np.testing.assert_array_equal(got[0], items[0])
+    np.testing.assert_array_equal(got[1], items[2])
+    assert retrier.counters.snapshot()["packets_dropped"] == (
+        items[0].shape[0] * items[0].shape[1])
+
+
+def test_timeout_mode_without_faults_is_transparent():
+    items = _items(3)
+    retrier = RetryingSource(_src(items), max_retries=2,
+                             attempt_timeout_s=5.0)
+    try:
+        got = list(retrier)
+    finally:
+        retrier.close()
+    for a, b in zip(got, items):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# validation + quarantine
+# ---------------------------------------------------------------------------
+def test_make_batch_validator_geometry():
+    cfg = _cfg()
+    v = make_batch_validator(cfg, "packets")
+    ok = np.zeros((4, 64, 2), np.uint32)
+    assert v(ok) is None
+    assert "shape" in v(ok[..., :-1])
+    assert "uint32" in v(ok.astype(np.int64))
+    vf = make_batch_validator(cfg, "flow")
+    assert vf(np.zeros((4, 64, 5), np.uint32)) is None
+    assert "shape" in vf(ok)
+
+
+def test_poisoned_batch_goes_to_quarantine():
+    items = _items(4, windows=4, size=64)
+    counters = FaultCounters()
+    inj = FaultInjectingSource(
+        _src(items), FaultPlan.parse("poison@2"), counters=counters)
+    q = QuarantineSink()
+    retrier = RetryingSource(
+        inj, validator=make_batch_validator(_cfg(), "packets"),
+        quarantine=q, counters=counters)
+    got = list(retrier)
+    assert len(got) == 3
+    res = q.finalize()
+    assert res["batches"] == 1
+    entry = res["entries"][0]
+    assert entry["index"] == 2 and "shape" in entry["reason"]
+    assert entry["batch"].shape == (4, 64, 1)  # the truncated payload kept
+    snap = counters.snapshot()
+    assert snap["batches_quarantined"] == 1
+    assert snap["packets_dropped"] == 4 * 64
+    # stream cursor covers the quarantined item: delivered 0,1,2 at 1,2,4
+    assert [retrier.delivered_pos(i) for i in range(3)] == [1, 2, 4]
+
+
+def test_poisoned_batch_without_quarantine_raises():
+    inj = FaultInjectingSource(_src(_items(2, windows=4, size=64)),
+                               FaultPlan.parse("poison@0"))
+    retrier = RetryingSource(
+        inj, validator=make_batch_validator(_cfg(), "packets"))
+    with pytest.raises(PoisonedBatchError, match="stream batch 0"):
+        list(retrier)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: survival == fault-free results, honest report
+# ---------------------------------------------------------------------------
+def _run_engine(ft=None, plan=None, sinks=None, **run_kw):
+    engine = TrafficEngine(
+        _cfg(), policy="blocking",
+        sinks=sinks if sinks is not None else [StatsAccumulator()])
+    if plan is not None:
+        ft = FaultTolerance(plan=plan)
+    rep = engine.run("uniform", n_batches=4, seed=11,
+                     fault_tolerance=ft, **run_kw)
+    return rep, engine.finalize()
+
+
+def test_engine_survives_transients_bit_identically():
+    rep_ref, ref = _run_engine()
+    rep, res = _run_engine(plan=FaultPlan.parse("transient:2@0,transient@2"))
+    assert rep.batches == rep_ref.batches == 4
+    assert rep.packets == rep_ref.packets
+    assert rep.retries == 3 and rep.faults_injected == 3
+    assert rep.packets_dropped == 0
+    a, b = ref["stats"], res["stats"]
+    for k in a:
+        if k == "per_batch":
+            continue
+        np.testing.assert_array_equal(a[k], b[k])
+    assert "faults 3" in rep.summary()
+
+
+def test_engine_quarantines_poison_and_reports_drop():
+    ft = FaultTolerance(plan=FaultPlan.parse("poison@1"), validate=True)
+    rep, res = _run_engine(ft=ft)
+    assert rep.batches == 3  # one batch quarantined, stream continued
+    assert rep.batches_quarantined == 1
+    assert rep.packets_dropped == 4 * 64
+    assert res["quarantine"]["batches"] == 1
+
+
+def test_engine_sink_failure_record_vs_raise():
+    plan = FaultPlan.parse("sink@1")
+    ft = FaultTolerance(plan=plan, sink_failures="record")
+    with pytest.warns(RuntimeWarning, match="sink 'stats' failed"):
+        rep, res = _run_engine(ft=ft)
+    assert rep.sink_write_failures == 1
+    assert rep.batches == 4  # the run itself is whole
+    assert res["stats"]["batches"] == 3  # the sink missed exactly one write
+
+    with pytest.raises(SinkWriteError):
+        _run_engine(ft=FaultTolerance(plan=plan))

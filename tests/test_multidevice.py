@@ -18,6 +18,10 @@ def _run(code: str):
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=900,
         env={"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             # pin the child to CPU: these tests are about the 8 forced
+             # host devices, and without the pin jax may pick a TPU
+             # plugin whose init wedges on boxes with no usable TPU
+             "JAX_PLATFORMS": "cpu",
              "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
         cwd=".",
     )

@@ -7,7 +7,7 @@ import time
 
 import pytest
 
-from repro.engine import BoundedPrefetcher
+from repro.engine import BoundedPrefetcher, WorkerDiedError, WorkerKilled
 
 
 def test_early_consumer_exit_close_joins_worker():
@@ -301,3 +301,73 @@ def test_produce_s_keeps_failed_transform_time():
         list(pf)
     assert pf.produce_s >= 0.08  # both the good and the failed transform
     assert not pf._thread.is_alive()
+
+
+# -- worker death: last rites, heartbeat eviction ---------------------------
+
+
+def test_worker_death_delivers_prefix_then_worker_died_error():
+    """A worker unwound by ``WorkerKilled`` (the injected-death path) holds
+    a reserved sequence number; last rites must record ``WorkerDiedError``
+    at that seq so the consumer drains the prefix and then raises instead
+    of parking forever on the gap."""
+
+    def lethal(x):
+        if x == 3:
+            raise WorkerKilled("chaos")
+        time.sleep(0.002 * (8 - x))
+        return x
+
+    pf = BoundedPrefetcher(iter(range(8)), depth=8, transform=lethal,
+                           workers=2)
+    out = []
+    with pytest.raises(WorkerDiedError, match="died while producing item"):
+        for x in pf:
+            out.append(x)
+    assert out == [0, 1, 2]
+    # the fallen worker's heartbeat host is marked dead, and health()
+    # reports it as an eviction before any straggle heuristics apply
+    fallen = [h for h in pf.monitor.hosts.values() if not h.alive]
+    assert len(fallen) == 1
+    decision = pf.health()
+    assert decision.action == "evict"
+    assert decision.hosts == (fallen[0].host_id,)
+    for t in pf._threads:
+        t.join(timeout=2.0)
+        assert not t.is_alive()
+
+
+def test_worker_death_in_source_pull_surfaces_too():
+    """``WorkerKilled`` raised inside the *source* (not the transform)
+    takes the same last-rites path: the reserved seq is recorded."""
+
+    def dying_source():
+        yield 0
+        yield 1
+        raise WorkerKilled("source-side chaos")
+
+    pf = BoundedPrefetcher(dying_source(), depth=2, workers=2)
+    out = []
+    with pytest.raises(WorkerDiedError, match="died while producing item 2"):
+        for x in pf:
+            out.append(x)
+    assert out == [0, 1]
+    assert pf.health().action == "evict"
+    for t in pf._threads:
+        t.join(timeout=2.0)
+        assert not t.is_alive()
+
+
+def test_surviving_workers_record_heartbeats():
+    """Every delivered item beats the delivering worker's heartbeat host:
+    after a clean run the monitor has seen every sequence number and
+    health() has no complaints."""
+    pf = BoundedPrefetcher(iter(range(10)), depth=4,
+                           transform=lambda x: x, workers=2)
+    assert list(pf) == list(range(10))
+    assert sum(len(h.step_times) for h in pf.monitor.hosts.values()) == 10
+    assert max(h.last_step for h in pf.monitor.hosts.values()) == 9
+    assert all(h.alive for h in pf.monitor.hosts.values())
+    assert pf.health().action == "proceed"
+    for t in pf._threads:
+        assert not t.is_alive()

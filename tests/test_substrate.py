@@ -215,6 +215,17 @@ def test_straggler_lifecycle():
     assert d2.action == "evict" and 2 in d2.hosts
 
 
+def test_never_beaten_host_can_die():
+    """A host that registers but never heartbeats counts its silence from
+    registration — it must not be immortal (the wedge-before-first-beat
+    failure mode)."""
+    mon = HeartbeatMonitor(2, dead_after_s=5.0, now=0.0)
+    mon.beat(0, 0, 1.0, now=3.0)
+    assert mon.dead(now=4.0) == []      # neither host past the deadline yet
+    assert mon.dead(now=6.0) == [1]     # host 1 silent since registration
+    assert mon.dead(now=9.0) == [0, 1]  # host 0's last beat now stale too
+
+
 def test_elastic_plans():
     assert plan_mesh(512) == ((2, 16, 16), ("pod", "data", "model"))
     assert plan_mesh(256) == ((16, 16), ("data", "model"))
