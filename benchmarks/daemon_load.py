@@ -1,0 +1,158 @@
+"""Daemon load test: sustained ingest pkt/s + query latency under load.
+
+Runs an ``AnalyticsDaemon`` in-process (TCP on an ephemeral port), drives
+it with one socket ingest client streaming synthetic batches, and — while
+ingest is in flight — hammers the roll-up query API from N concurrent
+query clients.  Rows (harness CSV format):
+
+  ``daemon_load_ingest``        — wall-per-batch over the socket ingest
+                                  path; derived carries sustained pkt/s
+  ``daemon_load_query_cN``      — per-query latency with N concurrent
+                                  query clients (mixed status/top_links/
+                                  top_talkers/fanout workload), derived
+                                  carries p50/p95 and queries/s
+
+``--quick`` keeps geometry CI-sized; the CI ``daemon`` job runs it as the
+short-burst driver in front of the SIGTERM shutdown check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.core.window import WindowConfig
+from repro.engine.source import DeviceSyntheticSource
+from repro.serve.client import DaemonClient, IngestClient
+from repro.serve.daemon import AnalyticsDaemon
+
+FULL = dict(window_log2=12, windows_per_batch=16, n_batches=48)
+QUICK = dict(window_log2=8, windows_per_batch=4, n_batches=12)
+
+
+def _batches(cfg: WindowConfig, n_batches: int) -> list[np.ndarray]:
+    return list(DeviceSyntheticSource(
+        kind="uniform", seed=0, n_batches=n_batches,
+        windows_per_batch=cfg.windows_per_batch,
+        window_size=cfg.window_size, placement="host",
+    ))
+
+
+def _query_worker(address: str, stop: threading.Event,
+                  latencies: list, lock: threading.Lock) -> None:
+    kinds = ("status", "top_links", "top_talkers", "fanout")
+    local: list[float] = []
+    with DaemonClient(address) as client:
+        i = 0
+        while not stop.is_set():
+            kind = kinds[i % len(kinds)]
+            t0 = time.perf_counter()
+            if kind == "status":
+                client.query(kind)
+            else:
+                client.query(kind, level=0, index=-1)
+            local.append(time.perf_counter() - t0)
+            i += 1
+    with lock:
+        latencies.extend(local)
+
+
+def run(window_log2: int, windows_per_batch: int, n_batches: int,
+        clients: tuple[int, ...] = (1, 4, 8)):
+    cfg = WindowConfig(window_log2=window_log2,
+                       windows_per_batch=windows_per_batch,
+                       anonymization="feistel")
+    batches = _batches(cfg, n_batches)
+    rows = []
+
+    # -- ingest throughput (no query load) ----------------------------------
+    daemon = AnalyticsDaemon(cfg, policy="blocking", rollup_levels=3,
+                             queue_depth=8)
+    address = daemon.bind("tcp://127.0.0.1:0")
+    daemon.start()
+    with IngestClient(address) as ingest, DaemonClient(address) as ctl:
+        ingest.send_batch(batches[0])  # absorb jit compile
+        ctl.wait_consumed(1, timeout=120.0)
+        t0 = time.perf_counter()
+        ingest.send_stream(batches[1:])
+        ingest.end()
+        ctl.wait_consumed(len(batches), timeout=120.0)
+        ingest_s = time.perf_counter() - t0
+        ctl.shutdown()
+    report = daemon.join()
+    daemon.finalize()
+    measured = len(batches) - 1
+    pkts = measured * cfg.window_size * cfg.windows_per_batch
+    rows.append((
+        "daemon_load_ingest",
+        ingest_s / max(measured, 1) * 1e6,
+        f"{pkts / ingest_s:,.0f}_pkt_per_s_{report.batches}_batches",
+    ))
+
+    # -- query latency under N concurrent clients ---------------------------
+    for n_clients in clients:
+        daemon = AnalyticsDaemon(cfg, policy="blocking", rollup_levels=3,
+                                 queue_depth=8)
+        address = daemon.bind("tcp://127.0.0.1:0")
+        daemon.start()
+        with IngestClient(address) as ingest, DaemonClient(address) as ctl:
+            # seed the hierarchy so queries have aggregates to read
+            warm = min(4, len(batches))
+            ingest.send_stream(batches[:warm])
+            ctl.wait_consumed(warm, timeout=120.0)
+
+            stop = threading.Event()
+            latencies: list[float] = []
+            lock = threading.Lock()
+            workers = [
+                threading.Thread(target=_query_worker,
+                                 args=(address, stop, latencies, lock))
+                for _ in range(n_clients)
+            ]
+            for w in workers:
+                w.start()
+            t0 = time.perf_counter()
+            ingest.send_stream(batches[warm:])
+            ingest.end()
+            ctl.wait_consumed(len(batches), timeout=120.0)
+            # keep querying ~0.2s past drain for a stable sample
+            time.sleep(0.2)
+            stop.set()
+            for w in workers:
+                w.join()
+            span = time.perf_counter() - t0
+            ctl.shutdown()
+        daemon.join()
+        daemon.finalize()
+        lat = np.sort(np.asarray(latencies)) * 1e6
+        p50 = float(lat[len(lat) // 2]) if len(lat) else 0.0
+        p95 = float(lat[int(len(lat) * 0.95)]) if len(lat) else 0.0
+        qps = len(lat) / span if span > 0 else 0.0
+        rows.append((
+            f"daemon_load_query_c{n_clients}",
+            float(lat.mean()) if len(lat) else 0.0,
+            f"p50_{p50:.0f}us_p95_{p95:.0f}us_{qps:,.0f}_q_per_s",
+        ))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized geometry + fewer client counts")
+    args = ap.parse_args(argv)
+    geom = QUICK if args.quick else FULL
+    clients = (1, 4) if args.quick else (1, 4, 8)
+    rows = run(geom["window_log2"], geom["windows_per_batch"],
+               geom["n_batches"], clients=clients)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

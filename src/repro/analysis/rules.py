@@ -578,13 +578,15 @@ class ThreadSharedStateRule(Rule):
     id = "thread-shared-state"
     doc = (
         "In the threaded engine modules (engine/prefetch.py, "
-        "engine/policies.py): a closure that runs on a worker thread "
+        "engine/policies.py, the serve/ daemon): a closure that runs on "
+        "a worker thread "
         "mutates an attribute the consumer thread also reads, outside a "
         "held lock. Wrap the write in `with <lock>:` — the GIL orders "
         "single bytecodes, not read-modify-write sequences like `+=`."
     )
     paths = ("src/repro/engine/prefetch.py",
-             "src/repro/engine/policies.py")
+             "src/repro/engine/policies.py",
+             "src/repro/serve")
 
     def check(self, tree, source, path):
         findings: list[Finding] = []
@@ -666,7 +668,7 @@ class SwallowedExceptionRule(Rule):
         "_record_failure, warnings.warn) or re-raised; a silent `except "
         "Exception: pass` turns a fault into a lie about coverage."
     )
-    paths = ("src/repro/engine",)
+    paths = ("src/repro/engine", "src/repro/serve")
 
     def check(self, tree, source, path):
         findings = []

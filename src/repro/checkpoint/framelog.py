@@ -1,0 +1,215 @@
+"""Length-prefixed frames of portable pytrees, over files and sockets.
+
+One wire shape for everything that leaves the process: serve-protocol
+messages, exporter records, and quarantine dead-letter entries are all
+``(kind, tree)`` frames where ``tree`` is encoded with the portable
+type-tagged pytree encoding from :mod:`repro.checkpoint.serialization`.
+
+Frame layout (file and socket identical)::
+
+    b"RPFR" | kind:u8 | length:u32be | payload[length]
+
+``FrameLog`` is the file-backed form: an append-only journal with an
+explicit byte cursor so crash/resume can truncate back to the last
+checkpointed offset and re-append deterministically (no duplicates, no
+clobbering — see QuarantineSink / ExporterSink).
+
+File objects opened here register with :func:`track_file` so the test
+suite's fd-leak fixture can assert every tracked handle is closed when
+a run (including a *failed* run) finishes.
+"""
+
+from __future__ import annotations
+
+import io
+import socket
+import struct
+import threading
+import weakref
+from pathlib import Path
+
+from .serialization import dumps_tree, loads_tree
+
+FRAME_MAGIC = b"RPFR"
+_HEADER = struct.Struct(">4sBI")  # magic, kind, payload length
+
+# Registry of live tracked file handles (test-suite fd hygiene). WeakSet:
+# a handle that is garbage-collected no longer counts as open, but the
+# fixture snapshots live handles so a leaked-and-still-referenced handle
+# (sink kept alive by a report/test local) is caught.
+_TRACKED: weakref.WeakSet = weakref.WeakSet()
+_TRACKED_LOCK = threading.Lock()
+
+
+def track_file(fh):
+    """Register a file object for the fd-leak fixture; returns it."""
+    with _TRACKED_LOCK:
+        _TRACKED.add(fh)
+    return fh
+
+
+def open_tracked_files() -> list:
+    """All tracked file objects that are still open."""
+    with _TRACKED_LOCK:
+        return [fh for fh in _TRACKED if not fh.closed]
+
+
+def pack_frame(kind: int, tree) -> bytes:
+    payload = dumps_tree(tree)
+    return _HEADER.pack(FRAME_MAGIC, kind, len(payload)) + payload
+
+
+def _read_exact(read, n: int) -> bytes | None:
+    """Read exactly n bytes via ``read`` callable; None on clean EOF at
+    offset 0 of the request, error on mid-frame EOF."""
+    buf = b""
+    while len(buf) < n:
+        chunk = read(n - len(buf))
+        if not chunk:
+            if not buf:
+                return None
+            raise EOFError(f"truncated frame: wanted {n} bytes, got {len(buf)}")
+        buf += chunk
+    return buf
+
+
+def read_frame(read) -> tuple[int, object] | None:
+    """Read one frame via a ``read(n) -> bytes`` callable (file.read or
+    socket-recv adapter). Returns (kind, tree) or None on clean EOF."""
+    header = _read_exact(read, _HEADER.size)
+    if header is None:
+        return None
+    magic, kind, length = _HEADER.unpack(header)
+    if magic != FRAME_MAGIC:
+        raise ValueError(f"bad frame magic {magic!r}")
+    payload = _read_exact(read, length)
+    if payload is None:
+        raise EOFError("truncated frame payload")
+    return kind, loads_tree(payload)
+
+
+class FrameLog:
+    """Append-only file of frames with an explicit byte cursor.
+
+    - ``append`` is the only write path; the handle is opened lazily in
+      append mode, so constructing a FrameLog never clobbers an
+      existing file.
+    - ``tell()`` reports the durable end offset — checkpoint it, then on
+      resume call ``truncate_to(saved)`` to discard frames written after
+      the checkpoint; replay re-appends them bit-identically.
+    - ``close()`` is idempotent and safe from failure paths.
+    """
+
+    def __init__(self, path: str | Path):
+        self.path = Path(path)
+        self._fh = None
+        self._pos = self.path.stat().st_size if self.path.exists() else 0
+        self._lock = threading.Lock()
+
+    def _ensure_open(self):
+        if self._fh is None or self._fh.closed:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._fh = track_file(open(self.path, "ab"))
+            self._pos = self._fh.tell()
+
+    def tell(self) -> int:
+        with self._lock:
+            return self._pos
+
+    def append(self, kind: int, tree) -> int:
+        """Append one frame; returns the new end offset."""
+        frame = pack_frame(kind, tree)
+        with self._lock:
+            self._ensure_open()
+            self._fh.write(frame)
+            self._fh.flush()
+            self._pos += len(frame)
+            return self._pos
+
+    def truncate_to(self, offset: int) -> None:
+        """Drop everything after ``offset`` (a value from ``tell()``).
+
+        Resume path: frames appended after the restored checkpoint was
+        taken are discarded so the replayed batches re-append without
+        duplicates. Never extends the file; raises if the file is
+        shorter than the cursor (the journal was clobbered externally).
+        """
+        with self._lock:
+            if self._fh is not None and not self._fh.closed:
+                self._fh.close()
+                self._fh = None
+            size = self.path.stat().st_size if self.path.exists() else 0
+            if size < offset:
+                raise ValueError(
+                    f"frame log {self.path} is {size} bytes, shorter than "
+                    f"resume cursor {offset}: refusing to resume against a "
+                    "truncated/clobbered journal"
+                )
+            if size > offset:
+                with open(self.path, "r+b") as fh:
+                    fh.truncate(offset)
+            self._pos = offset
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None and not self._fh.closed:
+                self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    @staticmethod
+    def read_all(path: str | Path) -> list[tuple[int, object]]:
+        """Decode every frame in a log file."""
+        out = []
+        p = Path(path)
+        if not p.exists():
+            return out
+        with open(p, "rb") as fh:
+            while True:
+                frame = read_frame(fh.read)
+                if frame is None:
+                    return out
+                out.append(frame)
+
+
+class SocketFrameIO:
+    """Frame read/write over a connected socket."""
+
+    def __init__(self, sock):
+        self.sock = sock
+        self._rfile = sock.makefile("rb")
+
+    def send(self, kind: int, tree) -> None:
+        self.sock.sendall(pack_frame(kind, tree))
+
+    def recv(self) -> tuple[int, object] | None:
+        return read_frame(self._rfile.read)
+
+    def close(self) -> None:
+        # shutdown() before close(): a plain close does not wake another
+        # thread blocked in recv() on this socket, SHUT_RDWR does
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:  # repro-lint: disable=swallowed-exception
+            pass  # already torn down by the peer; closing is best-effort
+        try:
+            self._rfile.close()
+        except OSError:  # repro-lint: disable=swallowed-exception
+            pass
+        try:
+            self.sock.close()
+        except OSError:  # repro-lint: disable=swallowed-exception
+            pass
+
+
+def frames_to_buffer(frames) -> bytes:
+    """Pack (kind, tree) pairs into one bytes blob (tests/tools)."""
+    buf = io.BytesIO()
+    for kind, tree in frames:
+        buf.write(pack_frame(kind, tree))
+    return buf.getvalue()

@@ -27,6 +27,8 @@ _CKPT_RE = re.compile(r"ckpt_(\d+)\.rpck$")
 
 class CheckpointManager:
     def __init__(self, directory: str | Path, keep: int = 3):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
@@ -34,7 +36,14 @@ class CheckpointManager:
         # gc), and callers that already hold it (none in-repo, but external
         # code following the old save_async pattern) must not deadlock.
         self._lock = threading.RLock()
+        # Serializes the save_async/wait handoff: without it, two threads
+        # calling save_async concurrently could both join the old worker,
+        # then overwrite _pending with each other's thread — the loser's
+        # writer would never be joined (leaked repro-* thread) and its
+        # failure never re-raised.
+        self._async_lock = threading.Lock()
         self._pending: threading.Thread | None = None
+        self._pending_error: BaseException | None = None
         self._clean_stale_tmp()
 
     def _clean_stale_tmp(self) -> None:
@@ -92,18 +101,35 @@ class CheckpointManager:
         host_state = jax.tree.map(
             lambda x: jax.device_get(x) if hasattr(x, "device") else x, state
         )
-        self.wait()  # one in flight at a time
 
         def work():
-            self.save(step, host_state, meta=meta, portable=portable)
+            try:
+                self.save(step, host_state, meta=meta, portable=portable)
+            except BaseException as exc:  # noqa: BLE001 - re-raised at wait()
+                self._pending_error = exc
 
-        self._pending = threading.Thread(target=work, daemon=True)
-        self._pending.start()
+        with self._async_lock:
+            self._wait_pending()  # one in flight at a time; raises prior error
+            self._pending = threading.Thread(
+                target=work, daemon=True, name=f"repro-ckpt-writer-{step}"
+            )
+            self._pending.start()
 
     def wait(self) -> None:
+        """Join the in-flight async save, re-raising its exception if it
+        failed — a daemon that never observes a failed save would happily
+        run forever with no durable checkpoints."""
+        with self._async_lock:
+            self._wait_pending()
+
+    def _wait_pending(self) -> None:
+        # caller holds _async_lock
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        err, self._pending_error = self._pending_error, None
+        if err is not None:
+            raise err
 
     # -- restore ---------------------------------------------------------------
     def restore(self, like: Any, step: int | None = None):

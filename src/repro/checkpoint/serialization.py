@@ -105,6 +105,21 @@ def _decode_node(rec: dict):
     raise ValueError(f"unknown portable node tag {tag!r}")
 
 
+def dumps_tree(tree: Any) -> bytes:
+    """Portable pytree -> bytes (self-describing, no template needed).
+
+    The wire form of the ``portable=True`` checkpoint encoding, shared by
+    the serve protocol frames and the dead-letter/exporter frame logs —
+    one encoding for everything that leaves the process.
+    """
+    return msgpack.packb(_encode_node(tree), use_bin_type=True)
+
+
+def loads_tree(data: bytes) -> Any:
+    """Inverse of ``dumps_tree``."""
+    return _decode_node(msgpack.unpackb(data, raw=False))
+
+
 def save_pytree(tree: Any, path: str | Path, *, compress: bool = True,
                 meta: dict | None = None, portable: bool = False) -> None:
     if portable:

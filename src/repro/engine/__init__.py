@@ -25,6 +25,10 @@ Source -> Stage graph -> Sink, under a pluggable execution policy:
   crash-consistent, bit-identical resume (DESIGN.md "Fault tolerance &
   resume").
 
+The always-on service layer (``repro.serve``) wraps a ``TrafficEngine``
+in a socket daemon: streaming ingest, roll-up retention, flagged-window
+export, and a concurrent query API (DESIGN.md "Always-on service").
+
 See DESIGN.md at the repo root for the architecture; ``core.stream`` and
 ``data.pipeline`` are compatibility shims over this package.
 """

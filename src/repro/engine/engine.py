@@ -107,6 +107,8 @@ class TrafficEngine:
         self._ckpt_prior_counters: dict = {}
         self._ckpt_meta: dict = {}
         self._ckpt_written = 0
+        self._ckpt_last_step = -1
+        self._last_index = -1
 
     def make_source(self, spec="uniform", *, n_batches: int = 8,
                     seed: int = 0) -> Source:
@@ -206,6 +208,8 @@ class TrafficEngine:
                        else type(source).__name__),
         }
         self._ckpt_written = 0
+        self._ckpt_last_step = -1
+        self._last_index = -1
         if self._process_fn is None:
             self._process_fn = self.policy.build_process_fn(
                 self.graph, self.cfg, workload=self.workload
@@ -218,6 +222,13 @@ class TrafficEngine:
                 consume=self._dispatch,
                 keep_results=keep_results,
             )
+        except BaseException:
+            # Failure path (source error, WorkerKilled, sink-write
+            # failure): release every sink's OS resources so a crashed
+            # run leaks no fds.  Success paths leave sinks open —
+            # finalize() still needs them (and closes its own).
+            self._close_sinks()
+            raise
         finally:
             closer = getattr(wrapped, "close", None)
             if closer is not None:
@@ -249,7 +260,27 @@ class TrafficEngine:
         """Collect every sink's result, keyed by sink name."""
         return {s.name: s.finalize() for s in self.sinks}
 
+    @property
+    def batches_consumed(self) -> int:
+        """Measured batches dispatched so far, resume chain included."""
+        return self._ckpt_measured_base + self._last_index + 1
+
+    def _close_sinks(self) -> None:
+        for sink in self._active_sinks:
+            try:
+                sink.close()
+            except Exception as e:  # noqa: BLE001
+                warnings.warn(
+                    f"sink {sink.name!r} failed to close: {e!r}",
+                    RuntimeWarning, stacklevel=2,
+                )
+
+    def close(self) -> None:
+        """Release every sink's OS resources without finalizing."""
+        self._close_sinks()
+
     def _dispatch(self, index: int, outputs) -> None:
+        self._last_index = index
         if isinstance(outputs, dict) and "merge_overflow" in outputs:
             self._overflow += int(np.asarray(outputs["merge_overflow"]))
         for sink in self._active_sinks:
@@ -279,12 +310,7 @@ class TrafficEngine:
         + warmup + skipped + quarantined) up to this batch — taken from the
         retry layer when one is present, since only it knows about skips.
         """
-        if self._retrier is not None:
-            stream_rel = self._retrier.delivered_pos(
-                self._ckpt_warmup + index
-            )
-        else:
-            stream_rel = self._ckpt_warmup + index + 1
+        stream_rel = self._stream_rel(index)
         state = {
             "batches_done": int(measured_done),
             "stream_pos": int(self._ckpt_stream_base + stream_rel),
@@ -296,6 +322,32 @@ class TrafficEngine:
         self._ckpt_mgr.save(measured_done, state, meta=self._ckpt_meta,
                             portable=True)
         self._ckpt_written += 1
+        self._ckpt_last_step = measured_done
+
+    def _stream_rel(self, index: int) -> int:
+        """Stream items this run has disposed of by batch ``index``."""
+        if index < 0:
+            return self._ckpt_warmup
+        if self._retrier is not None:
+            return self._retrier.delivered_pos(self._ckpt_warmup + index)
+        return self._ckpt_warmup + index + 1
+
+    def checkpoint_now(self) -> int | None:
+        """Write a checkpoint at the current drain position.
+
+        The daemon's clean-shutdown hook: after ``run`` returns (or at a
+        quiesce point), persist exactly what has been consumed so the
+        next start can ``resume=True`` from it.  Returns the checkpoint
+        step, or None when checkpointing is not configured or the
+        current position was already checkpointed by the periodic path.
+        """
+        if self._ckpt_mgr is None:
+            return None
+        measured_done = self._ckpt_measured_base + self._last_index + 1
+        if measured_done == self._ckpt_last_step:
+            return None
+        self._save_checkpoint(self._last_index, measured_done)
+        return measured_done
 
     def _cumulative_counters(self) -> dict:
         """Fault counters across the whole resume chain (prior + this run).

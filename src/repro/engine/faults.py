@@ -42,6 +42,7 @@ import random
 import threading
 import time
 import warnings
+from pathlib import Path
 from typing import Callable, Iterable
 
 import numpy as np
@@ -390,9 +391,25 @@ class QuarantineSink(Sink):
     name = "quarantine"
     requires: tuple[str, ...] = ()
 
-    def __init__(self, keep_payload: bool = True):
+    #: frame kind tag for dead-letter log entries
+    FRAME_KIND = 0x51  # 'Q'
+
+    def __init__(self, keep_payload: bool = True,
+                 path: str | Path | None = None):
         self.keep_payload = keep_payload
+        self.path = Path(path) if path is not None else None
         self.entries: list[dict] = []
+        self._log = None
+
+    def _ensure_log(self):
+        if self._log is None and self.path is not None:
+            from repro.checkpoint.framelog import FrameLog
+
+            # FrameLog appends; an existing dead-letter file from a prior
+            # run is never clobbered — resume truncates to the checkpoint
+            # cursor instead (load_state_dict).
+            self._log = FrameLog(self.path)
+        return self._log
 
     def quarantine(self, index: int, item, reason: str) -> None:
         rec: dict = {"index": int(index), "reason": str(reason)}
@@ -401,19 +418,43 @@ class QuarantineSink(Sink):
 
             rec["batch"] = np.asarray(jax.device_get(item))
         self.entries.append(rec)
+        log = self._ensure_log()
+        if log is not None:
+            log.append(self.FRAME_KIND, rec)
 
     def consume(self, index: int, outputs: dict) -> None:
         # not fed by the stage graph; entries arrive via quarantine()
         return None
 
     def finalize(self) -> dict:
-        return {"batches": len(self.entries), "entries": list(self.entries)}
+        self.close()
+        out = {"batches": len(self.entries), "entries": list(self.entries)}
+        if self.path is not None:
+            out["path"] = str(self.path)
+        return out
+
+    def close(self) -> None:
+        if self._log is not None:
+            self._log.close()
 
     def state_dict(self) -> dict:
-        return {"entries": list(self.entries)}
+        state = {"entries": list(self.entries)}
+        if self.path is not None:
+            # Byte cursor into the dead-letter log at checkpoint time:
+            # everything at or before it is durably accounted for by this
+            # checkpoint; everything after it belongs to batches the
+            # resumed run will replay (and re-quarantine identically).
+            log = self._ensure_log()
+            state["log_pos"] = int(log.tell())
+        return state
 
     def load_state_dict(self, state: dict) -> None:
         self.entries = list(state["entries"])
+        if self.path is not None and "log_pos" in state:
+            from repro.checkpoint.framelog import FrameLog
+
+            self._log = FrameLog(self.path)
+            self._log.truncate_to(int(state["log_pos"]))
 
 
 class _AttemptTimeout(Exception):
@@ -800,6 +841,8 @@ class FaultTolerance:
     on_exhausted: str = "raise"
     validate: bool = False
     quarantine: QuarantineSink | None = None
+    quarantine_path: str | Path | None = None  # dead-letter file for the
+    # auto-created quarantine sink (ignored when ``quarantine`` is given)
     sink_failures: str = "raise"  # "raise" | "record"
     counters: FaultCounters = dataclasses.field(default_factory=FaultCounters)
 
@@ -809,8 +852,12 @@ class FaultTolerance:
                 f"sink_failures must be 'raise' or 'record', "
                 f"got {self.sink_failures!r}"
             )
+        if self.quarantine_path is not None:
+            # a dead-letter file is pointless without the validation pass
+            # that feeds it
+            self.validate = True
         if self.validate and self.quarantine is None:
-            self.quarantine = QuarantineSink()
+            self.quarantine = QuarantineSink(path=self.quarantine_path)
 
     def wrap_source(self, source, *, cfg=None,
                     workload: str = "packets") -> RetryingSource:

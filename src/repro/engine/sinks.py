@@ -39,6 +39,17 @@ class Sink:
     def finalize(self) -> Any:
         return None
 
+    def close(self) -> None:
+        """Release OS resources (file handles, sockets). Idempotent.
+
+        The engine calls this on *every* exit from a run — including
+        failure paths (source error, ``WorkerKilled``, sink-write
+        failure) — so a crashed run leaks no fds.  ``finalize`` of a
+        file-backed sink should itself close, making a later ``close``
+        a no-op; ``close`` without ``finalize`` must still leave any
+        partially-written file in a readable state.
+        """
+
     # -- checkpointing -------------------------------------------------------
     # Engine checkpoints serialize every attached sink's state so a resumed
     # run finalizes to bit-identical results.  State must be host data
@@ -293,22 +304,78 @@ class PcapLiteWriterSink(Sink):
 
     def __post_init__(self):
         self.requires = (self.key,)
-        self._chunks: list[np.ndarray] = []
+        self._fh = None
+        self._count = 0
+
+    # Writes are incremental (a daemon's stream must not accumulate in
+    # memory): the file is opened lazily with a zero-count header, raw
+    # uint32 pairs stream in per batch, and close() back-patches the
+    # header count — so even a failure-path close leaves a readable,
+    # uncompressed capture of everything consumed so far.  If
+    # ``compress`` is set, finalize() rewrites the completed raw file
+    # as one compressed blob (compression is a finalize step, not a
+    # streaming one, so crash/resume can truncate to a byte cursor).
+
+    def _ensure_open(self):
+        if self._fh is None or self._fh.closed:
+            from repro.checkpoint.framelog import track_file
+
+            self._fh = track_file(open(self.path, "w+b"))
+            self._write_header()
+
+    def _write_header(self):
+        from repro.data.packets import MAGIC, VERSION
+        import struct
+
+        self._fh.seek(0)
+        self._fh.write(MAGIC + struct.pack("<HHQ", VERSION, 0, self._count))
 
     def consume(self, index: int, outputs: dict) -> None:
         buf = np.asarray(jax.device_get(outputs[self.key]))
-        pairs = buf.reshape(-1, buf.shape[-1])[:, :2]
-        self._chunks.append(np.ascontiguousarray(pairs, dtype=np.uint32))
+        pairs = np.ascontiguousarray(
+            buf.reshape(-1, buf.shape[-1])[:, :2], dtype=np.uint32
+        )
+        self._ensure_open()
+        self._fh.seek(0, 2)
+        self._fh.write(pairs.tobytes())
+        self._count += int(pairs.shape[0])
+
+    def close(self) -> None:
+        if self._fh is not None and not self._fh.closed:
+            self._write_header()
+            self._fh.close()
+        self._fh = None
 
     def finalize(self) -> dict:
-        pkts = (np.concatenate(self._chunks)
-                if self._chunks else np.zeros((0, 2), np.uint32))
-        PcapLite.write(self.path, pkts, compress=self.compress)
-        return {"path": str(self.path), "packets": int(pkts.shape[0])}
+        self._ensure_open()  # zero-batch runs still produce a valid file
+        self.close()
+        if self.compress:
+            PcapLite.write(self.path, PcapLite.read(self.path),
+                           compress=True)
+        return {"path": str(self.path), "packets": self._count}
 
     def state_dict(self) -> dict:
-        return {"chunks": list(self._chunks)}
+        if self._fh is not None and not self._fh.closed:
+            self._fh.flush()
+            offset = self._fh.seek(0, 2)
+        else:
+            offset = 0
+        return {"count": self._count, "offset": int(offset)}
 
     def load_state_dict(self, state: dict) -> None:
-        self._chunks = [np.asarray(c, dtype=np.uint32)
-                        for c in state["chunks"]]
+        from repro.checkpoint.framelog import track_file
+
+        self.close()
+        self._count = int(state["count"])
+        offset = int(state["offset"])
+        if offset == 0:
+            return
+        size = Path(self.path).stat().st_size if Path(self.path).exists() else 0
+        if size < offset:
+            raise ValueError(
+                f"pcap-lite output {self.path} is {size} bytes, shorter "
+                f"than the checkpoint cursor {offset}: cannot resume"
+            )
+        self._fh = track_file(open(self.path, "r+b"))
+        self._fh.truncate(offset)
+        self._fh.seek(offset)

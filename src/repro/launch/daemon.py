@@ -1,0 +1,162 @@
+"""Always-on analytics daemon launcher (``python -m repro.launch.daemon``).
+
+The long-running form of ``launch/ingest.py``: instead of draining a
+fixed source, ``--serve`` binds an ingest/query socket and the engine
+drains whatever clients stream at it, forever, until SIGTERM/SIGINT or
+a client's shutdown message — at which point it finishes everything
+already accepted, writes a final checkpoint, and exits cleanly.
+
+    python -m repro.launch.daemon --serve tcp://127.0.0.1:9321 \
+        --window-log2 10 --windows-per-batch 8 --policy async_pipelined \
+        --rollup-levels 4 --export flags.rpfr \
+        --checkpoint-dir ckpts --checkpoint-every 4 --resume
+
+On SIGTERM the drain contract is: stop accepting, process every batch
+already queued, flush a final checkpoint at the exact stream cursor,
+close every sink handle, exit 0.  Restarting with ``--resume`` while
+clients replay the stream from its beginning resumes bit-identically
+(the engine fast-forwards past everything the previous run consumed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import signal
+
+import numpy as np
+
+from repro.core.window import WindowConfig
+from repro.engine.faults import FaultPlan, FaultTolerance
+from repro.launch.ingest import GEOMETRY_DEFAULTS
+from repro.serve.daemon import AnalyticsDaemon
+
+
+def build_daemon(args) -> AnalyticsDaemon:
+    geom = GEOMETRY_DEFAULTS[args.workload]
+    cfg = WindowConfig(
+        window_log2=args.window_log2 or geom["window_log2"],
+        windows_per_batch=args.windows_per_batch
+        or geom["windows_per_batch"],
+        anonymization=args.anonymization,
+        build_kernel=args.build_kernel,
+    )
+    ft = None
+    if args.inject_faults or args.validate_batches or args.quarantine_file:
+        plan = (FaultPlan.parse(args.inject_faults)
+                if args.inject_faults else None)
+        ft = FaultTolerance(
+            plan=plan,
+            max_retries=args.max_retries,
+            on_exhausted=args.on_exhausted,
+            validate=args.validate_batches or bool(args.quarantine_file),
+            quarantine_path=args.quarantine_file,
+            sink_failures=args.sink_failures,
+        )
+    manager = None
+    if args.checkpoint_dir:
+        from repro.checkpoint.manager import CheckpointManager
+
+        manager = CheckpointManager(args.checkpoint_dir,
+                                    keep=args.keep_checkpoints)
+    return AnalyticsDaemon(
+        cfg,
+        workload=args.workload,
+        policy=args.policy,
+        rollup_levels=args.rollup_levels,
+        rollup_keep=args.rollup_keep,
+        export=args.export,
+        export_rule=args.export_rule,
+        export_threshold=args.export_threshold,
+        fault_tolerance=ft,
+        checkpoint_manager=manager,
+        checkpoint_every=args.checkpoint_every if manager else 0,
+        resume=args.resume,
+        queue_depth=args.queue_depth,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serve", required=True, metavar="ADDR",
+                    help="ingest/query address: tcp://host:port (port 0 = "
+                         "ephemeral) or unix:///path")
+    ap.add_argument("--workload", default="packets",
+                    choices=["packets", "flow"])
+    ap.add_argument("--policy", default="blocking")
+    ap.add_argument("--window-log2", type=int, default=None)
+    ap.add_argument("--windows-per-batch", type=int, default=None)
+    ap.add_argument("--anonymization", default="feistel",
+                    choices=["feistel", "cryptopan", "none"])
+    ap.add_argument("--build-kernel", action="store_true")
+    ap.add_argument("--queue-depth", type=int, default=8,
+                    help="ingest queue bound (backpressure depth)")
+    ap.add_argument("--rollup-levels", type=int, default=4,
+                    help="power-of-two roll-up hierarchy depth "
+                         "(0 disables the roll-up/query API)")
+    ap.add_argument("--rollup-keep", type=int, default=4,
+                    help="aggregates retained per roll-up level")
+    ap.add_argument("--export", default=None, metavar="DEST",
+                    help="ExporterSink destination for flagged windows: "
+                         "a file path or tcp://host:port / unix://path")
+    ap.add_argument("--export-rule", default="zscore",
+                    choices=["zscore", "count"])
+    ap.add_argument("--export-threshold", type=float, default=3.0)
+    ap.add_argument("--inject-faults", default=None, metavar="PLAN")
+    ap.add_argument("--max-retries", type=int, default=3)
+    ap.add_argument("--on-exhausted", default="raise",
+                    choices=["raise", "skip"])
+    ap.add_argument("--validate-batches", action="store_true")
+    ap.add_argument("--quarantine-file", default=None,
+                    help="dead-letter journal for quarantined batches "
+                         "(implies --validate-batches; append-safe across "
+                         "--resume)")
+    ap.add_argument("--sink-failures", default="raise",
+                    choices=["raise", "record"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=4)
+    ap.add_argument("--keep-checkpoints", type=int, default=3)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
+
+    daemon = build_daemon(args)
+    address = daemon.bind(args.serve)
+    # flush=True: subprocess drivers (tests, CI) block on this line to
+    # learn the resolved ephemeral port
+    print(f"serving on {address}", flush=True)
+
+    def _terminate(signum, frame):
+        daemon.shutdown()
+
+    signal.signal(signal.SIGTERM, _terminate)
+    signal.signal(signal.SIGINT, _terminate)
+
+    report = daemon.serve_forever()
+    results = daemon.finalize()
+    summary = {
+        "address": address,
+        "batches": report.batches,
+        "packets": report.packets,
+        "checkpoints_written": report.checkpoints_written,
+        "resumed_from": report.resumed_from,
+    }
+    stats = results.get("stats")
+    if isinstance(stats, dict):
+        scalars = {}
+        for k, v in stats.items():
+            if k == "per_batch":
+                continue
+            arr = np.asarray(v)
+            if arr.ndim == 0:
+                scalars[k] = int(arr)
+        summary["stats"] = scalars
+    if "exporter" in results:
+        summary["exported"] = results["exporter"]["exported"]
+    print(json.dumps(summary), flush=True)
+    return report
+
+
+if __name__ == "__main__":
+    main()

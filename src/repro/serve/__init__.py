@@ -1,0 +1,26 @@
+"""Always-on analytics service: engine daemon + ingest/query protocol.
+
+The run-to-drain batch engine (``repro.engine``) becomes a long-running
+collector: ``AnalyticsDaemon`` feeds a socket ingest stream through
+``TrafficEngine`` under any execution policy, retains hierarchical
+power-of-two roll-ups (``RollupSink``), ships flagged windows off-box
+(``ExporterSink``), and answers concurrent queries over the retained
+hierarchy — all while honoring ``FaultTolerance`` and checkpoint/resume.
+See DESIGN.md §"Always-on service".
+"""
+
+from repro.serve.client import DaemonClient, IngestClient, collect_exports
+from repro.serve.daemon import AnalyticsDaemon
+from repro.serve.exporter import ExporterSink
+from repro.serve.rollup import RollupSink
+from repro.serve.stream import StreamQueueSource
+
+__all__ = [
+    "AnalyticsDaemon",
+    "DaemonClient",
+    "ExporterSink",
+    "IngestClient",
+    "RollupSink",
+    "StreamQueueSource",
+    "collect_exports",
+]

@@ -1,0 +1,121 @@
+"""Client side of the serve protocol: ingest streams + queries.
+
+``IngestClient`` pushes batches (fire-and-forget; the daemon reports
+validation failures asynchronously and acknowledges ``end()`` with the
+count it accepted).  ``DaemonClient`` is the query/control plane — one
+connection per client, many clients per daemon.  Both are thin wrappers
+over the shared framelog wire format, so anything that speaks
+``RPFR`` frames (including a netcat-grade reimplementation) interops.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.checkpoint.framelog import FrameLog, SocketFrameIO
+from repro.serve import protocol
+
+
+class DaemonRequestError(RuntimeError):
+    """The daemon answered with MSG_ERROR."""
+
+
+class _Conn:
+    def __init__(self, address: str, timeout: float | None = 30.0):
+        self.address = address
+        self._io = SocketFrameIO(protocol.connect(address, timeout=timeout))
+
+    def close(self) -> None:
+        self._io.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _request(self, kind: int, tree) -> tuple[int, object]:
+        self._io.send(kind, tree)
+        reply = self._io.recv()
+        if reply is None:
+            raise ConnectionError(
+                f"daemon at {self.address} closed the connection"
+            )
+        rk, rtree = reply
+        if rk == protocol.MSG_ERROR:
+            raise DaemonRequestError(rtree.get("error", "unknown error"))
+        return rk, rtree
+
+
+class DaemonClient(_Conn):
+    """Query + control connection."""
+
+    def query(self, kind: str, **params) -> dict:
+        req = {"kind": kind}
+        req.update(params)
+        _, tree = self._request(protocol.MSG_QUERY, req)
+        return tree
+
+    def status(self) -> dict:
+        return self.query("status")
+
+    def wait_consumed(self, n: int, *, timeout: float = 30.0,
+                      poll_s: float = 0.02) -> dict:
+        """Poll status until the daemon has consumed >= n batches —
+        the barrier tests/CI use before asserting deterministic query
+        results."""
+        deadline = time.monotonic() + timeout
+        while True:
+            status = self.status()
+            if int(status["consumed"]) >= n:
+                return status
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"daemon consumed {status['consumed']}/{n} batches "
+                    f"within {timeout}s"
+                )
+            time.sleep(poll_s)
+
+    def shutdown(self) -> dict:
+        _, tree = self._request(protocol.MSG_SHUTDOWN, {})
+        return tree
+
+
+class IngestClient(_Conn):
+    """Streaming ingest connection."""
+
+    def __init__(self, address: str, timeout: float | None = 30.0):
+        super().__init__(address, timeout=timeout)
+        self.sent = 0
+
+    def send_batch(self, batch: np.ndarray) -> None:
+        self._io.send(protocol.MSG_INGEST,
+                      {"batch": np.ascontiguousarray(batch)})
+        self.sent += 1
+
+    def send_stream(self, batches) -> int:
+        for batch in batches:
+            self.send_batch(batch)
+        return self.sent
+
+    def end(self) -> dict:
+        """Flush the stream; returns the daemon's {"received": n} ack.
+
+        Raises ``DaemonRequestError`` carrying the daemon's first
+        buffered validation error, if any batch was rejected.
+        """
+        _, tree = self._request(protocol.MSG_INGEST_END, {})
+        if int(tree.get("received", -1)) != self.sent:
+            raise DaemonRequestError(
+                f"daemon accepted {tree.get('received')} of {self.sent} "
+                "batches (a batch failed validation; see daemon warnings)"
+            )
+        return tree
+
+
+def collect_exports(path) -> list[dict]:
+    """Decode an ExporterSink file destination into its records."""
+    return [tree for kind, tree in FrameLog.read_all(path)
+            if kind == protocol.MSG_EXPORT]

@@ -1,0 +1,344 @@
+"""AnalyticsDaemon: TrafficEngine as a long-running socket service.
+
+Lifecycle::
+
+    daemon = AnalyticsDaemon(cfg, policy="async_pipelined",
+                             rollup_levels=4, export="flags.rpfr",
+                             checkpoint_dir="ckpts", checkpoint_every=4)
+    addr = daemon.bind("tcp://127.0.0.1:0")
+    daemon.start()                  # engine drain loop + acceptor threads
+    ...                             # clients ingest / query via `addr`
+    daemon.shutdown()               # or a client sends MSG_SHUTDOWN / SIGTERM
+    report = daemon.join()          # EngineReport; final checkpoint written
+    results = daemon.finalize()     # sink results, handles closed
+
+Ingest handler threads push validated batches into a bounded
+``StreamQueueSource``; the engine's execution policy drains it exactly
+as it drains a batch source — same stage graph, same sinks, same
+accounting — which is why daemon-mode stats and retained matrices are
+bit-identical to a batch run over the same stream (the equivalence
+tests pin this over ``canonical_policies()``).  Shutdown closes the
+stream; the engine finishes everything already accepted, writes a final
+checkpoint (``TrafficEngine.checkpoint_now``), and a later start with
+``resume=True`` continues from the cursor while clients replay from
+stream start (``fast_forward`` skips what was already consumed).
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+
+from repro.core.window import WindowConfig
+from repro.data.flows import FLOW_WIDTH
+from repro.engine.engine import TrafficEngine
+from repro.engine.faults import FaultTolerance
+from repro.engine.sinks import Sink, StatsAccumulator
+from repro.engine.telemetry import EngineReport
+from repro.serve import protocol
+from repro.serve.exporter import ExporterSink
+from repro.serve.rollup import RollupSink
+from repro.serve.stream import StreamQueueSource
+
+
+class DaemonError(RuntimeError):
+    """A query/ingest request the daemon rejected."""
+
+
+class AnalyticsDaemon:
+    def __init__(
+        self,
+        cfg: WindowConfig,
+        *,
+        workload: str = "packets",
+        policy: str = "blocking",
+        sinks: list[Sink] | None = None,
+        rollup_levels: int = 0,
+        rollup_keep: int = 4,
+        export: str | None = None,
+        export_rule: str = "zscore",
+        export_threshold: float = 3.0,
+        fault_tolerance: FaultTolerance | None = None,
+        checkpoint_manager=None,
+        checkpoint_every: int = 0,
+        resume: bool = False,
+        queue_depth: int = 8,
+    ):
+        self.cfg = cfg
+        engine_sinks: list[Sink] = list(sinks) if sinks is not None else [
+            StatsAccumulator()
+        ]
+        self.rollup: RollupSink | None = None
+        if rollup_levels:
+            self.rollup = RollupSink(cfg, levels=rollup_levels,
+                                     keep_per_level=rollup_keep)
+            engine_sinks.append(self.rollup)
+        self.exporter: ExporterSink | None = None
+        if export:
+            self.exporter = ExporterSink(export, rule=export_rule,
+                                         threshold=export_threshold)
+            engine_sinks.append(self.exporter)
+        self.engine = TrafficEngine(cfg, workload=workload, policy=policy,
+                                    sinks=engine_sinks)
+        self.stream = StreamQueueSource(
+            window_size=cfg.window_size,
+            windows_per_batch=cfg.windows_per_batch,
+            maxsize=queue_depth,
+            record_width=FLOW_WIDTH if workload == "flow" else 2,
+        )
+        self._ft = fault_tolerance
+        self._ckpt_mgr = checkpoint_manager
+        self._ckpt_every = int(checkpoint_every)
+        self._resume = bool(resume)
+        if (self._ckpt_every or resume) and checkpoint_manager is None:
+            raise ValueError(
+                "checkpoint_every/resume require a checkpoint_manager"
+            )
+
+        self._lock = threading.Lock()
+        self._listener = None
+        self.address: str | None = None
+        self._threads: list[threading.Thread] = []
+        self._conns: list = []
+        self._engine_thread: threading.Thread | None = None
+        self._shutting_down = False
+        self.report: EngineReport | None = None
+        self._error: BaseException | None = None
+        self._dropped = 0
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def bind(self, address: str) -> str:
+        """Bind the ingest/query socket; returns the resolved address
+        (``tcp://host:0`` picks an ephemeral port)."""
+        self._listener, self.address = protocol.listen(address)
+        # poll-style accept: closing a listener from another thread does
+        # not reliably wake a blocked accept(), a timeout loop does
+        self._listener.settimeout(0.2)
+        return self.address
+
+    def start(self) -> None:
+        """Run acceptor + engine drain loop on background threads."""
+        if self._listener is None:
+            raise RuntimeError("call bind() before start()")
+        acceptor = threading.Thread(target=self._accept_loop, daemon=True,
+                                    name="repro-serve-accept")
+        self._threads.append(acceptor)
+        acceptor.start()
+        self._engine_thread = threading.Thread(
+            target=self._engine_loop, daemon=True, name="repro-serve-engine"
+        )
+        self._engine_thread.start()
+
+    def serve_forever(self) -> EngineReport:
+        """Blocking form of start()+join() (the CLI's main thread)."""
+        self.start()
+        return self.join()
+
+    def shutdown(self) -> None:
+        """Stop accepting, end the stream; the engine drains and exits."""
+        with self._lock:
+            if self._shutting_down:
+                return
+            self._shutting_down = True
+            listener, self._listener = self._listener, None
+            conns = list(self._conns)
+        if listener is not None:
+            try:
+                listener.close()
+            except OSError as e:
+                warnings.warn(f"listener close failed: {e!r}",
+                              RuntimeWarning, stacklevel=2)
+        # Closing client connections first stops new ingest racing the
+        # stream sentinel; anything already queued still drains.
+        for io in conns:
+            io.close()
+        self.stream.close()
+
+    def join(self, timeout: float | None = None) -> EngineReport:
+        """Wait for the engine drain loop; re-raises its failure."""
+        if self._engine_thread is None:
+            raise RuntimeError("daemon not started")
+        self._engine_thread.join(timeout)
+        if self._engine_thread.is_alive():
+            raise TimeoutError("daemon engine loop still running")
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
+            t.join(timeout=5.0)
+        if self._error is not None:
+            raise self._error
+        return self.report
+
+    def finalize(self) -> dict:
+        return self.engine.finalize()
+
+    # -- engine drain loop ---------------------------------------------------
+
+    def _engine_loop(self) -> None:
+        try:
+            report = self.engine.run(
+                self.stream,
+                warmup_items=0,
+                keep_results=False,
+                fault_tolerance=self._ft,
+                checkpoint_every=self._ckpt_every,
+                checkpoint_manager=self._ckpt_mgr,
+                resume=self._resume,
+            )
+            if self._ckpt_mgr is not None:
+                self.engine.checkpoint_now()
+                self._ckpt_mgr.wait()
+            dropped = self.stream.qsize()
+            with self._lock:
+                self.report = report
+                self._dropped = dropped
+            if dropped:
+                warnings.warn(
+                    f"{dropped} ingested batch(es) raced shutdown and were "
+                    "not processed (arrived after the stream closed); "
+                    "clients should replay from the checkpoint cursor",
+                    RuntimeWarning, stacklevel=2,
+                )
+        except BaseException as e:  # noqa: BLE001 - re-raised at join()
+            with self._lock:
+                self._error = e
+        finally:
+            # engine exit (clean or not) tears down the socket plane so
+            # handler threads unblock and join() completes
+            self.shutdown()
+
+    # -- socket plane --------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        from repro.checkpoint.framelog import SocketFrameIO
+
+        while True:
+            with self._lock:
+                listener = self._listener
+            if listener is None:
+                return
+            try:
+                conn, _ = listener.accept()
+            except TimeoutError:
+                continue  # poll interval expired; re-check for shutdown
+            except OSError:
+                # listener closed by shutdown(): the accept loop's normal
+                # exit path, not an error
+                return
+            conn.settimeout(None)  # handlers block on recv, no polling
+            io = SocketFrameIO(conn)
+            with self._lock:
+                if self._shutting_down:
+                    io.close()
+                    return
+                self._conns.append(io)
+                n = len(self._conns)
+                handler = threading.Thread(
+                    target=self._handle_conn, args=(io,), daemon=True,
+                    name=f"repro-serve-conn-{n}",
+                )
+                self._threads.append(handler)
+            handler.start()
+
+    def _handle_conn(self, io) -> None:
+        received = 0
+        try:
+            while True:
+                try:
+                    frame = io.recv()
+                except (OSError, EOFError, ValueError) as e:
+                    if not self._shutting_down:
+                        warnings.warn(
+                            f"client connection dropped: {e!r}",
+                            RuntimeWarning, stacklevel=2,
+                        )
+                    return
+                if frame is None:
+                    return
+                kind, tree = frame
+                if kind == protocol.MSG_INGEST:
+                    try:
+                        self.stream.put(tree["batch"])
+                        received += 1
+                    except (RuntimeError, ValueError, KeyError,
+                            TypeError) as e:
+                        io.send(protocol.MSG_ERROR, {"error": str(e)})
+                elif kind == protocol.MSG_INGEST_END:
+                    io.send(protocol.MSG_ACK, {"received": received})
+                elif kind == protocol.MSG_QUERY:
+                    self._answer_query(io, tree)
+                elif kind == protocol.MSG_SHUTDOWN:
+                    io.send(protocol.MSG_ACK, {"stopping": True})
+                    self.shutdown()
+                    return
+                else:
+                    io.send(protocol.MSG_ERROR,
+                            {"error": f"unknown message kind {kind:#x}"})
+        except OSError as e:
+            # peer vanished mid-reply; the daemon keeps serving others
+            if not self._shutting_down:
+                warnings.warn(f"client connection error: {e!r}",
+                              RuntimeWarning, stacklevel=2)
+        finally:
+            io.close()
+
+    def _answer_query(self, io, req) -> None:
+        try:
+            result = self.query(req)
+        except (DaemonError, ValueError, KeyError, TypeError) as e:
+            io.send(protocol.MSG_ERROR, {"error": str(e)})
+            return
+        io.send(protocol.MSG_RESULT, result)
+
+    # -- query API -----------------------------------------------------------
+
+    def query(self, req: dict) -> dict:
+        """Answer one query request (also callable in-process)."""
+        kind = req.get("kind")
+        if kind == "status":
+            return self._status()
+        if kind not in ("levels", "top_links", "top_talkers", "fanout",
+                        "stats", "diff"):
+            raise DaemonError(f"unknown query kind {kind!r}")
+        rollup = self.rollup
+        if rollup is None:
+            raise DaemonError(
+                f"query {kind!r} needs the roll-up hierarchy; start the "
+                "daemon with rollup_levels >= 1"
+            )
+        if kind == "levels":
+            return rollup.levels_summary()
+        if kind == "top_links":
+            return rollup.top_links(int(req.get("k", 10)),
+                                    level=int(req.get("level", 0)),
+                                    index=int(req.get("index", -1)))
+        if kind == "top_talkers":
+            return rollup.top_talkers(int(req.get("k", 10)),
+                                      level=int(req.get("level", 0)),
+                                      index=int(req.get("index", -1)))
+        if kind == "fanout":
+            return rollup.fanout(level=int(req.get("level", 0)),
+                                 index=int(req.get("index", -1)))
+        if kind == "stats":
+            return rollup.window_stats(level=int(req.get("level", 0)),
+                                       index=int(req.get("index", -1)))
+        if kind == "diff":
+            return rollup.diff(level=int(req.get("level", 0)),
+                               index_a=int(req.get("index_a", -1)),
+                               index_b=int(req.get("index_b", 0)))
+        raise DaemonError(f"unknown query kind {kind!r}")
+
+    def _status(self) -> dict:
+        out = {
+            "address": self.address or "",
+            "accepted": self.stream.accepted,
+            "queued": self.stream.qsize(),
+            "consumed": self.engine.batches_consumed,
+            "shutting_down": self._shutting_down,
+            "exported": self.exporter.exported if self.exporter else 0,
+            "dropped": self._dropped,
+        }
+        if self.rollup is not None:
+            out["rollup"] = self.rollup.status()
+        return out

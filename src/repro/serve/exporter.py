@@ -1,0 +1,194 @@
+"""ExporterSink: ship flagged windows off-box.
+
+The deployment papers' edge pattern ("GraphBLAS on the Edge",
+2203.13934): the collector keeps the full matrix stream local and
+exports only *flagged* windows — anomaly-scored or threshold-crossing —
+to a central destination.  Records are framelog frames (``MSG_EXPORT``)
+of portable pytrees, so the destination can be a file (append-only
+journal, crash/resume safe via byte cursor) or a socket
+(``tcp://host:port`` / ``unix://path``) speaking the same framing as the
+serve protocol.
+
+Flagging is *streaming and causal*, unlike ``AnomalySink``'s
+retrospective finalize-time z-score: each window's fan-out histogram is
+scored against the running mean/std of all windows seen before it
+(Welford), then folded in.  For a fixed stream the flag sequence is
+deterministic — which is what makes daemon-mode exports reproducible
+and checkpoint/resume exact.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.analytics import HIST_BINS
+from repro.engine.sinks import Sink
+from repro.serve import protocol
+
+
+class ExporterSink(Sink):
+    """Serialize flagged windows to a file or socket destination.
+
+    ``rule="zscore"`` flags a window when any histogram bin deviates
+    from the running mean by at least ``threshold`` standard deviations
+    (after ``min_windows`` windows of history); ``rule="count"`` flags a
+    batch when its heaviest link meets ``threshold`` packets.  Each
+    export record carries the batch index, flagged window offsets,
+    scores, and (optionally) the batch's merged matrix.
+    """
+
+    name = "exporter"
+    requires = ("matrix", "fanout_hist")
+
+    def __init__(self, destination: str, *, rule: str = "zscore",
+                 threshold: float = 3.0, min_windows: int = 8,
+                 keep_matrix: bool = True):
+        if rule not in ("zscore", "count"):
+            raise ValueError(f"rule must be 'zscore' or 'count', got {rule!r}")
+        self.destination = str(destination)
+        self.rule = rule
+        self.threshold = float(threshold)
+        self.min_windows = int(min_windows)
+        self.keep_matrix = keep_matrix
+        self._is_socket = self.destination.startswith(("tcp://", "unix://"))
+        self._log = None
+        self._sock_io = None
+        # Welford running stats over per-window fan-out histograms
+        self._count = 0
+        self._mean = np.zeros((HIST_BINS,), np.float64)
+        self._m2 = np.zeros((HIST_BINS,), np.float64)
+        self._batches = 0
+        self.exported = 0
+
+    # -- destination plumbing ------------------------------------------------
+
+    def _writer(self):
+        if self._is_socket:
+            if self._sock_io is None:
+                from repro.checkpoint.framelog import SocketFrameIO
+
+                self._sock_io = SocketFrameIO(
+                    protocol.connect(self.destination)
+                )
+            return self._sock_io
+        if self._log is None:
+            from repro.checkpoint.framelog import FrameLog
+
+            path = self.destination
+            if path.startswith("file://"):
+                path = path[len("file://"):]
+            self._log = FrameLog(path)
+        return self._log
+
+    def _emit(self, record: dict) -> None:
+        writer = self._writer()
+        if self._is_socket:
+            writer.send(protocol.MSG_EXPORT, record)
+        else:
+            writer.append(protocol.MSG_EXPORT, record)
+        self.exported += 1
+
+    def close(self) -> None:
+        if self._log is not None:
+            self._log.close()
+        if self._sock_io is not None:
+            self._sock_io.close()
+            self._sock_io = None
+
+    # -- flagging ------------------------------------------------------------
+
+    def _score_batch(self, hists: np.ndarray) -> tuple[list[int], list[float]]:
+        """Causal z-scores for each window row; updates running stats."""
+        flagged, scores = [], []
+        for w in range(hists.shape[0]):
+            h = hists[w].astype(np.float64)
+            if self._count >= self.min_windows:
+                std = np.sqrt(self._m2 / self._count)
+                # std floor of 1.0: these are count histograms, and a
+                # perfectly constant history (std == 0) must still flag a
+                # deviation — scored as raw packet counts
+                z = np.abs(h - self._mean) / np.maximum(std, 1.0)
+                score = float(z.max())
+                if score >= self.threshold:
+                    flagged.append(w)
+                    scores.append(score)
+            self._count += 1
+            delta = h - self._mean
+            self._mean += delta / self._count
+            self._m2 += delta * (h - self._mean)
+        return flagged, scores
+
+    def consume(self, index: int, outputs: dict) -> None:
+        import jax
+
+        batch_index = self._batches
+        self._batches += 1
+        hists = np.asarray(jax.device_get(outputs["fanout_hist"]))
+        if self.rule == "zscore":
+            flagged, scores = self._score_batch(hists)
+        else:
+            m = jax.device_get(outputs["matrix"])
+            nnz = int(np.asarray(m.nnz))
+            peak = int(np.asarray(m.vals)[:nnz].max()) if nnz else 0
+            flagged = list(range(hists.shape[0])) if (
+                peak >= self.threshold) else []
+            scores = [float(peak)] * len(flagged)
+        if not flagged:
+            return
+        record: dict = {
+            "batch": int(batch_index),
+            "rule": self.rule,
+            "threshold": self.threshold,
+            "windows": [int(w) for w in flagged],
+            "scores": [float(s) for s in scores],
+        }
+        if self.keep_matrix:
+            from repro.serve.rollup import _mat_to_state
+
+            record["matrix"] = _mat_to_state(outputs["matrix"])
+        self._emit(record)
+
+    def finalize(self) -> dict:
+        self.close()
+        return {
+            "destination": self.destination,
+            "rule": self.rule,
+            "threshold": self.threshold,
+            "batches": self._batches,
+            "exported": self.exported,
+        }
+
+    # -- checkpointing -------------------------------------------------------
+    # File destinations resume exactly-once: the byte cursor checkpointed
+    # here truncates the journal back to the durable prefix and replayed
+    # batches re-append bit-identically.  Socket destinations cannot be
+    # truncated, so a resumed run may re-send records for replayed batches
+    # (at-least-once) — the record's ``batch`` index makes the receiver's
+    # dedup trivial.
+
+    def state_dict(self) -> dict:
+        state = {
+            "count": self._count,
+            "mean": self._mean.copy(),
+            "m2": self._m2.copy(),
+            "batches": self._batches,
+            "exported": self.exported,
+        }
+        if not self._is_socket:
+            state["log_pos"] = int(self._writer().tell())
+        return state
+
+    def load_state_dict(self, state: dict) -> None:
+        self._count = int(state["count"])
+        self._mean = np.asarray(state["mean"], np.float64).copy()
+        self._m2 = np.asarray(state["m2"], np.float64).copy()
+        self._batches = int(state["batches"])
+        self.exported = int(state["exported"])
+        if not self._is_socket and "log_pos" in state:
+            from repro.checkpoint.framelog import FrameLog
+
+            path = self.destination
+            if path.startswith("file://"):
+                path = path[len("file://"):]
+            self._log = FrameLog(path)
+            self._log.truncate_to(int(state["log_pos"]))

@@ -1,0 +1,89 @@
+"""Serve-protocol message kinds + socket address helpers.
+
+Every message is one framelog frame (``RPFR`` magic, kind byte, u32
+payload length, portable-pytree payload — see
+:mod:`repro.checkpoint.framelog`), so the daemon socket protocol, the
+exporter's off-box stream, and the on-disk dead-letter/export journals
+all share one wire shape and one decoder.
+
+Addresses are ``tcp://host:port`` or ``unix:///path`` (a bare path is
+treated as a unix socket path).  ``tcp://host:0`` binds an ephemeral
+port; the daemon reports the resolved address after bind.
+"""
+
+from __future__ import annotations
+
+import socket
+from pathlib import Path
+
+# -- message kinds (frame kind byte) ----------------------------------------
+MSG_INGEST = 0x01       # client -> daemon: one batch {"batch": uint32 array}
+MSG_INGEST_END = 0x02   # client -> daemon: end of this client's stream
+MSG_ACK = 0x06          # daemon -> client: acknowledgement {"received": n}
+MSG_QUERY = 0x10        # client -> daemon: {"kind": ..., **params}
+MSG_RESULT = 0x11       # daemon -> client: query result tree
+MSG_EXPORT = 0x45       # exporter -> destination: one flagged-window record
+MSG_ERROR = 0x7E        # daemon -> client: {"error": str}
+MSG_SHUTDOWN = 0x7F     # client -> daemon: request drain + shutdown
+
+KIND_NAMES = {
+    MSG_INGEST: "ingest",
+    MSG_INGEST_END: "ingest_end",
+    MSG_ACK: "ack",
+    MSG_QUERY: "query",
+    MSG_RESULT: "result",
+    MSG_EXPORT: "export",
+    MSG_ERROR: "error",
+    MSG_SHUTDOWN: "shutdown",
+}
+
+
+def parse_address(address: str) -> tuple[str, object]:
+    """``tcp://host:port`` -> ("tcp", (host, port)); unix paths pass through."""
+    if address.startswith("tcp://"):
+        hostport = address[len("tcp://"):]
+        host, _, port = hostport.rpartition(":")
+        if not host or not port.isdigit():
+            raise ValueError(f"bad tcp address {address!r} "
+                             "(want tcp://host:port)")
+        return "tcp", (host, int(port))
+    if address.startswith("unix://"):
+        return "unix", address[len("unix://"):]
+    return "unix", address
+
+
+def format_address(family: str, addr) -> str:
+    if family == "tcp":
+        host, port = addr[0], addr[1]
+        return f"tcp://{host}:{port}"
+    return f"unix://{addr}"
+
+
+def listen(address: str, backlog: int = 32) -> tuple[socket.socket, str]:
+    """Bind + listen; returns (server socket, resolved address string)."""
+    family, addr = parse_address(address)
+    if family == "tcp":
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind(addr)
+        srv.listen(backlog)
+        return srv, format_address("tcp", srv.getsockname())
+    path = Path(addr)
+    if path.exists():
+        path.unlink()
+    srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    srv.bind(str(path))
+    srv.listen(backlog)
+    return srv, format_address("unix", str(path))
+
+
+def connect(address: str, timeout: float | None = None) -> socket.socket:
+    family, addr = parse_address(address)
+    if family == "tcp":
+        return socket.create_connection(addr, timeout=timeout)
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    if timeout is not None:
+        sock.settimeout(timeout)
+    sock.connect(str(addr))
+    sock.settimeout(None)
+    return sock

@@ -1,0 +1,276 @@
+"""RollupSink: hierarchical power-of-two aggregates of batch matrices.
+
+Level 0 retains per-batch merged matrices; level ``l`` retains exact
+sums of ``2^l`` consecutive batches, built with the same
+``ops.ewise_add`` merge primitive the in-batch window tree uses.  The
+maintenance scheme is a binary counter (LSM-style): each level holds at
+most one *pending* half-aggregate; when its sibling arrives the two
+merge into one level-``l+1`` aggregate and the carry propagates.  Every
+batch therefore costs amortized O(1) merges, and an aggregate over
+``[s, s + 2^l)`` is bit-identical to folding those batches' matrices
+pairwise — integer addition over disjoint batch spans is associative,
+so exactness is preserved as long as no merge overflows its capacity
+(overflow is counted and reported, never silent).
+
+Queries (top-k links/talkers, fan-out histogram, window stats, diffs
+between aggregates) run against host-retained matrices under the sink
+lock, so many concurrent daemon clients can read while the engine loop
+writes.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+import numpy as np
+
+from repro.core import analytics, ops, types
+from repro.core.hypersparse import HypersparseMatrix
+from repro.core.window import WindowConfig
+from repro.engine.sinks import Sink
+
+
+def _mat_to_state(m: HypersparseMatrix) -> dict:
+    h = jax.device_get(m)
+    return {
+        "rows": np.asarray(h.rows),
+        "cols": np.asarray(h.cols),
+        "vals": np.asarray(h.vals),
+        "nnz": np.asarray(h.nnz),
+        "nrows": int(h.nrows),
+        "ncols": int(h.ncols),
+    }
+
+
+def _mat_from_state(d: dict) -> HypersparseMatrix:
+    return HypersparseMatrix(
+        rows=d["rows"], cols=d["cols"], vals=d["vals"], nnz=d["nnz"],
+        nrows=int(d["nrows"]), ncols=int(d["ncols"]),
+    )
+
+
+def _entries(m: HypersparseMatrix, *, drop_zero: bool = False) -> dict:
+    """Valid (row, col, val) triples of a host matrix."""
+    h = jax.device_get(m)
+    rows = np.asarray(h.rows)
+    nnz = int(np.asarray(h.nnz))
+    rows, cols, vals = (rows[:nnz], np.asarray(h.cols)[:nnz],
+                        np.asarray(h.vals)[:nnz])
+    if drop_zero:
+        keep = vals != 0
+        rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    return {"rows": rows.astype(np.uint32), "cols": cols.astype(np.uint32),
+            "vals": vals, "nnz": int(rows.shape[0])}
+
+
+class RollupSink(Sink):
+    """Retain a multi-resolution hierarchy of exact batch-matrix sums."""
+
+    name = "rollup"
+    requires = ("matrix",)
+
+    def __init__(self, cfg: WindowConfig, *, levels: int = 4,
+                 keep_per_level: int = 4):
+        if levels < 1:
+            raise ValueError(f"levels must be >= 1, got {levels}")
+        self.cfg = cfg
+        self.levels = int(levels)
+        self.keep_per_level = int(keep_per_level)
+        self._lock = threading.RLock()
+        # completed aggregates, oldest first, ring-capped per level
+        self._completed: list[list[dict]] = [[] for _ in range(self.levels)]
+        # at most one pending half-aggregate per level (binary counter)
+        self._pending: list[dict | None] = [None] * self.levels
+        self._batches = 0
+        self._overflow = 0  # entries dropped by roll-up merges (not builds)
+
+    def _capacity(self, level: int, base_cap: int) -> int:
+        return int(min(base_cap << level, self.cfg.cap_max))
+
+    def consume(self, index: int, outputs: dict) -> None:
+        m = jax.device_get(outputs["matrix"])
+        with self._lock:
+            base_cap = int(np.asarray(m.rows).shape[0])
+            carry = {"start": self._batches, "span": 1, "matrix": m}
+            self._batches += 1
+            for level in range(self.levels):
+                done = self._completed[level]
+                done.append(carry)
+                if len(done) > self.keep_per_level:
+                    done.pop(0)
+                if level == self.levels - 1:
+                    break
+                pending = self._pending[level]
+                if pending is None:
+                    self._pending[level] = carry
+                    break
+                merged, ovf = ops.ewise_add(
+                    pending["matrix"], carry["matrix"], types.PLUS,
+                    out_capacity=self._capacity(level + 1, base_cap),
+                )
+                self._overflow += int(np.asarray(ovf))
+                self._pending[level] = None
+                carry = {
+                    "start": pending["start"],
+                    "span": pending["span"] + carry["span"],
+                    "matrix": jax.device_get(merged),
+                }
+
+    def finalize(self) -> dict:
+        with self._lock:
+            return self.status()
+
+    # -- query API ----------------------------------------------------------
+    # All queries return host trees (numpy arrays / python scalars) that
+    # round-trip the portable pytree encoding — directly servable as
+    # MSG_RESULT payloads.
+
+    def _get(self, level: int, index: int) -> dict:
+        if not 0 <= level < self.levels:
+            raise ValueError(
+                f"level {level} out of range [0, {self.levels})"
+            )
+        done = self._completed[level]
+        if not done:
+            raise ValueError(f"no completed aggregates at level {level}")
+        try:
+            return done[index]
+        except IndexError:
+            raise ValueError(
+                f"aggregate index {index} out of range for level {level} "
+                f"({len(done)} retained)"
+            ) from None
+
+    def status(self) -> dict:
+        with self._lock:
+            return {
+                "batches": self._batches,
+                "rollup_overflow": self._overflow,
+                "levels": [
+                    {
+                        "level": lvl,
+                        "span": 1 << lvl,
+                        "retained": len(done),
+                        "pending": self._pending[lvl] is not None
+                        if lvl < self.levels - 1 else False,
+                    }
+                    for lvl, done in enumerate(self._completed)
+                ],
+            }
+
+    def levels_summary(self) -> dict:
+        with self._lock:
+            return {
+                "levels": [
+                    [
+                        {"start": a["start"], "span": a["span"],
+                         "nnz": int(np.asarray(a["matrix"].nnz))}
+                        for a in done
+                    ]
+                    for done in self._completed
+                ]
+            }
+
+    def top_links(self, k: int = 10, *, level: int = 0,
+                  index: int = -1) -> dict:
+        with self._lock:
+            agg = self._get(level, index)
+            rows, cols, counts = jax.device_get(
+                analytics.top_k_heavy_hitters(agg["matrix"], int(k))
+            )
+        keep = np.asarray(counts) > 0
+        return {
+            "start": agg["start"], "span": agg["span"],
+            "rows": np.asarray(rows)[keep],
+            "cols": np.asarray(cols)[keep],
+            "counts": np.asarray(counts)[keep],
+        }
+
+    def top_talkers(self, k: int = 10, *, level: int = 0,
+                    index: int = -1) -> dict:
+        with self._lock:
+            agg = self._get(level, index)
+            sources, counts = jax.device_get(
+                analytics.top_k_sources(agg["matrix"], int(k))
+            )
+        keep = np.asarray(counts) > 0
+        return {
+            "start": agg["start"], "span": agg["span"],
+            "sources": np.asarray(sources)[keep],
+            "counts": np.asarray(counts)[keep],
+        }
+
+    def fanout(self, *, level: int = 0, index: int = -1) -> dict:
+        with self._lock:
+            agg = self._get(level, index)
+            hist = jax.device_get(analytics.src_fanout_hist(agg["matrix"]))
+        return {"start": agg["start"], "span": agg["span"],
+                "hist": np.asarray(hist)}
+
+    def window_stats(self, *, level: int = 0, index: int = -1) -> dict:
+        with self._lock:
+            agg = self._get(level, index)
+            stats = jax.device_get(analytics.window_stats(agg["matrix"]))
+        out = {k: np.asarray(v) for k, v in stats.items()}
+        out.update(start=agg["start"], span=agg["span"])
+        return out
+
+    def diff(self, *, level: int = 0, index_a: int = -1,
+             index_b: int = 0) -> dict:
+        """Entrywise A - B between two same-level aggregates (what changed
+        between two spans of the stream); zero-delta entries dropped."""
+        with self._lock:
+            a = self._get(level, index_a)
+            b = self._get(level, index_b)
+            neg_b = ops.apply(b["matrix"], types.AINV)
+            cap = int(np.asarray(a["matrix"].rows).shape[0]) + int(
+                np.asarray(b["matrix"].rows).shape[0]
+            )
+            delta, ovf = ops.ewise_add(
+                a["matrix"], neg_b, types.PLUS,
+                out_capacity=min(cap, self.cfg.cap_max * 2),
+            )
+        out = _entries(delta, drop_zero=True)
+        out.update(
+            a={"start": a["start"], "span": a["span"]},
+            b={"start": b["start"], "span": b["span"]},
+            overflow=int(np.asarray(ovf)),
+        )
+        return out
+
+    # -- checkpointing ------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        def enc(agg):
+            return {"start": int(agg["start"]), "span": int(agg["span"]),
+                    "matrix": _mat_to_state(agg["matrix"])}
+
+        with self._lock:
+            return {
+                "batches": self._batches,
+                "overflow": self._overflow,
+                "completed": [[enc(a) for a in done]
+                              for done in self._completed],
+                "pending": [enc(p) if p is not None else None
+                            for p in self._pending],
+            }
+
+    def load_state_dict(self, state: dict) -> None:
+        def dec(d):
+            return {"start": int(d["start"]), "span": int(d["span"]),
+                    "matrix": _mat_from_state(d["matrix"])}
+
+        completed = [[dec(a) for a in done] for done in state["completed"]]
+        pending = [dec(p) if p is not None else None
+                   for p in state["pending"]]
+        if len(completed) != self.levels or len(pending) != self.levels:
+            raise ValueError(
+                f"rollup checkpoint has {len(completed)} levels, "
+                f"sink configured with {self.levels}"
+            )
+        with self._lock:
+            self._batches = int(state["batches"])
+            self._overflow = int(state["overflow"])
+            self._completed = completed
+            self._pending = pending

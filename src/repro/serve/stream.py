@@ -1,0 +1,117 @@
+"""StreamQueueSource: the daemon's bridge from socket ingest to the engine.
+
+A bounded queue that *is* an engine ``Source``: ingest handler threads
+``put`` validated batches, the engine's policy loop iterates them off the
+other end.  The bound is the daemon's backpressure — when the engine
+falls behind, ``put`` blocks, the ingest thread stops reading its
+socket, and TCP flow control pushes back on the client.  ``close()``
+ends the stream (the engine's run drains what is queued and returns),
+which is how SIGTERM becomes a clean run-to-completion.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+import numpy as np
+
+from repro.engine.source import Source
+
+
+class StreamQueueSource(Source):
+    """Thread-safe bounded batch queue, iterable exactly once."""
+
+    def __init__(self, *, window_size: int, windows_per_batch: int,
+                 maxsize: int = 8, record_width: int = 2):
+        self.window_size = int(window_size)
+        self.windows_per_batch = int(windows_per_batch)
+        self.record_width = int(record_width)
+        self.packets_per_item = self.window_size * self.windows_per_batch
+        self._q: queue.Queue = queue.Queue(maxsize)
+        self._lock = threading.Lock()
+        self._closed = False
+        self._accepted = 0
+
+    @property
+    def batch_shape(self) -> tuple[int, int, int]:
+        return (self.windows_per_batch, self.window_size, self.record_width)
+
+    def validate(self, batch) -> np.ndarray:
+        """Coerce one ingest payload to the engine's batch shape/dtype."""
+        arr = np.asarray(batch)
+        if arr.dtype != np.uint32:
+            raise ValueError(f"ingest batch dtype must be uint32, "
+                             f"got {arr.dtype}")
+        want = self.batch_shape
+        if arr.ndim == 2 and arr.shape[1] == self.record_width:
+            if arr.shape[0] != want[0] * want[1]:
+                raise ValueError(
+                    f"flat ingest batch has {arr.shape[0]} records, "
+                    f"want {want[0] * want[1]}"
+                )
+            arr = arr.reshape(want)
+        if arr.shape != want:
+            raise ValueError(f"ingest batch shape {arr.shape} != {want}")
+        return np.ascontiguousarray(arr)
+
+    def put(self, batch, timeout: float | None = None) -> int:
+        """Enqueue one batch (blocking = backpressure); returns its
+        0-based stream position.
+
+        Blocks in short slices so a producer stuck behind a full queue
+        still observes ``close()`` promptly (raising instead of
+        deadlocking against an engine that already exited).
+        """
+        arr = self.validate(batch)
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while True:
+            with self._lock:
+                if self._closed:
+                    raise RuntimeError("stream is closed")
+            try:
+                self._q.put(arr, timeout=0.1)
+                break
+            except queue.Full:
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"ingest queue full for {timeout}s"
+                    ) from None
+        with self._lock:
+            pos = self._accepted
+            self._accepted += 1
+        return pos
+
+    def close(self) -> None:
+        """End the stream: the engine drains queued batches and returns.
+
+        Never blocks — the iterator polls, so a full queue with no
+        consumer (engine already crashed) cannot deadlock shutdown.
+        """
+        with self._lock:
+            self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    @property
+    def accepted(self) -> int:
+        with self._lock:
+            return self._accepted
+
+    def qsize(self) -> int:
+        return self._q.qsize()
+
+    def __iter__(self):
+        while True:
+            try:
+                item = self._q.get(timeout=0.1)
+            except queue.Empty:
+                if self.closed:
+                    return
+                continue
+            yield item

@@ -119,3 +119,27 @@ def _no_thread_leaks():
             f"test leaked {len(leaked)} thread(s): {names} — pipelines "
             f"must close their prefetchers (BoundedPrefetcher.close())"
         )
+
+
+# -- fd-leak sanitizer -------------------------------------------------------
+# Sibling of the thread-leak check, for file-backed sinks: every file handle
+# a repro sink/journal opens registers via checkpoint.framelog.track_file.
+# The engine contract (Sink.close) is that no handle survives a run — not
+# even a *failed* run — so any tracked handle still open after a test is a
+# leak at the offending test.
+
+
+@pytest.fixture(autouse=True)
+def _no_fd_leaks():
+    from repro.checkpoint.framelog import open_tracked_files
+
+    before = {id(fh) for fh in open_tracked_files()}
+    yield
+    leaked = [fh for fh in open_tracked_files() if id(fh) not in before]
+    if leaked:
+        names = ", ".join(getattr(fh, "name", "<unknown>") for fh in leaked)
+        pytest.fail(
+            f"test leaked {len(leaked)} open file handle(s): {names} — "
+            f"file-backed sinks must close on every engine exit path "
+            f"(Sink.close / finalize)"
+        )

@@ -376,3 +376,76 @@ def test_checkpoint_file_is_atomic_under_kill(tmp_path):
     back, meta = mgr.restore(None)
     assert meta["step"] == 1
     np.testing.assert_array_equal(back["w"], np.ones(4))
+
+
+def test_manager_rejects_keep_lt_1(tmp_path):
+    with pytest.raises(ValueError, match="keep must be >= 1"):
+        CheckpointManager(tmp_path, keep=0)
+
+
+def test_keep_pruning_is_exactly_keep_n(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    for step in range(1, 7):
+        mgr.save(step, {"w": np.arange(4)}, portable=True)
+    assert mgr.steps() == [4, 5, 6]
+    leftovers = [p.name for p in tmp_path.iterdir()
+                 if p.name.startswith("ckpt_")]
+    assert len(leftovers) == 3
+
+
+def test_wait_reraises_async_save_failure(tmp_path):
+    """The satellite fix: a failed background save must surface at
+    wait(), not vanish — a daemon that never observes the failure would
+    run forever with no durable checkpoints."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save_async(1, {2: "non-str key"}, portable=True)
+    with pytest.raises(TypeError, match="str dict keys"):
+        mgr.wait()
+    # the error is consumed: the manager keeps working afterwards
+    mgr.wait()
+    mgr.save_async(2, {"ok": np.ones(2)}, portable=True)
+    mgr.wait()
+    assert mgr.steps() == [2]
+
+
+def test_async_save_failure_surfaces_at_next_save_async(tmp_path):
+    """save_async's one-in-flight handoff waits on the previous worker,
+    so the previous failure re-raises there (and the new save is not
+    started on top of an unobserved error)."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save_async(1, {2: "non-str key"}, portable=True)
+    with pytest.raises(TypeError, match="str dict keys"):
+        mgr.save_async(2, {"ok": np.ones(2)}, portable=True)
+    mgr.wait()  # error already consumed
+    assert mgr.steps() == []
+
+
+def test_concurrent_save_async_leaks_no_writer_threads(tmp_path):
+    """The satellite fix: concurrent save_async callers serialize their
+    handoff — every writer thread is joined (the conftest thread-leak
+    sanitizer backstops this) and every completed save is restorable."""
+    mgr = CheckpointManager(tmp_path, keep=32)
+    state = {"w": np.arange(1024, dtype=np.float64)}
+    errors = []
+
+    def caller(step):
+        try:
+            mgr.save_async(step, state, portable=True)
+        except Exception as e:  # noqa: BLE001 - the assertion payload
+            errors.append(e)
+
+    threads = [threading.Thread(target=caller, args=(s,))
+               for s in range(1, 9)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    mgr.wait()
+    assert not errors
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("repro-ckpt-writer")]
+    steps = mgr.steps()
+    assert steps  # at least the last handoff's save landed
+    for step in steps:
+        back, _ = mgr.restore(None, step=step)
+        np.testing.assert_array_equal(back["w"], state["w"])

@@ -1,0 +1,137 @@
+"""launch.daemon CLI end-to-end: the CI ``daemon`` job's contract.
+
+Start the daemon as a real subprocess, stream batches at it over TCP,
+query the roll-up hierarchy, SIGTERM it, and assert the drain contract:
+exit 0, a final checkpoint at the exact stream cursor, and checkpointed
+stats bit-identical to a batch run over the same stream.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.window import WindowConfig
+from repro.engine import StatsAccumulator, TrafficEngine
+from repro.engine.source import DeviceSyntheticSource
+from repro.serve.client import DaemonClient, IngestClient
+
+W, WINDOW = 4, 64
+N_BATCHES = 6
+SEED = 23
+
+pytestmark = pytest.mark.slow  # subprocess + jax import per test
+
+
+def _batches(n=N_BATCHES, seed=SEED):
+    return list(DeviceSyntheticSource(
+        kind="uniform", seed=seed, n_batches=n, windows_per_batch=W,
+        window_size=WINDOW, placement="host"))
+
+
+def _spawn(tmp_path: Path, *extra: str) -> subprocess.Popen:
+    env = dict(os.environ)
+    root = Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = str(root / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [
+        sys.executable, "-m", "repro.launch.daemon",
+        "--serve", "tcp://127.0.0.1:0",
+        "--window-log2", "6", "--windows-per-batch", str(W),
+        "--anonymization", "none", "--queue-depth", "4",
+        *extra,
+    ]
+    return subprocess.Popen(cmd, env=env, cwd=str(root),
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+
+
+def _await_address(proc: subprocess.Popen) -> str:
+    # first stdout line is "serving on tcp://127.0.0.1:<port>" (flushed
+    # before the signal handlers are installed)
+    line = proc.stdout.readline()
+    if not line.startswith("serving on "):
+        out, err = proc.communicate(timeout=30)
+        raise AssertionError(
+            f"daemon failed to come up: {line!r}\n{out}\n{err}")
+    return line.split("serving on ", 1)[1].strip()
+
+
+def _finish(proc: subprocess.Popen, timeout=120.0):
+    try:
+        out, err = proc.communicate(timeout=timeout)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        out, err = proc.communicate()
+        raise AssertionError(
+            f"daemon did not exit after SIGTERM\n{out}\n{err}")
+    return out, err
+
+
+def test_daemon_cli_sigterm_drain_contract(tmp_path):
+    ckpt_dir = tmp_path / "ckpts"
+    proc = _spawn(tmp_path, "--rollup-levels", "3",
+                  "--checkpoint-dir", str(ckpt_dir),
+                  "--checkpoint-every", "2")
+    try:
+        address = _await_address(proc)
+        with IngestClient(address) as ing, DaemonClient(address) as ctl:
+            ing.send_stream(_batches())
+            assert ing.end()["received"] == N_BATCHES
+            ctl.wait_consumed(N_BATCHES, timeout=120.0)
+            levels = ctl.query("levels")["levels"]
+            assert levels[1][0]["span"] == 2
+            status = ctl.status()
+            assert status["consumed"] == N_BATCHES
+        proc.send_signal(signal.SIGTERM)
+        out, err = _finish(proc)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate()
+    assert proc.returncode == 0, f"exit {proc.returncode}\n{out}\n{err}"
+
+    summary = json.loads(out.strip().splitlines()[-1])
+    assert summary["batches"] == N_BATCHES
+    assert summary["packets"] == N_BATCHES * W * WINDOW
+    assert summary["checkpoints_written"] >= 1
+
+    # final checkpoint at the exact stream cursor...
+    mgr = CheckpointManager(ckpt_dir)
+    assert mgr.latest_step() == N_BATCHES
+    state, meta = mgr.restore(None)
+    assert state["batches_done"] == N_BATCHES
+    assert state["stream_pos"] == N_BATCHES
+    assert state["packets_done"] == N_BATCHES * W * WINDOW
+
+    # ...whose stats sink state is bit-identical to a batch run
+    cfg = WindowConfig(window_log2=6, windows_per_batch=W,
+                       anonymization="none")
+    ref = StatsAccumulator()
+    eng = TrafficEngine(cfg, policy="blocking", sinks=[ref])
+    eng.run(DeviceSyntheticSource(
+        kind="uniform", seed=SEED, n_batches=N_BATCHES,
+        windows_per_batch=W, window_size=WINDOW, placement="host"))
+    eng.finalize()
+    want = ref.state_dict()
+    got = state["sinks"]["stats"]
+    assert got["overflow"] == want["overflow"]
+    assert len(got["per_batch"]) == len(want["per_batch"])
+    for a, b in zip(want["per_batch"], got["per_batch"]):
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_array_equal(
+                np.asarray(a[k]), np.asarray(b[k]), err_msg=f"stats:{k}")
+
+
+def test_daemon_cli_rejects_resume_without_checkpoint_dir(tmp_path):
+    proc = _spawn(tmp_path, "--resume")
+    out, err = proc.communicate(timeout=60)
+    assert proc.returncode == 2
+    assert "--resume requires --checkpoint-dir" in err

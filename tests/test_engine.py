@@ -190,3 +190,86 @@ def test_sharded_rejects_matrix_sinks():
 def test_unknown_policy_rejected():
     with pytest.raises(ValueError, match="unknown policy"):
         TrafficEngine(_cfg(), policy="quantum")
+
+
+# -- EngineReport edges: zero-batch streams, multi-cycle resume folding -----
+def test_zero_batch_stream_report_is_zero_everywhere():
+    """A stream that ends before its first batch must report clean zeros
+    (no div-zero in the throughput property, a printable summary) for
+    every canonical policy."""
+    from repro.engine import canonical_policies
+
+    for policy_name in sorted(canonical_policies()):
+        eng = TrafficEngine(_cfg(), policy=policy_name,
+                            sinks=[StatsAccumulator()])
+        rep = eng.run("uniform", n_batches=0, seed=5)
+        assert rep.batches == 0 and rep.packets == 0, policy_name
+        assert rep.process_s == 0.0, policy_name
+        assert rep.overlap_s == 0.0, policy_name
+        assert rep.packets_per_second == 0.0, policy_name
+        assert "0 packets" in rep.summary(), policy_name
+        assert eng.finalize()["stats"] == {"batches": 0}
+
+
+def test_zero_batch_daemon_stream_report_is_zero():
+    """Same edge via the serve path: a daemon shut down before any ingest
+    reports zeros and still writes no bogus throughput."""
+    from repro.serve import AnalyticsDaemon
+
+    daemon = AnalyticsDaemon(_cfg(), policy="blocking", queue_depth=2)
+    daemon.bind("tcp://127.0.0.1:0")
+    daemon.start()
+    daemon.shutdown()
+    rep = daemon.join()
+    assert rep.batches == 0 and rep.packets == 0
+    assert rep.packets_per_second == 0.0
+    assert daemon.finalize()["stats"] == {"batches": 0}
+
+
+def test_report_folds_exactly_across_three_kill_resume_cycles(tmp_path):
+    """The resume chain's *logical* report: after N crash/resume cycles
+    the final report's batch/packet totals are exact (no double counting),
+    and every cycle's report keeps the async-policy time invariant
+    process_s + overlap_s <= elapsed_s."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.engine import FaultPlan, FaultTolerance
+
+    n_batches = 8
+    mgr = CheckpointManager(tmp_path / "ckpt", keep=10)
+    per_item = _cfg().window_size * _cfg().windows_per_batch
+
+    reports = []
+    cursors = []
+    for crash_at in (2, 4, 6):  # three killed cycles...
+        eng = TrafficEngine(_cfg(), policy="async_pipelined",
+                            sinks=[StatsAccumulator()])
+        with pytest.raises(RuntimeError, match="injected crash"):
+            eng.run("uniform", n_batches=n_batches, seed=5,
+                    fault_tolerance=FaultTolerance(
+                        plan=FaultPlan.parse(f"crash@{crash_at}")),
+                    checkpoint_every=1, checkpoint_manager=mgr,
+                    resume=True)
+        cursors.append(mgr.latest_step() or 0)
+
+    # the chain makes progress (each cycle's crash lands deeper into the
+    # stream than the last surviving checkpoint)
+    assert cursors == sorted(cursors)
+    assert cursors[-1] < n_batches
+
+    # ...then one clean run to the end of the stream
+    eng = TrafficEngine(_cfg(), policy="async_pipelined",
+                        sinks=[StatsAccumulator()])
+    rep = eng.run("uniform", n_batches=n_batches, seed=5,
+                  checkpoint_every=1, checkpoint_manager=mgr, resume=True)
+    reports.append(rep)
+    res = eng.finalize()
+
+    assert rep.resumed_from == cursors[-1]
+    assert rep.batches == n_batches  # folded totals, not this cycle's
+    assert rep.packets == n_batches * per_item
+    assert res["stats"]["batches"] == n_batches
+    # wall-clock sanity on the surviving report(s): exposed device wait
+    # plus hidden in-flight time can never exceed the cycle's wall time
+    for r in reports:
+        assert r.process_s + r.overlap_s <= r.elapsed_s + 1e-9
+        assert r.elapsed_s > 0.0

@@ -377,3 +377,97 @@ def test_engine_sink_failure_record_vs_raise():
 
     with pytest.raises(SinkWriteError):
         _run_engine(ft=FaultTolerance(plan=plan))
+
+
+# ---------------------------------------------------------------------------
+# dead-letter journal: append-safe across crash/resume (no duplicates)
+# ---------------------------------------------------------------------------
+def test_quarantine_dead_letter_file_round_trip(tmp_path):
+    path = tmp_path / "dead.rpfr"
+    ft = FaultTolerance(plan=FaultPlan.parse("poison@1"),
+                        quarantine_path=path)
+    assert ft.validate  # quarantine_path implies validation
+    engine = TrafficEngine(_cfg(), policy="blocking",
+                           sinks=[StatsAccumulator()])
+    rep = engine.run("uniform", n_batches=4, seed=11, fault_tolerance=ft)
+    res = engine.finalize()
+    assert rep.batches_quarantined == 1
+    assert res["quarantine"]["path"] == str(path)
+
+    from repro.checkpoint.framelog import FrameLog
+
+    records = FrameLog.read_all(path)
+    assert [k for k, _ in records] == [QuarantineSink.FRAME_KIND]
+    rec = records[0][1]
+    assert rec["index"] == 1 and "expected shape" in rec["reason"]
+    np.testing.assert_array_equal(
+        rec["batch"], np.asarray(res["quarantine"]["entries"][0]["batch"]))
+
+
+def test_quarantine_log_is_append_safe_across_resume(tmp_path):
+    """The satellite fix: a crash after the checkpoint that covered the
+    dead-letter record must not duplicate it on resume — the journal ends
+    bit-identical to an uncrashed run's."""
+    from repro.checkpoint.framelog import FrameLog
+    from repro.checkpoint.manager import CheckpointManager
+
+    # reference: no crash, one poisoned batch -> one journal record
+    ref_path = tmp_path / "ref.rpfr"
+    engine = TrafficEngine(_cfg(), policy="blocking",
+                           sinks=[StatsAccumulator()])
+    engine.run("uniform", n_batches=6, seed=11, fault_tolerance=FaultTolerance(
+        plan=FaultPlan.parse("poison@1"), quarantine_path=ref_path))
+    ref_res = engine.finalize()
+    ref_bytes = ref_path.read_bytes()
+
+    # crashed run: poison@1 then crash@4; checkpoint_every=1 means the
+    # record is covered by a checkpoint before the crash
+    path = tmp_path / "dead.rpfr"
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    engine = TrafficEngine(_cfg(), policy="blocking",
+                           sinks=[StatsAccumulator()])
+    with pytest.raises(RuntimeError, match="injected crash"):
+        engine.run("uniform", n_batches=6, seed=11,
+                   fault_tolerance=FaultTolerance(
+                       plan=FaultPlan.parse("poison@1,crash@4"),
+                       quarantine_path=path),
+                   checkpoint_every=1, checkpoint_manager=mgr)
+    assert len(FrameLog.read_all(path)) == 1  # journaled before the crash
+
+    engine = TrafficEngine(_cfg(), policy="blocking",
+                           sinks=[StatsAccumulator()])
+    rep = engine.run("uniform", n_batches=6, seed=11,
+                     fault_tolerance=FaultTolerance(quarantine_path=path),
+                     checkpoint_every=1, checkpoint_manager=mgr,
+                     resume=True)
+    res = engine.finalize()
+    assert rep.batches == 5 and rep.batches_quarantined == 1
+    assert path.read_bytes() == ref_bytes  # no duplicate, bit-identical
+    assert len(res["quarantine"]["entries"]) == 1
+    a, b = ref_res["stats"], res["stats"]
+    for k in a:
+        if k == "per_batch":
+            continue
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_quarantine_log_truncates_unckpted_tail_on_resume(tmp_path):
+    """Records journaled after the last checkpoint are truncated away at
+    resume and re-appended by the replay — still no duplicates."""
+    from repro.checkpoint.framelog import FrameLog
+
+    path = tmp_path / "dead.rpfr"
+    sink = QuarantineSink(path=path)
+    sink.quarantine(3, np.arange(4, dtype=np.uint32), "validation: bad")
+    covered = sink.state_dict()  # checkpoint covers exactly one record
+    sink.quarantine(5, np.arange(4, dtype=np.uint32), "validation: worse")
+    assert len(FrameLog.read_all(path)) == 2
+    sink.close()
+
+    resumed = QuarantineSink(path=path)
+    resumed.load_state_dict(covered)
+    assert len(FrameLog.read_all(path)) == 1  # tail truncated
+    resumed.quarantine(5, np.arange(4, dtype=np.uint32), "validation: worse")
+    recs = FrameLog.read_all(path)
+    assert [t["index"] for _, t in recs] == [3, 5]
+    resumed.close()

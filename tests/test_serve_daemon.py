@@ -1,0 +1,520 @@
+"""Always-on analytics daemon: protocol, roll-ups, exporter, equivalence.
+
+The tentpole invariant: for the same stream, daemon-mode stats and
+retained matrices are bit-identical to a batch run — over every
+canonical policy.  Plus the serve building blocks: frame protocol
+round-trips, the ingest stream's backpressure/close semantics, roll-up
+exactness against explicit pairwise merges, exporter flagging and its
+crash/resume-exact file journal, and daemon checkpoint/resume with a
+replaying client.
+"""
+
+import io as _io
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.framelog import FrameLog, pack_frame, read_frame
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import ops, types
+from repro.core.window import WindowConfig
+from repro.engine import (
+    MatrixRetention,
+    ShardedPolicy,
+    StatsAccumulator,
+    TrafficEngine,
+    canonical_policies,
+)
+from repro.engine.source import DeviceSyntheticSource
+from repro.serve import (
+    AnalyticsDaemon,
+    DaemonClient,
+    ExporterSink,
+    IngestClient,
+    RollupSink,
+    StreamQueueSource,
+    collect_exports,
+)
+from repro.serve import protocol
+from repro.serve.client import DaemonRequestError
+
+POLICY_NAMES = sorted(canonical_policies())
+N_BATCHES = 6
+SEED = 23
+W, WINDOW = 4, 64
+
+
+def _is_sharded(policy_name: str) -> bool:
+    return issubclass(canonical_policies()[policy_name], ShardedPolicy)
+
+
+def _cfg():
+    return WindowConfig(window_log2=6, windows_per_batch=W,
+                        anonymization="none")
+
+
+def _batches(n=N_BATCHES, seed=SEED):
+    return list(DeviceSyntheticSource(
+        kind="uniform", seed=seed, n_batches=n, windows_per_batch=W,
+        window_size=WINDOW, placement="host"))
+
+
+def _source(n=N_BATCHES, seed=SEED):
+    return DeviceSyntheticSource(kind="uniform", seed=seed, n_batches=n,
+                                 windows_per_batch=W, window_size=WINDOW,
+                                 placement="host")
+
+
+def _assert_stats_identical(ref, got, label=""):
+    assert ref.keys() == got.keys()
+    for k in ref:
+        if k == "per_batch":
+            assert len(ref[k]) == len(got[k]), label
+            for a, b in zip(ref[k], got[k]):
+                for kk in a:
+                    np.testing.assert_array_equal(
+                        np.asarray(a[kk]), np.asarray(b[kk]),
+                        err_msg=f"{label}:per_batch:{kk}")
+            continue
+        np.testing.assert_array_equal(np.asarray(ref[k]),
+                                      np.asarray(got[k]),
+                                      err_msg=f"{label}:{k}")
+
+
+def _assert_matrices_identical(ref, got):
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a.rows), np.asarray(b.rows))
+        np.testing.assert_array_equal(np.asarray(a.cols), np.asarray(b.cols))
+        np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
+        assert int(a.nnz) == int(b.nnz)
+
+
+# -- protocol / framing ------------------------------------------------------
+
+def test_frame_round_trip_bytes():
+    tree = {"batch": np.arange(12, dtype=np.uint32).reshape(3, 4),
+            "tag": "x", "n": 7, "nested": [1.5, (True, None)]}
+    blob = pack_frame(protocol.MSG_INGEST, tree)
+    kind, got = read_frame(_io.BytesIO(blob).read)
+    assert kind == protocol.MSG_INGEST
+    np.testing.assert_array_equal(got["batch"], tree["batch"])
+    assert got["tag"] == "x" and got["n"] == 7
+    assert got["nested"] == [1.5, (True, None)]
+    # clean EOF -> None; truncated frame -> error
+    assert read_frame(_io.BytesIO(b"").read) is None
+    with pytest.raises(EOFError):
+        read_frame(_io.BytesIO(blob[:-3]).read)
+
+
+def test_frame_log_append_cursor_truncate(tmp_path):
+    path = tmp_path / "log.rpfr"
+    log = FrameLog(path)
+    pos1 = log.append(1, {"i": 0})
+    pos2 = log.append(2, {"i": 1})
+    assert log.tell() == pos2 > pos1
+    log.append(3, {"i": 2})
+    log.truncate_to(pos2)  # drop the third frame
+    assert [k for k, _ in FrameLog.read_all(path)] == [1, 2]
+    # re-append after truncation is bit-stable
+    log.append(3, {"i": 2})
+    log.close()
+    assert [t["i"] for _, t in FrameLog.read_all(path)] == [0, 1, 2]
+    with pytest.raises(ValueError, match="shorter than"):
+        log.truncate_to(10**9)
+
+
+def test_parse_address_forms():
+    assert protocol.parse_address("tcp://127.0.0.1:9000") == \
+        ("tcp", ("127.0.0.1", 9000))
+    assert protocol.parse_address("unix:///tmp/s.sock") == \
+        ("unix", "/tmp/s.sock")
+    assert protocol.parse_address("/tmp/s.sock") == ("unix", "/tmp/s.sock")
+    with pytest.raises(ValueError):
+        protocol.parse_address("tcp://nohost")
+
+
+# -- StreamQueueSource -------------------------------------------------------
+
+def test_stream_queue_validates_and_orders():
+    s = StreamQueueSource(window_size=WINDOW, windows_per_batch=W,
+                          maxsize=8)
+    batches = _batches(3)
+    for b in batches:
+        s.put(b)
+    flat = batches[0].reshape(-1, 2)
+    s.put(flat)  # flat form reshapes
+    with pytest.raises(ValueError, match="dtype"):
+        s.put(batches[0].astype(np.int64))
+    with pytest.raises(ValueError, match="shape"):
+        s.put(batches[0][:, :-1])
+    s.close()
+    got = list(s)
+    assert len(got) == 4
+    np.testing.assert_array_equal(got[0], batches[0])
+    np.testing.assert_array_equal(got[3], batches[0])
+    with pytest.raises(RuntimeError, match="closed"):
+        s.put(batches[0])
+    assert s.accepted == 4
+
+
+def test_stream_queue_put_unblocks_on_close():
+    s = StreamQueueSource(window_size=WINDOW, windows_per_batch=W,
+                          maxsize=1)
+    b = _batches(1)[0]
+    s.put(b)  # queue now full
+    import threading
+
+    errs = []
+
+    def blocked_put():
+        try:
+            s.put(b)
+        except RuntimeError as e:
+            errs.append(e)
+
+    t = threading.Thread(target=blocked_put)
+    t.start()
+    s.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert errs and "closed" in str(errs[0])
+
+
+# -- daemon equivalence (the tentpole invariant) -----------------------------
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_daemon_equivalent_to_batch_run(policy_name):
+    """Socket-ingested daemon run == batch run, bit-identically, for
+    every canonical policy (stats always; retained matrices where the
+    policy can feed matrix sinks)."""
+    sharded = _is_sharded(policy_name)
+
+    ref_sinks = [StatsAccumulator()]
+    if not sharded:
+        ref_sinks.append(MatrixRetention(max_keep=8))
+    ref_eng = TrafficEngine(_cfg(), policy=policy_name, sinks=ref_sinks)
+    ref_eng.run(_source(), seed=SEED)
+    ref = ref_eng.finalize()
+
+    sinks = [StatsAccumulator()]
+    if not sharded:
+        sinks.append(MatrixRetention(max_keep=8))
+    daemon = AnalyticsDaemon(_cfg(), policy=policy_name, sinks=sinks,
+                             queue_depth=3)
+    addr = daemon.bind("tcp://127.0.0.1:0")
+    daemon.start()
+    with IngestClient(addr) as ing, DaemonClient(addr) as ctl:
+        ing.send_stream(_batches())
+        assert ing.end()["received"] == N_BATCHES
+        # no wait_consumed here: pipelined policies retire their last
+        # ring-depth batches only at stream end; shutdown's drain
+        # guarantees everything acked above is processed
+        ctl.shutdown()
+    report = daemon.join()
+    got = daemon.finalize()
+
+    assert report.batches == N_BATCHES
+    assert report.packets == N_BATCHES * W * WINDOW
+    _assert_stats_identical(ref["stats"], got["stats"], policy_name)
+    if not sharded:
+        _assert_matrices_identical(ref["matrices"], got["matrices"])
+
+
+def test_daemon_many_clients_interleave_queries():
+    """Concurrent query clients during ingest all get well-formed answers
+    (the load-test shape, minus the timing)."""
+    import threading
+
+    daemon = AnalyticsDaemon(_cfg(), policy="blocking", rollup_levels=3,
+                             queue_depth=3)
+    addr = daemon.bind("tcp://127.0.0.1:0")
+    daemon.start()
+    stop = threading.Event()
+    failures = []
+
+    def worker():
+        try:
+            with DaemonClient(addr) as c:
+                while not stop.is_set():
+                    st = c.status()
+                    assert st["accepted"] >= st["consumed"] >= 0
+        except Exception as e:  # noqa: BLE001 - reported via failures
+            failures.append(e)
+
+    workers = [threading.Thread(target=worker) for _ in range(4)]
+    for t in workers:
+        t.start()
+    with IngestClient(addr) as ing, DaemonClient(addr) as ctl:
+        ing.send_stream(_batches())
+        ing.end()
+        ctl.wait_consumed(N_BATCHES)
+        top = ctl.query("top_links", k=5, level=1)
+        assert top["span"] == 2 and len(top["counts"]) <= 5
+        stop.set()
+        for t in workers:  # quiesce before shutdown closes connections
+            t.join(timeout=10.0)
+        ctl.shutdown()
+    daemon.join()
+    daemon.finalize()
+    assert not failures
+    assert all(not t.is_alive() for t in workers)
+
+
+def test_daemon_rejects_bad_batches_and_unknown_queries():
+    daemon = AnalyticsDaemon(_cfg(), policy="blocking", queue_depth=3)
+    addr = daemon.bind("tcp://127.0.0.1:0")
+    daemon.start()
+    with IngestClient(addr) as ing, DaemonClient(addr) as ctl:
+        ing.send_batch(np.zeros((2, 2), np.uint32))  # wrong shape
+        ing.sent = 1
+        with pytest.raises(DaemonRequestError):
+            ing.end()
+        with pytest.raises(DaemonRequestError, match="unknown query"):
+            ctl.query("nope")
+        with pytest.raises(DaemonRequestError, match="rollup_levels"):
+            ctl.query("top_links")
+        ctl.shutdown()
+    daemon.join()
+    daemon.finalize()
+
+
+# -- roll-up hierarchy -------------------------------------------------------
+
+def test_rollup_aggregates_are_exact_pairwise_merges():
+    """A level-l aggregate is bit-identical to explicitly folding its
+    2^l batch matrices with ewise_add — exactness by associativity."""
+    cfg = _cfg()
+    retention = MatrixRetention(max_keep=8)
+    rollup = RollupSink(cfg, levels=3, keep_per_level=8)
+    eng = TrafficEngine(cfg, policy="blocking", sinks=[retention, rollup])
+    eng.run(_source(), seed=SEED)
+
+    mats = retention.matrices
+    lvl2 = rollup.levels_summary()["levels"][2]
+    assert lvl2 == [{"start": 0, "span": 4,
+                     "nnz": lvl2[0]["nnz"]}]
+    agg = rollup._completed[2][0]["matrix"]
+
+    expect = mats[0]
+    for m in mats[1:4]:
+        expect, ovf = ops.ewise_add(
+            expect, m, types.PLUS,
+            out_capacity=int(np.asarray(agg.rows).shape[0]))
+        assert int(np.asarray(ovf)) == 0
+    np.testing.assert_array_equal(np.asarray(agg.rows),
+                                  np.asarray(expect.rows))
+    np.testing.assert_array_equal(np.asarray(agg.cols),
+                                  np.asarray(expect.cols))
+    np.testing.assert_array_equal(np.asarray(agg.vals),
+                                  np.asarray(expect.vals))
+    assert int(np.asarray(agg.nnz)) == int(np.asarray(expect.nnz))
+    eng.finalize()
+
+
+def test_rollup_queries_and_diff():
+    cfg = _cfg()
+    rollup = RollupSink(cfg, levels=2, keep_per_level=4)
+    eng = TrafficEngine(cfg, policy="blocking", sinks=[rollup])
+    eng.run(_source(), seed=SEED)
+
+    status = rollup.status()
+    assert status["batches"] == N_BATCHES
+    top = rollup.top_links(5, level=0, index=-1)
+    assert len(top["counts"]) <= 5 and (top["counts"] > 0).all()
+    talkers = rollup.top_talkers(5, level=0, index=-1)
+    assert (talkers["counts"] > 0).all()
+    hist = rollup.fanout(level=0, index=-1)["hist"]
+    assert hist.sum() > 0
+    # diff of an aggregate with itself is empty
+    d = rollup.diff(level=0, index_a=-1, index_b=-1)
+    assert d["nnz"] == 0
+    # diff of different batches has signed deltas, zero entries dropped
+    d = rollup.diff(level=0, index_a=-1, index_b=0)
+    assert d["nnz"] > 0
+    assert (np.asarray(d["vals"]) != 0).all()
+    eng.finalize()
+
+
+def test_rollup_state_round_trip():
+    cfg = _cfg()
+    a = RollupSink(cfg, levels=3, keep_per_level=4)
+    eng = TrafficEngine(cfg, policy="blocking", sinks=[a])
+    eng.run(_source(), seed=SEED)
+    b = RollupSink(cfg, levels=3, keep_per_level=4)
+    b.load_state_dict(a.state_dict())
+    assert b.status() == a.status()
+    assert b.levels_summary() == a.levels_summary()
+    for lvl in range(3):
+        if a._completed[lvl]:
+            np.testing.assert_array_equal(
+                np.asarray(a._completed[lvl][-1]["matrix"].vals),
+                np.asarray(b._completed[lvl][-1]["matrix"].vals))
+    eng.finalize()
+
+
+# -- ExporterSink ------------------------------------------------------------
+
+def _planted_batches():
+    """Benign uniform batches, then one with a scan burst (single source
+    hitting many destinations) that must flag under the z-score rule."""
+    batches = _batches(6, seed=7)
+    hot = batches[-1].copy()
+    hot[0, :, 0] = 77                      # one source...
+    hot[0, :, 1] = np.arange(WINDOW)       # ...sweeping WINDOW destinations
+    batches[-1] = hot
+    return batches
+
+
+def test_exporter_flags_planted_scan_to_file(tmp_path):
+    dest = tmp_path / "flags.rpfr"
+    exporter = ExporterSink(str(dest), rule="zscore", threshold=3.0,
+                            min_windows=4)
+    eng = TrafficEngine(_cfg(), policy="blocking",
+                        sinks=[StatsAccumulator(), exporter])
+    from repro.engine import IterableSource
+
+    eng.run(IterableSource(it=_planted_batches()))
+    res = eng.finalize()["exporter"]
+    assert res["exported"] >= 1
+    records = collect_exports(dest)
+    assert len(records) == res["exported"]
+    rec = records[-1]
+    assert rec["batch"] == 5 and 0 in rec["windows"]
+    assert max(rec["scores"]) >= 3.0
+    assert rec["matrix"]["nrows"] > 0
+
+
+def test_exporter_benign_stream_exports_nothing(tmp_path):
+    dest = tmp_path / "flags.rpfr"
+    exporter = ExporterSink(str(dest), rule="zscore", threshold=4.0,
+                            min_windows=4)
+    eng = TrafficEngine(_cfg(), policy="blocking", sinks=[exporter])
+    eng.run(_source(), seed=SEED)
+    assert eng.finalize()["exporter"]["exported"] == 0
+    assert collect_exports(dest) == []
+
+
+def test_exporter_socket_destination(tmp_path):
+    """Exports stream as MSG_EXPORT frames to a socket receiver."""
+    import socket
+    import threading
+
+    from repro.checkpoint.framelog import SocketFrameIO
+
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    host, port = srv.getsockname()
+    received = []
+
+    def receiver():
+        conn, _ = srv.accept()
+        rio = SocketFrameIO(conn)
+        while True:
+            frame = rio.recv()
+            if frame is None:
+                break
+            received.append(frame)
+        rio.close()
+
+    t = threading.Thread(target=receiver)
+    t.start()
+    exporter = ExporterSink(f"tcp://{host}:{port}", rule="zscore",
+                            threshold=3.0, min_windows=4)
+    eng = TrafficEngine(_cfg(), policy="blocking", sinks=[exporter])
+    from repro.engine import IterableSource
+
+    eng.run(IterableSource(it=_planted_batches()))
+    res = eng.finalize()["exporter"]
+    t.join(timeout=5.0)
+    srv.close()
+    assert len(received) == res["exported"] >= 1
+    assert all(kind == protocol.MSG_EXPORT for kind, _ in received)
+
+
+def test_exporter_resume_does_not_duplicate_file_records(tmp_path):
+    """Crash after records were journaled past the checkpoint; resume must
+    truncate to the cursor and re-append bit-identically."""
+    from repro.engine import FaultPlan, FaultTolerance, IterableSource
+
+    dest = tmp_path / "flags.rpfr"
+    mgr = CheckpointManager(tmp_path / "ckpt")
+
+    def build():
+        exporter = ExporterSink(str(dest), rule="count", threshold=1,
+                                keep_matrix=False)
+        eng = TrafficEngine(_cfg(), policy="blocking",
+                            sinks=[StatsAccumulator(), exporter])
+        return eng
+
+    # every batch exports under rule=count threshold=1; crash at stream
+    # batch 4 (after the checkpoint at batch 2)
+    eng = build()
+    ft = FaultTolerance(plan=FaultPlan.parse("crash@4"))
+    with pytest.raises(RuntimeError, match="injected crash"):
+        eng.run(IterableSource(it=_batches(),
+                           packets_per_item=W * WINDOW),
+            fault_tolerance=ft,
+                checkpoint_every=2, checkpoint_manager=mgr)
+    journal_after_crash = collect_exports(dest)
+    assert len(journal_after_crash) == 4  # batches 0..3 exported pre-crash
+
+    eng2 = build()
+    eng2.run(IterableSource(it=_batches(),
+                            packets_per_item=W * WINDOW),
+             checkpoint_every=2,
+             checkpoint_manager=mgr, resume=True)
+    eng2.finalize()
+    records = collect_exports(dest)
+    assert [r["batch"] for r in records] == list(range(N_BATCHES))
+
+
+# -- daemon checkpoint / resume ----------------------------------------------
+
+def test_daemon_resume_with_replaying_client(tmp_path):
+    """Daemon shuts down mid-stream with a final checkpoint; a restarted
+    daemon with resume=True and a client replaying from stream start
+    finalizes bit-identically to an uninterrupted run."""
+    ref_eng = TrafficEngine(_cfg(), policy="blocking",
+                            sinks=[StatsAccumulator(),
+                                   MatrixRetention(max_keep=8)])
+    ref_eng.run(_source(), seed=SEED)
+    ref = ref_eng.finalize()
+
+    batches = _batches()
+
+    def build(resume):
+        return AnalyticsDaemon(
+            _cfg(), policy="blocking",
+            sinks=[StatsAccumulator(), MatrixRetention(max_keep=8)],
+            checkpoint_manager=CheckpointManager(tmp_path / "ckpt"),
+            checkpoint_every=2, resume=resume, queue_depth=3)
+
+    first = build(resume=False)
+    addr = first.bind("tcp://127.0.0.1:0")
+    first.start()
+    with IngestClient(addr) as ing, DaemonClient(addr) as ctl:
+        ing.send_stream(batches[:4])
+        ing.end()
+        ctl.wait_consumed(4)
+        ctl.shutdown()  # final checkpoint at batch 4
+    rep1 = first.join()
+    assert rep1.batches == 4
+    assert rep1.checkpoints_written >= 1
+    first.engine.close()  # daemon stopped without finalize: release sinks
+
+    second = build(resume=True)
+    addr = second.bind("tcp://127.0.0.1:0")
+    second.start()
+    with IngestClient(addr) as ing, DaemonClient(addr) as ctl:
+        ing.send_stream(batches)  # client replays from stream start
+        ing.end()
+        ctl.wait_consumed(N_BATCHES)
+        ctl.shutdown()
+    rep2 = second.join()
+    got = second.finalize()
+    assert rep2.resumed_from == 4
+    assert rep2.batches == N_BATCHES
+    _assert_stats_identical(ref["stats"], got["stats"], "daemon-resume")
+    _assert_matrices_identical(ref["matrices"], got["matrices"])
